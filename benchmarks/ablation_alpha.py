@@ -1,0 +1,32 @@
+"""Ablation: ODIN's exploration budget alpha (paper only reports 2 and 10)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_SETTINGS, simulate, synthetic_database
+from benchmarks.common import write_csv
+
+ALPHAS = (1, 2, 4, 10, 20)
+
+
+def run() -> list:
+    db = synthetic_database("vgg16")
+    rows = []
+    for alpha in ALPHAS:
+        lat, thr, tail, ser = [], [], [], []
+        for f, d in PAPER_SETTINGS:
+            for seed in (0, 1):
+                r = simulate(db, 4, scheduler="odin", alpha=alpha,
+                             num_queries=1000, freq_period=f, duration=d,
+                             seed=seed)
+                lat.append(r.latencies.mean())
+                thr.append(r.steady_throughput)
+                tail.append(r.tail_latency())
+                ser.append(r.rebalance_fraction)
+        rows.append({"alpha": alpha,
+                     "mean_latency": float(np.mean(lat)),
+                     "steady_throughput": float(np.mean(thr)),
+                     "p99_latency": float(np.mean(tail)),
+                     "serial_frac": float(np.mean(ser))})
+    write_csv("ablation_alpha", rows)
+    return rows

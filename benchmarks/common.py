@@ -1,0 +1,77 @@
+"""Shared benchmark utilities: databases, the 9 paper settings, CSV I/O."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, Iterable, List
+
+import numpy as np
+
+from repro.core import PAPER_SETTINGS, simulate, synthetic_database
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/benchmarks")
+
+# Paper evaluation constants (§4.1/§4.2)
+MODELS = ("vgg16", "resnet50")
+NUM_EPS = 4
+NUM_QUERIES = int(os.environ.get("REPRO_QUERIES", "2000"))
+SEEDS = (0, 1, 2)
+
+SCHEDULERS = {
+    "odin_a10": dict(scheduler="odin", alpha=10),
+    "odin_a2": dict(scheduler="odin", alpha=2),
+    "lls": dict(scheduler="lls"),
+}
+
+
+def db_for(model: str):
+    return synthetic_database(model, seed=0)
+
+
+def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
+               settings: Iterable = PAPER_SETTINGS,
+               num_eps: int = NUM_EPS,
+               num_queries: int = NUM_QUERIES) -> List[dict]:
+    """One row per (scheduler, freq, dur, seed) with summary metrics."""
+    db = db_for(model)
+    rows = []
+    for name, kw in schedulers.items():
+        for freq, dur in settings:
+            for seed in SEEDS:
+                t0 = time.perf_counter()
+                r = simulate(db, num_eps, num_queries=num_queries,
+                             freq_period=freq, duration=dur, seed=seed, **kw)
+                rows.append({
+                    "model": model, "scheduler": name,
+                    "freq": freq, "dur": dur, "seed": seed,
+                    "mean_latency": r.latencies.mean(),
+                    "p50_latency": float(np.percentile(r.latencies, 50)),
+                    "p99_latency": r.tail_latency(99),
+                    "mean_throughput": r.throughputs.mean(),
+                    "steady_throughput": r.steady_throughput,
+                    "peak_throughput": r.peak_throughput,
+                    "rebalances": r.num_rebalances,
+                    "serial_frac": r.rebalance_fraction,
+                    "mean_mitigation": (np.mean(r.mitigation_lengths)
+                                        if r.mitigation_lengths else 0.0),
+                    "sim_wall_s": time.perf_counter() - t0,
+                })
+    return rows
+
+
+def write_csv(name: str, rows: List[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def agg(rows: List[dict], key: str, **filters) -> float:
+    sel = [r[key] for r in rows
+           if all(r[k] == v for k, v in filters.items())]
+    return float(np.mean(sel)) if sel else float("nan")

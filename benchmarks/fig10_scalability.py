@@ -1,0 +1,30 @@
+"""Fig. 10: scalability — ResNet152 (52 residual-block units), 4..52 EPs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulate, synthetic_database
+from benchmarks.common import write_csv
+
+EP_COUNTS = (4, 8, 13, 26, 52)
+
+
+def run() -> list:
+    db = synthetic_database("resnet152")
+    rows = []
+    for n in EP_COUNTS:
+        for seed in (0, 1):
+            r = simulate(db, n, scheduler="odin", alpha=10,
+                         num_queries=1000, freq_period=10, duration=10,
+                         seed=seed)
+            rows.append({
+                "num_eps": n, "seed": seed,
+                "mean_latency": r.latencies.mean(),
+                "p99_latency": r.tail_latency(99),
+                "mean_throughput": r.throughputs.mean(),
+                "peak_throughput": r.peak_throughput,
+                "throughput_frac_of_peak":
+                    r.throughputs.mean() / r.peak_throughput,
+            })
+    write_csv("fig10_scalability", rows)
+    return rows

@@ -1,0 +1,20 @@
+"""Fig. 4 / Table 1: per-scenario slowdown of a single VGG16 layer."""
+from __future__ import annotations
+
+from repro.core import synthetic_database
+from benchmarks.common import write_csv
+
+
+def run() -> list:
+    db = synthetic_database("vgg16")
+    layer = 5                                 # a mid-network conv layer
+    base = db.layer_time(layer, 0)
+    rows = []
+    for k in range(1, db.num_scenarios + 1):
+        rows.append({
+            "scenario": db.scenario_names[k],
+            "layer_time": db.layer_time(layer, k),
+            "slowdown_x": db.layer_time(layer, k) / base,
+        })
+    write_csv("fig4_interference_impact", rows)
+    return rows

@@ -1,0 +1,21 @@
+"""Fig. 5: latency distribution, ODIN(a=2,10) vs LLS, 9 (freq,dur) settings."""
+from __future__ import annotations
+
+from benchmarks.common import MODELS, agg, run_matrix, write_csv
+
+
+def run() -> list:
+    rows = []
+    for model in MODELS:
+        rows += run_matrix(model)
+    write_csv("fig5_latency", rows)
+    return rows
+
+
+def summarize(rows) -> dict:
+    out = {}
+    for sched in ("odin_a10", "odin_a2", "lls"):
+        out[sched] = agg(rows, "mean_latency", scheduler=sched)
+    out["odin_a10_vs_lls_pct"] = 100 * (1 - out["odin_a10"] / out["lls"])
+    out["odin_a2_vs_lls_pct"] = 100 * (1 - out["odin_a2"] / out["lls"])
+    return out

@@ -1,0 +1,25 @@
+"""Fig. 6: throughput distribution, ODIN vs LLS (reuses the Fig. 5 matrix)."""
+from __future__ import annotations
+
+from benchmarks.common import agg, write_csv
+
+
+def run(rows) -> list:
+    write_csv("fig6_throughput", rows)
+    return rows
+
+
+def summarize(rows) -> dict:
+    """Steady-state (pipeline operating) throughput — the paper's Fig. 6
+    metric; exploration overhead is reported separately in Fig. 8."""
+    out = {}
+    for sched in ("odin_a10", "odin_a2", "lls"):
+        out[sched] = agg(rows, "steady_throughput", scheduler=sched)
+        out[sched + "_incl_exploration"] = agg(rows, "mean_throughput",
+                                               scheduler=sched)
+    out["odin_a10_vs_lls_pct"] = 100 * (out["odin_a10"] / out["lls"] - 1)
+    out["odin_a2_vs_lls_pct"] = 100 * (out["odin_a2"] / out["lls"] - 1)
+    out["odin_a10_vs_lls_incl_exploration_pct"] = 100 * (
+        out["odin_a10_incl_exploration"]
+        / out["lls_incl_exploration"] - 1)
+    return out

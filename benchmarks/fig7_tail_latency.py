@@ -1,0 +1,17 @@
+"""Fig. 7: tail (p99) latency distribution, ODIN vs LLS."""
+from __future__ import annotations
+
+from benchmarks.common import agg, write_csv
+
+
+def run(rows) -> list:
+    write_csv("fig7_tail_latency", rows)
+    return rows
+
+
+def summarize(rows) -> dict:
+    out = {}
+    for sched in ("odin_a10", "odin_a2", "lls"):
+        out[sched] = agg(rows, "p99_latency", scheduler=sched)
+    out["odin_a10_vs_lls_pct"] = 100 * (1 - out["odin_a10"] / out["lls"])
+    return out

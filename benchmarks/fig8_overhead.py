@@ -1,0 +1,22 @@
+"""Fig. 8: exploration overhead — % of queries spent rebalancing."""
+from __future__ import annotations
+
+from repro.core import PAPER_SETTINGS
+from benchmarks.common import agg, write_csv
+
+
+def run(rows) -> list:
+    out = []
+    for sched in ("odin_a10", "odin_a2", "lls"):
+        for freq, dur in PAPER_SETTINGS:
+            out.append({
+                "scheduler": sched, "freq": freq, "dur": dur,
+                "rebalance_pct": 100 * agg(rows, "serial_frac",
+                                           scheduler=sched, freq=freq,
+                                           dur=dur),
+                "mean_mitigation_steps": agg(rows, "mean_mitigation",
+                                             scheduler=sched, freq=freq,
+                                             dur=dur),
+            })
+    write_csv("fig8_overhead", out)
+    return out

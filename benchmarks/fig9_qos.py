@@ -1,0 +1,37 @@
+"""Fig. 9: QoS — SLO violations vs SLO level (throughput SLO, w.r.t. peak
+and w.r.t. the resource-constrained exhaustive-search optimum)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_SETTINGS, simulate
+from benchmarks.common import MODELS, NUM_EPS, NUM_QUERIES, SEEDS, db_for, write_csv
+
+SLO_LEVELS = (1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7, 0.6, 0.5, 0.4, 0.35)
+
+
+def run() -> list:
+    rows = []
+    for model in MODELS:
+        db = db_for(model)
+        for sched, kw in (("odin_a10", dict(scheduler="odin", alpha=10)),
+                          ("lls", dict(scheduler="lls"))):
+            per_level = {lv: [] for lv in SLO_LEVELS}
+            per_level_rc = {lv: [] for lv in SLO_LEVELS}
+            for freq, dur in PAPER_SETTINGS:
+                for seed in SEEDS[:2]:
+                    r = simulate(db, NUM_EPS, num_queries=NUM_QUERIES // 2,
+                                 freq_period=freq, duration=dur, seed=seed,
+                                 **kw)
+                    for lv in SLO_LEVELS:
+                        per_level[lv].append(r.slo_violations(lv, "peak"))
+                        per_level_rc[lv].append(
+                            r.slo_violations(lv, "resource_constrained"))
+            for lv in SLO_LEVELS:
+                rows.append({
+                    "model": model, "scheduler": sched, "slo_level": lv,
+                    "violations_vs_peak": float(np.mean(per_level[lv])),
+                    "violations_vs_rc": float(np.mean(per_level_rc[lv])),
+                })
+    write_csv("fig9_qos", rows)
+    return rows

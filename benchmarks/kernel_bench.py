@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-checked paths
+timed via their XLA reference implementations on CPU (wall time of the
+ref path; the Pallas path is TPU-targeted and validated in tests)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+from benchmarks.common import write_csv
+
+
+def _time(f, *args, n=5):
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # flash attention ref at serving-relevant sizes
+    for (B, Hq, Hkv, S, D) in [(1, 8, 2, 1024, 64), (1, 8, 2, 2048, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, Hq, S, D))
+        k = jax.random.normal(ks[1], (B, Hkv, S, D))
+        v = jax.random.normal(ks[2], (B, Hkv, S, D))
+        f = jax.jit(lambda q, k, v: R.flash_attention_ref(q, k, v))
+        rows.append({"name": f"attn_ref_S{S}", "us_per_call": _time(f, q, k, v),
+                     "derived": f"B{B}_Hq{Hq}_D{D}"})
+    for (b, S, H, P, N) in [(1, 1024, 16, 64, 64)]:
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+        B_ = jax.random.normal(ks[3], (b, S, N))
+        C = jax.random.normal(ks[4], (b, S, N))
+        f = jax.jit(lambda *a: R.ssd_scan_ref(*a))
+        rows.append({"name": f"ssd_ref_S{S}", "us_per_call": _time(f, x, dt, A, B_, C),
+                     "derived": f"H{H}_P{P}_N{N}"})
+    write_csv("kernel_bench", rows)
+    return rows

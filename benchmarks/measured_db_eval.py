@@ -1,0 +1,55 @@
+"""ODIN vs LLS on the *measured* interference database
+(results/measured_db.json, built by tools/build_measured_db.py with real
+co-located stressor processes — the paper's own §3.3 protocol executed on
+this container as the 'real platform')."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import LayerDatabase, PAPER_SETTINGS, simulate
+from benchmarks.common import write_csv
+
+DB_PATH = os.environ.get("REPRO_MEASURED_DB", "results/measured_db.json")
+
+
+def run() -> list:
+    if not os.path.exists(DB_PATH):
+        return []
+    db = LayerDatabase.load(DB_PATH)
+    rows = []
+    for name, kw in (("odin_a10", dict(scheduler="odin", alpha=10)),
+                     ("odin_a2", dict(scheduler="odin", alpha=2)),
+                     ("lls", dict(scheduler="lls")),
+                     ("none", dict(scheduler="none"))):
+        for f, d in PAPER_SETTINGS:
+            for seed in (0, 1, 2):
+                r = simulate(db, 4, num_queries=1200, freq_period=f,
+                             duration=d, seed=seed, **kw)
+                rows.append({
+                    "scheduler": name, "freq": f, "dur": d, "seed": seed,
+                    "mean_latency": r.latencies.mean(),
+                    "p99_latency": r.tail_latency(),
+                    "steady_throughput": r.steady_throughput,
+                    "mean_throughput": r.throughputs.mean(),
+                })
+    write_csv("measured_db_eval", rows)
+    return rows
+
+
+def summarize(rows) -> dict:
+    def m(sched, key):
+        vals = [r[key] for r in rows if r["scheduler"] == sched]
+        return float(np.mean(vals))
+    return {
+        "throughput_gain_pct":
+            100 * (m("odin_a10", "steady_throughput")
+                   / m("lls", "steady_throughput") - 1),
+        "latency_gain_pct":
+            100 * (1 - m("odin_a10", "mean_latency")
+                   / m("lls", "mean_latency")),
+        "tail_gain_pct":
+            100 * (1 - m("odin_a10", "p99_latency")
+                   / m("lls", "p99_latency")),
+    }

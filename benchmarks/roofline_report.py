@@ -1,0 +1,45 @@
+"""Roofline report: aggregate the dry-run JSONs into the (arch x shape x
+mesh) table consumed by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("error"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": "?", "status": "ERROR"})
+            continue
+        if d.get("skipped"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": "-", "status": f"SKIP: {d['reason']}"})
+            continue
+        r = d["roofline"]
+        m = d["memory"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "status": "ok", "mode": d["mode"],
+            "t_compute_s": f"{r['t_compute_s']:.4g}",
+            "t_memory_s": f"{r['t_memory_s']:.4g}",
+            "t_collective_s": f"{r['t_collective_s']:.4g}",
+            "bottleneck": r["bottleneck"],
+            "flops": f"{r['flops']:.4g}",
+            "bytes": f"{r['bytes_accessed']:.4g}",
+            "coll_bytes": f"{r['collective_bytes']:.4g}",
+            "model_flops": f"{r['model_flops']:.4g}",
+            "useful_ratio": f"{(r['useful_ratio'] or 0):.3f}",
+            "args_gib_per_dev": f"{m['argument_bytes'] / 2**30:.3f}",
+            "compile_s": d["compile_s"],
+        })
+    write_csv("roofline", rows)
+    return rows

@@ -1,0 +1,111 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Writes per-figure CSVs to results/benchmarks/ and prints a
+``name,value,derived`` summary CSV to stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer queries/seeds (CI mode)")
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_QUERIES"] = "600"
+
+    # imports after env so common.py picks the settings up
+    from benchmarks import (
+        fig1_motivation,
+        fig4_interference_impact,
+        fig5_latency,
+        fig6_throughput,
+        fig7_tail_latency,
+        fig8_overhead,
+        fig9_qos,
+        fig10_scalability,
+        kernel_bench,
+        roofline_report,
+    )
+
+    t0 = time.time()
+    print("name,value,derived")
+
+    rows1 = fig1_motivation.run()
+    peak = rows1[0]["throughput"]
+    odin = next(r for r in rows1 if r["config"] == "odin_rebalanced")
+    print(f"fig1_odin_recovered_frac,{odin['throughput'] / peak:.3f},"
+          f"search_wall={odin['search_wall_s'] * 1e3:.1f}ms")
+
+    rows4 = fig4_interference_impact.run()
+    print(f"fig4_max_slowdown_x,{max(r['slowdown_x'] for r in rows4):.2f},"
+          f"scenarios={len(rows4)}")
+
+    matrix = fig5_latency.run()
+    s5 = fig5_latency.summarize(matrix)
+    print(f"fig5_odin10_latency_gain_pct,{s5['odin_a10_vs_lls_pct']:.1f},"
+          f"paper=15.8")
+    print(f"fig5_odin2_latency_gain_pct,{s5['odin_a2_vs_lls_pct']:.1f},"
+          f"paper=14.1")
+
+    fig6_throughput.run(matrix)
+    s6 = fig6_throughput.summarize(matrix)
+    print(f"fig6_odin10_throughput_gain_pct,{s6['odin_a10_vs_lls_pct']:.1f},"
+          f"paper=19 (steady-state)")
+    print(f"fig6_odin10_throughput_incl_exploration_pct,"
+          f"{s6['odin_a10_vs_lls_incl_exploration_pct']:.1f},"
+          f"includes Fig8 exploration overhead")
+
+    fig7_tail_latency.run(matrix)
+    s7 = fig7_tail_latency.summarize(matrix)
+    print(f"fig7_odin10_tail_gain_pct,{s7['odin_a10_vs_lls_pct']:.1f},"
+          f"paper=14")
+
+    rows8 = fig8_overhead.run(matrix)
+    hi = max(r["rebalance_pct"] for r in rows8 if r["scheduler"] == "odin_a10")
+    lo = min(r["rebalance_pct"] for r in rows8 if r["scheduler"] == "odin_a10")
+    print(f"fig8_odin10_overhead_pct_range,{lo:.0f}-{hi:.0f},"
+          f"freq2_high_freq100_low")
+
+    rows9 = fig9_qos.run()
+    v85 = [r["violations_vs_peak"] for r in rows9
+           if r["scheduler"] == "odin_a10" and r["slo_level"] <= 0.85]
+    print(f"fig9_odin10_viol_at_slo<=85,{100 * sum(v85) / len(v85):.0f}%,"
+          f"paper=<20% (DB-calibration dependent)")
+
+    rows10 = fig10_scalability.run()
+    lat_spread = (max(r['mean_latency'] for r in rows10)
+                  / min(r['mean_latency'] for r in rows10))
+    print(f"fig10_latency_spread_4to52eps,{lat_spread:.2f},"
+          f"paper=flat (~1.0)")
+
+    from benchmarks import measured_db_eval
+    rows_m = measured_db_eval.run()
+    if rows_m:
+        sm = measured_db_eval.summarize(rows_m)
+        print(f"measured_db_odin10_throughput_gain_pct,"
+              f"{sm['throughput_gain_pct']:.1f},paper=19 (real stressors)")
+        print(f"measured_db_odin10_latency_gain_pct,"
+              f"{sm['latency_gain_pct']:.1f},paper=15.8 (real stressors)")
+
+    from benchmarks import ablation_alpha
+    rows_a = ablation_alpha.run()
+    best = max(rows_a, key=lambda r: r["steady_throughput"])
+    print(f"ablation_best_alpha,{best['alpha']},by steady throughput")
+
+    kernel_bench.run()
+    roofline_report.run()
+    nroof = len(roofline_report.run())
+    print(f"roofline_rows,{nroof},see results/benchmarks/roofline.csv")
+    print(f"total_wall_s,{time.time() - t0:.0f},")
+
+
+if __name__ == "__main__":
+    main()

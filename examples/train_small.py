@@ -1,0 +1,42 @@
+"""Train a ~100M-parameter model for a few hundred steps on synthetic data.
+
+Exercises the full training substrate: model zoo config, synthetic data
+pipeline (with an induction-copy pattern the model can learn), hand-rolled
+AdamW with warmup+cosine schedule, remat, and checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.training import AdamWConfig, train
+from repro.training.data import SyntheticLM
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300,
+                help="~100M params: ~8 s/step on CPU; --steps 30 for a smoke run")
+ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_small")
+args = ap.parse_args()
+
+# ~100M params: qwen-style dense, 8 layers, d_model 768.
+cfg = dataclasses.replace(
+    get_smoke_config("qwen3-8b"),
+    name="qwen3-100m", num_layers=8, d_model=768, num_heads=12,
+    num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=50257)
+print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+data = SyntheticLM(cfg.vocab_size, seq_len=128, global_batch=4, seed=0)
+opt = AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps)
+
+out = train(cfg, opt, iter(data), args.steps, dtype=jnp.float32,
+            log_every=20, checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=100)
+
+first, last = out["history"][0], out["history"][-1]
+print(f"\nloss {first['loss']:.3f} -> {last['loss']:.3f} over {args.steps} "
+      f"steps ({last['wall_s']:.0f}s)")
+assert last["loss"] < first["loss"], "model failed to learn"
+print(f"checkpoints in {args.checkpoint_dir}")

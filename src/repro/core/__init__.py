@@ -1,0 +1,37 @@
+"""Paper-faithful ODIN core: pure Python/NumPy, no JAX dependency."""
+from repro.core.database import (  # noqa: F401
+    InterferenceScenario,
+    LayerDatabase,
+    paper_scenarios,
+    synthetic_database,
+    transformer_database,
+)
+from repro.core.exhaustive import (  # noqa: F401
+    brute_force_partition,
+    optimal_partition,
+)
+from repro.core.lls import LLSController, lls_rebalance  # noqa: F401
+from repro.core.odin import (  # noqa: F401
+    OdinController,
+    RebalanceResult,
+    Trial,
+    odin_rebalance,
+)
+from repro.core.pipeline_state import (  # noqa: F401
+    balanced_config,
+    boundaries,
+    pipelined_latency,
+    serial_latency,
+    throughput,
+    utilization,
+    validate_config,
+    waiting_times,
+)
+from repro.core.simulator import (  # noqa: F401
+    PAPER_SETTINGS,
+    InterferenceEvent,
+    SimResult,
+    SimTimeSource,
+    generate_events,
+    simulate,
+)

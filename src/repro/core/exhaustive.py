@@ -1,0 +1,86 @@
+"""Optimal-configuration oracle (the paper's "exhaustive search").
+
+The paper's motivating example notes an exhaustive search over pipeline
+configurations took 42.5 minutes.  Because stage time is additive over a
+*contiguous* layer range evaluated under that EP's interference scenario,
+the optimum is computable exactly in O(N · m²) by dynamic programming on
+prefix boundaries — we use it as the "resource-constrained throughput"
+reference of §4.3 (Fig. 9) without paying the brute-force cost.  A literal
+brute-force enumerator is retained for cross-checking on small instances.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.database import LayerDatabase
+
+
+def optimal_partition(db: LayerDatabase,
+                      scenarios: Sequence[int],
+                      num_stages: int) -> Tuple[List[int], float]:
+    """Min-bottleneck contiguous partition of m layers onto stages 0..N-1.
+
+    Stage i evaluates its layers under ``scenarios[i]`` (bind-to-stage).
+    Empty stages are allowed (the pipeline may shorten under interference).
+    Returns (config, throughput).
+    """
+    m = db.num_layers
+    N = num_stages
+    # prefix[k][j] = sum of layer times [0, j) under scenario k
+    prefix = np.zeros((db.table.shape[1], m + 1))
+    prefix[:, 1:] = np.cumsum(db.table.T, axis=1)
+
+    def seg(i: int, lo: int, hi: int) -> float:
+        k = scenarios[i]
+        return prefix[k, hi] - prefix[k, lo]
+
+    INF = float("inf")
+    # dp[i][j] = min bottleneck placing first j layers on stages [0, i)
+    dp = np.full((N + 1, m + 1), INF)
+    choice = np.zeros((N + 1, m + 1), dtype=np.int64)
+    dp[0, 0] = 0.0
+    for i in range(1, N + 1):
+        for j in range(m + 1):
+            best, arg = INF, 0
+            for lo in range(j + 1):
+                cost = max(dp[i - 1, lo], seg(i - 1, lo, j))
+                if cost < best:
+                    best, arg = cost, lo
+            dp[i, j] = best
+            choice[i, j] = arg
+    # Backtrack.
+    config = [0] * N
+    j = m
+    for i in range(N, 0, -1):
+        lo = int(choice[i, j])
+        config[i - 1] = j - lo
+        j = lo
+    bottleneck = dp[N, m]
+    return config, (1.0 / bottleneck if bottleneck > 0 else float("inf"))
+
+
+def brute_force_partition(db: LayerDatabase,
+                          scenarios: Sequence[int],
+                          num_stages: int) -> Tuple[List[int], float]:
+    """Literal enumeration of all contiguous partitions (small m only)."""
+    m = db.num_layers
+    N = num_stages
+    best_cfg, best_T = None, -1.0
+    # boundaries: N-1 cut points in [0, m], non-decreasing
+    for cuts in itertools.combinations_with_replacement(range(m + 1), N - 1):
+        bounds = (0,) + cuts + (m,)
+        if any(b2 < b1 for b1, b2 in zip(bounds, bounds[1:])):
+            continue
+        times = [db.stage_time(bounds[i], bounds[i + 1], scenarios[i])
+                 for i in range(N)]
+        t_max = max(t for t in times if t > 0) if any(times) else 0
+        if t_max <= 0:
+            continue
+        T = 1.0 / t_max
+        if T > best_T:
+            best_T = T
+            best_cfg = [bounds[i + 1] - bounds[i] for i in range(N)]
+    return best_cfg, best_T

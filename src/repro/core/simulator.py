@@ -1,0 +1,242 @@
+"""Query-driven pipeline simulator (paper §4 methodology).
+
+Simulates an inference pipeline of N stages bound to N execution places
+serving a window of queries (paper: 4000).  Interference events start
+every ``freq_period`` queries on a random EP with a random scenario from
+the database and last ``duration`` queries.  The scheduler under test
+(ODIN / LLS / oracle / none) observes only per-stage execution times;
+during a rebalancing phase, queries are processed serially — one query
+per trial — exactly the paper's exploration-overhead accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.database import LayerDatabase
+from repro.core.exhaustive import optimal_partition
+from repro.core.lls import LLSController
+from repro.core.odin import OdinController
+from repro.core.pipeline_state import (
+    balanced_config,
+    pipelined_latency,
+    serial_latency,
+    throughput,
+)
+
+
+class SimTimeSource:
+    """StageTimeSource backed by the database + current per-EP scenarios."""
+
+    def __init__(self, db: LayerDatabase, scenarios: Sequence[int]):
+        self.db = db
+        self.scenarios = list(scenarios)
+
+    def stage_times(self, config: Sequence[int]) -> np.ndarray:
+        return self.db.stage_times(config, self.scenarios)
+
+
+@dataclasses.dataclass
+class InterferenceEvent:
+    start: int      # query index at which the event begins
+    duration: int   # in queries
+    ep: int
+    scenario: int   # column in the database (>= 1)
+
+    @property
+    def end(self) -> int:
+        return self.start + self.duration
+
+
+def generate_events(num_queries: int, num_eps: int, num_scenarios: int,
+                    freq_period: int, duration: int,
+                    seed: int = 0) -> List[InterferenceEvent]:
+    """One event every ``freq_period`` queries on a random EP/scenario."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for start in range(freq_period, num_queries, freq_period):
+        events.append(InterferenceEvent(
+            start=start, duration=duration,
+            ep=int(rng.integers(num_eps)),
+            scenario=int(rng.integers(1, num_scenarios + 1))))
+    return events
+
+
+@dataclasses.dataclass
+class SimResult:
+    scheduler: str
+    latencies: np.ndarray          # per query
+    throughputs: np.ndarray        # per query (1 / bottleneck stage time)
+    serial_mask: np.ndarray        # True where query was processed serially
+    peak_throughput: float         # interference-free optimum
+    rc_throughputs: np.ndarray     # resource-constrained optimum per query
+    num_rebalances: int
+    total_trials: int
+    configs_trace: List[List[int]]
+    mitigation_lengths: List[int]  # trials consumed per rebalancing phase
+
+    @property
+    def rebalance_fraction(self) -> float:
+        return float(np.mean(self.serial_mask))
+
+    @property
+    def steady_throughput(self) -> float:
+        """Mean throughput over pipelined (non-exploration) queries — the
+        pipeline's operating rate, which is what the paper's Fig. 6
+        reports (exploration overhead is Fig. 8's separate metric)."""
+        pipe = self.throughputs[~self.serial_mask]
+        return float(pipe.mean()) if len(pipe) else float(
+            self.throughputs.mean())
+
+    def tail_latency(self, pct: float = 99.0) -> float:
+        return float(np.percentile(self.latencies, pct))
+
+    def slo_violations(self, slo_level: float,
+                       reference: str = "peak") -> float:
+        """Fraction of queries with throughput below slo_level × reference."""
+        if reference == "peak":
+            target = slo_level * self.peak_throughput
+            return float(np.mean(self.throughputs < target))
+        elif reference == "resource_constrained":
+            target = slo_level * self.rc_throughputs
+            return float(np.mean(self.throughputs < target))
+        raise ValueError(reference)
+
+
+def _make_controller(scheduler: str, alpha: int, rel_threshold: float):
+    if scheduler == "odin":
+        return OdinController(alpha=alpha, rel_threshold=rel_threshold)
+    if scheduler == "lls":
+        return LLSController(rel_threshold=rel_threshold)
+    if scheduler in ("none", "oracle"):
+        return None
+    raise ValueError(f"unknown scheduler {scheduler!r}")
+
+
+def simulate(db: LayerDatabase,
+             num_eps: int,
+             scheduler: str = "odin",
+             alpha: int = 10,
+             num_queries: int = 4000,
+             freq_period: int = 10,
+             duration: int = 10,
+             seed: int = 0,
+             rel_threshold: float = 0.02,
+             events: Optional[List[InterferenceEvent]] = None,
+             initial_config: Optional[List[int]] = None) -> SimResult:
+    """Run one (scheduler, interference-setting) simulation."""
+    if events is None:
+        events = generate_events(num_queries, num_eps, db.num_scenarios,
+                                 freq_period, duration, seed)
+    config = (list(initial_config) if initial_config is not None
+              else balanced_config(db.num_layers, num_eps))
+    # Interference-free peak throughput of the starting configuration:
+    # by assumption (§3.1) the initial config is the balanced optimum.
+    clean = SimTimeSource(db, [0] * num_eps)
+    # Start from the true clean optimum so "peak" matches the paper's
+    # "throughput of the inference pipeline when executing alone".
+    if initial_config is None:
+        opt_cfg, _ = optimal_partition(db, [0] * num_eps, num_eps)
+        config = opt_cfg
+    peak = throughput(clean.stage_times(config))
+
+    controller = _make_controller(scheduler, alpha, rel_threshold)
+
+    scenarios = [0] * num_eps
+    source = SimTimeSource(db, scenarios)
+
+    latencies = np.zeros(num_queries)
+    throughputs = np.zeros(num_queries)
+    serial_mask = np.zeros(num_queries, dtype=bool)
+    rc_thr = np.zeros(num_queries)
+    configs_trace: List[List[int]] = []
+    mitigation_lengths: List[int] = []
+    num_rebalances = 0
+    total_trials = 0
+    explorer = None  # in-progress rebalancing phase
+
+    # Cache the oracle per scenario-vector (it is deterministic).
+    oracle_cache = {}
+
+    def rc_throughput() -> float:
+        key = tuple(scenarios)
+        if key not in oracle_cache:
+            oracle_cache[key] = optimal_partition(db, scenarios, num_eps)
+        return oracle_cache[key][1]
+
+    for q in range(num_queries):
+        # -- advance interference state ------------------------------------
+        active = {}
+        for ev in events:
+            if ev.start <= q < ev.end:
+                active[ev.ep] = ev.scenario
+        new_scen = [active.get(ep, 0) for ep in range(num_eps)]
+        if new_scen != scenarios:
+            scenarios[:] = new_scen
+            source.scenarios[:] = new_scen
+        rc = rc_throughput()
+        rc_thr[q] = rc
+
+        # -- in-progress rebalancing phase: one trial = one serial query ----
+        if explorer is not None:
+            trial_cfg = explorer.step(source)
+            times = source.stage_times(trial_cfg)
+            latencies[q] = serial_latency(times)
+            throughputs[q] = throughput(times)
+            serial_mask[q] = True
+            configs_trace.append(list(trial_cfg))
+            if explorer.done:
+                res = explorer.result()
+                config = res.config
+                total_trials += res.num_trials
+                mitigation_lengths.append(res.num_trials)
+                controller.finish(config, source)
+                explorer = None
+            continue
+
+        # -- scheduler observation ------------------------------------------
+        if scheduler == "oracle":
+            opt_cfg, _ = oracle_cache[tuple(scenarios)]
+            config = list(opt_cfg)
+        elif controller is not None and controller.detect(config, source):
+            num_rebalances += 1
+            explorer = controller.make_explorer(config)
+            trial_cfg = explorer.step(source)
+            times = source.stage_times(trial_cfg)
+            latencies[q] = serial_latency(times)
+            throughputs[q] = throughput(times)
+            serial_mask[q] = True
+            configs_trace.append(list(trial_cfg))
+            if explorer.done:
+                res = explorer.result()
+                config = res.config
+                total_trials += res.num_trials
+                mitigation_lengths.append(res.num_trials)
+                controller.finish(config, source)
+                explorer = None
+            continue
+
+        # -- steady-state pipelined query ------------------------------------
+        times = source.stage_times(config)
+        latencies[q] = pipelined_latency(times)
+        throughputs[q] = throughput(times)
+        configs_trace.append(list(config))
+
+    return SimResult(
+        scheduler=scheduler,
+        latencies=latencies,
+        throughputs=throughputs,
+        serial_mask=serial_mask,
+        peak_throughput=peak,
+        rc_throughputs=rc_thr,
+        num_rebalances=num_rebalances,
+        total_trials=total_trials,
+        configs_trace=configs_trace,
+        mitigation_lengths=mitigation_lengths,
+    )
+
+
+# The paper's 9 frequency/duration settings (§4.2).
+PAPER_SETTINGS = [(f, d) for f in (2, 10, 100) for d in (2, 10, 100)]

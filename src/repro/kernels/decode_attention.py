@@ -1,0 +1,119 @@
+"""Pallas TPU decode attention (single-token GQA attention vs a long KV cache).
+
+Decode attention is memory-bound: the whole KV cache streams HBM→VMEM
+once while the query is a single token.  Tiling: grid = (B, Hkv, nk) with
+the KV-block axis innermost; the query-head *group* (all Hq/Hkv query
+heads sharing one KV head) rides along in a single [group, D] VMEM tile,
+so each KV block is read exactly once per KV head — the GQA bandwidth
+advantage is realized structurally.
+
+Running (m, l, acc) online-softmax statistics live in VMEM scratch across
+KV blocks.  The valid-length mask (cache slots beyond ``index``) and the
+optional sliding window are applied per block; blocks entirely outside
+the window are culled with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(index_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, num_kv_blocks: int,
+                   window: Optional[int]):
+    ki = pl.program_id(2)
+    index = index_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ki * block_k
+    live = k_start <= index
+    if window is not None:
+        live &= k_start + block_k - 1 > index - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [group, D]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)           # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [group, bk]
+        kp = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        mask = kp <= index
+        if window is not None:
+            mask &= kp > index - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     index: jnp.ndarray, *,
+                     window: Optional[int] = None,
+                     block_k: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, D] (one token); k, v: [B, Hkv, S, D]; index: scalar int32
+    position of the newest valid cache slot.  Returns [B, Hq, D]."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    block_k = min(block_k, S)
+    if S % block_k:
+        raise ValueError(f"S={S} not divisible by block_k={block_k}")
+    nk = S // block_k
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Hkv, group, D)
+    index = jnp.asarray(index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, num_kv_blocks=nk,
+        window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(index, qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (prefill/train hot spot).
+
+Canonical online-softmax tiling: grid = (B, Hq, nq, nk) with the KV-block
+dimension innermost — TPU executes the grid sequentially over the last
+axis, so the (m, l, acc) running statistics live in VMEM scratch and are
+carried across KV steps.  Q/K/V tiles are staged HBM→VMEM by BlockSpec;
+the (block_q × block_k) score tile and the accumulator stay resident in
+VMEM and feed the MXU with 128-aligned contractions when
+block_q = block_k = 128 and head_dim ∈ {128, 256}.
+
+Fully-masked KV blocks (beyond the causal frontier, or outside the
+sliding window) are skipped with ``pl.when`` — for causal attention this
+halves the work; for a 4k sliding window over a 32k sequence it removes
+~7/8 of it.
+
+GQA: Hkv < Hq is handled purely by the K/V index_map (kv head =
+q_head // group) — KV tiles are re-read per query-head group rather than
+materializing repeated heads in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int,
+                  num_kv_blocks: int, causal: bool,
+                  window: Optional[int]):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Block-level mask culling.
+    live = jnp.bool_(True)
+    if causal:
+        # no key in this block is <= the last query position -> dead
+        live &= k_start <= q_start + block_q - 1
+    if window is not None:
+        # every key is older than (q - window) for all queries -> dead
+        live &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= qp >= kp
+        if window is not None:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    if S % block_q or S % block_k:
+        raise ValueError(f"S={S} must be divisible by blocks "
+                         f"({block_q}, {block_k})")
+    nq, nk = S // block_q, S // block_k
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        num_kv_blocks=nk, causal=causal, window=window)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,65 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``impl`` selection:
+  * "pallas"     — compiled Pallas (TPU)
+  * "interpret"  — Pallas interpret mode (CPU validation; executes the
+                   kernel body in Python via the Pallas interpreter)
+  * "ref"        — pure-jnp oracle (XLA; used by the dry-run path)
+  * "auto"       — pallas on TPU, ref elsewhere
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref_lib.flash_attention_ref(q, k, v, causal=causal,
+                                           window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block_k"))
+def decode_attention(q, k, v, index, *, window: Optional[int] = None,
+                     impl: str = "auto", block_k: int = 512):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref_lib.decode_attention_ref(q, k, v, index, window=window)
+    return _decode_pallas(q, k, v, index, window=window, block_k=block_k,
+                          interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "impl"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256, block_h: int = 8,
+             impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref_lib.ssd_scan_ref(x, dt, A, B, C)
+    return _ssd_pallas(x, dt, A, B, C, chunk=chunk, block_h=block_h,
+                       interpret=(impl == "interpret"))

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (independent formulations)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Naive full-materialization softmax attention.
+
+    q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] -> [B, Hq, S, D].
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         index, *,
+                         window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B, Hq, D]; k, v: [B, Hkv, S, D] -> [B, Hq, D]."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    kp = jnp.arange(S)
+    mask = kp <= index
+    if window is not None:
+        mask &= kp > index - window
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 B: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Token-by-token linear recurrence (independent of the chunked form).
+
+    x: [b, S, H, P]; dt: [b, S, H]; A: [H]; B, C: [b, S, N] -> [b, S, H, P].
+    h_t = h_{t-1} * exp(dt_t A) + dt_t x_t ⊗ B_t ;  y_t = h_t · C_t
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A[None, :])                       # [b, H]
+        h = (h * dA[..., None, None]
+             + jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], Bt))
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B.transpose(1, 0, 2).astype(jnp.float32),
+          C.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

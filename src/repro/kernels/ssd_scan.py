@@ -1,0 +1,115 @@
+"""Pallas TPU Mamba2 SSD chunk scan.
+
+The SSD dual form maps naturally onto the MXU: within a chunk the token
+mixing is three dense contractions ((C·Bᵀ)∘L against x, plus the state
+read/write terms); across chunks a [H, P, N] state is carried — here it
+lives in VMEM scratch across the innermost (sequential) chunk grid axis,
+so the recurrence never round-trips HBM.
+
+Grid = (B, H/block_h, nc).  Head-blocking bounds the VMEM working set:
+state tile is block_h × P × N fp32 (e.g. 8×64×128×4 = 256 KiB for Jamba's
+d_inner = 16384 where a full-head state would be 8 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: [h, c] -> [h, c, c] lower-tri segment sums (NEG_INF above)."""
+    h, c = x.shape
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[:, :, None] - cs[:, None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    return jnp.where(i >= j, out, -jnp.inf)
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # [bh, cs, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [bh, cs]
+    A = a_ref[...].astype(jnp.float32)        # [bh]
+    Bc = b_ref[0].astype(jnp.float32)         # [cs, N]
+    Cc = c_ref[0].astype(jnp.float32)         # [cs, N]
+
+    dA = dt * A[:, None]                      # [bh, cs]
+    dA_cs = jnp.cumsum(dA, axis=-1)           # [bh, cs]
+    xdt = x * dt[..., None]                   # [bh, cs, P]
+
+    # Intra-chunk (dual quadratic form): (C·Bᵀ ∘ L) @ (x·dt)
+    L = jnp.exp(_segsum(dA))                  # [bh, cs, cs]
+    cb = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [cs, cs]
+    y_diag = jnp.einsum("ij,hij,hjp->hip", cb, L, xdt)
+
+    # State read (inter-chunk): y += (C · h_prev) with decay
+    state = state_scr[...]                    # [bh, P, N]
+    decay_in = jnp.exp(dA_cs)                 # [bh, cs]
+    y_off = jnp.einsum("ln,hpn,hl->hlp", Cc, state, decay_in)
+
+    # State write: h = h * exp(sum dA) + sum decay·B⊗(x·dt)
+    decay_states = jnp.exp(dA_cs[:, -1:] - dA_cs)      # [bh, cs]
+    chunk_state = jnp.einsum("hl,ln,hlp->hpn", decay_states, Bc, xdt)
+    state_scr[...] = (state * jnp.exp(dA_cs[:, -1])[:, None, None]
+                      + chunk_state)
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *,
+             chunk: int = 256, block_h: int = 8,
+             interpret: bool = False) -> jnp.ndarray:
+    """SSD scan (layout matches repro.models.mamba2.ssd_chunked).
+
+    x: [b, S, H, P]; dt: [b, S, H]; A: [H]; B, C: [b, S, N].
+    Returns y: [b, S, H, P].
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    block_h = min(block_h, H)
+    if H % block_h:
+        raise ValueError(f"H={H} not divisible by block_h={block_h}")
+    nc = S // chunk
+    nh = H // block_h
+
+    # Layout: heads-major so a head-block×chunk tile is contiguous.
+    xt = x.transpose(0, 2, 1, 3)              # [b, H, S, P]
+    dtt = dt.transpose(0, 2, 1)               # [b, H, S]
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+
+    yt = pl.pallas_call(
+        kernel,
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, block_h, chunk, P),
+                         lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, block_h, chunk),
+                         lambda bi, hi, ci: (bi, hi, ci)),
+            pl.BlockSpec((block_h,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_h, chunk, P),
+                               lambda bi, hi, ci: (bi, hi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_h, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, B, C)
+    return yt.transpose(0, 2, 1, 3)

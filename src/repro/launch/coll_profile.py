@@ -1,0 +1,54 @@
+"""Collective profiler: rank collective ops in a compiled module by
+loop-multiplied payload bytes, with op metadata (source of the gather)."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import List, Tuple
+
+from repro.launch.roofline import (
+    _line_collective,
+    _split_computations,
+    _trip_count,
+)
+
+
+def top_collectives(hlo_text: str, k: int = 15) -> List[Tuple[float, str]]:
+    comps = _split_computations(hlo_text)
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    entry = m.group(1) if m else None
+    while_re = re.compile(
+        r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+    call_re = re.compile(
+        r"(?:to_apply|body|condition|branch_computations)="
+        r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+    rows = []
+
+    def walk(name, mult):
+        for line in comps.get(name, "").splitlines():
+            stripped = line.lstrip()
+            lc = _line_collective(stripped)
+            if lc:
+                meta = re.search(r'op_name="([^"]*)"', stripped)
+                op = meta.group(1) if meta else stripped[:80]
+                rows.append((lc[1] * mult, lc[0], mult, op))
+            wm = while_re.search(stripped)
+            if wm:
+                walk(wm.group(2), mult * _trip_count(comps.get(wm.group(1), "")))
+                continue
+            cm = call_re.search(stripped)
+            if cm and "while(" not in stripped:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        walk(callee, mult)
+
+    if entry:
+        walk(entry, 1)
+    rows.sort(reverse=True)
+    agg = defaultdict(float)
+    for b, kind, mult, op in rows:
+        agg[(kind, op)] += b
+    out = sorted(((v, f"{kind:20s} {op}") for (kind, op), v in agg.items()),
+                 reverse=True)
+    return out[:k]

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the appropriate
+step (train / prefill / decode) with ShapeDtypeStruct inputs (no
+allocation), compiles, and records memory_analysis / cost_analysis /
+collective schedule for the roofline report.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k \
+        [--multi-pod] [--out results/dryrun]
+    python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS,
+    INPUT_SHAPES,
+    get_config,
+    shape_is_applicable,
+)
+from repro.launch import analytic as an  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import sharding as sh  # noqa: E402
+from repro.launch import steps as st     # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def auto_strategy(cfg, shape) -> str:
+    """Pick the §Perf-winning strategy per (arch, shape).
+
+    * train: fine-grained MoE (small experts, high top-k) moves fewer
+      bytes gathering weights than dispatching tokens -> "fsdp_all";
+      everything else "tp" (GQA-aware tensor/expert parallel + ZeRO-1).
+    * inference: models whose bf16 params fit comfortably when stored
+      sharded over the data axes run sequence-parallel "dp_seq"
+      (attention fully local per chip); larger models run "tp".
+    """
+    pbytes = cfg.param_count() * 2
+    if shape.mode == "train":
+        if cfg.moe is not None and cfg.moe.d_expert <= 2048:
+            return "fsdp_all"
+        return "tp"
+    if shape.mode == "prefill" and pbytes <= 70e9:
+        return "dp_seq"
+    return "tp"
+
+
+def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool,
+                      verbose: bool = True, unroll: bool = False,
+                      strategy: str = "auto"):
+    """Returns a result dict (lowered/compiled stats) for one combination."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = shape_is_applicable(cfg0, shape)
+    variant = None
+    if not ok and shape.name == "long_500k" and cfg0.is_decoder:
+        cfg = st.resolve_config(cfg0, shape)      # sliding-window variant
+        variant = "sliding_window"
+    elif not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": why}
+    else:
+        cfg = cfg0
+
+    if strategy == "auto":
+        strategy = auto_strategy(cfg, shape)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.perf_counter()
+
+    # Pin activation sharding at block boundaries (Perf iteration 4):
+    # batch on the data axes ("fsdp_all": over the whole mesh; "dp_seq":
+    # + sequence on model).
+    from jax.sharding import PartitionSpec as P
+    from repro.models import sharding_ctx
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    B = INPUT_SHAPES[shape_name].global_batch
+    if strategy == "fsdp_all" and B % (mesh.size // 1) == 0:
+        sharding_ctx.set_activation_spec(P(fsdp + ("model",), None, None))
+    elif strategy == "dp_seq":
+        sharding_ctx.set_activation_spec(P(fsdp, "model", None))
+    elif B % (mesh.shape["data"] * (mesh.shape.get("pod", 1))) == 0:
+        sharding_ctx.set_activation_spec(P(fsdp, None, None))
+    else:
+        sharding_ctx.set_activation_spec(None)
+
+    params_sh = st.param_shapes(cfg)
+    params_shd = sh.params_shardings(params_sh, mesh, strategy=strategy,
+                                     cfg=cfg)
+    specs = st.input_specs(cfg, shape)
+
+    with jax.default_device(jax.devices()[0]):
+        if shape.mode == "train":
+            opt_sh = st.opt_state_shapes(params_sh)
+            opt_shd = sh.opt_state_shardings(opt_sh, params_shd, mesh,
+                                             strategy=strategy)
+            batch_shd = sh.batch_pspec(specs["batch"], mesh, strategy=strategy)
+            fn = st.make_train_step_fn(cfg, unroll=unroll)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_shd, opt_shd, batch_shd),
+                out_shardings=(params_shd, opt_shd, None),
+                donate_argnums=(0, 1))
+            with mesh:
+                lowered = jfn.lower(params_sh, opt_sh, specs["batch"])
+        elif shape.mode == "prefill":
+            fn = st.make_prefill_fn(cfg, shape, unroll=unroll)
+            batch_shd = sh.batch_pspec(specs, mesh, strategy=strategy)
+            jfn = jax.jit(
+                lambda params, inputs: fn(params, **inputs),
+                in_shardings=(params_shd, batch_shd))
+            with mesh:
+                lowered = jfn.lower(params_sh, specs)
+        else:  # decode
+            cache_shd = sh.cache_shardings(specs["cache"], mesh,
+                                           shape.global_batch)
+            tok_shd = sh.batch_pspec(specs["tokens"], mesh)
+            fn = st.make_decode_step_fn(cfg, unroll=unroll)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_shd, tok_shd, cache_shd, None),
+                out_shardings=(None, cache_shd),
+                donate_argnums=(2,))
+            with mesh:
+                lowered = jfn.lower(params_sh, specs["tokens"],
+                                    specs["cache"], specs["index"])
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    terms = rl.analyze(compiled, hlo, chips,
+                       model_flops=rl.model_flops_for(cfg, shape),
+                       analytic=an.analytic_totals(cfg, shape))
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "strategy": strategy,
+        "chips": chips,
+        "variant": variant,
+        "skipped": False,
+        "mode": shape.mode,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "roofline": {
+            "flops": terms.flops,
+            "bytes_accessed": terms.bytes_accessed,
+            "hlo_flops": terms.hlo_flops,
+            "hlo_bytes": terms.hlo_bytes,
+            "collective_bytes": terms.coll_bytes,
+            "collective_breakdown": terms.coll_breakdown,
+            "t_compute_s": terms.t_compute,
+            "t_memory_s": terms.t_memory,
+            "t_collective_s": terms.t_collective,
+            "bottleneck": terms.bottleneck,
+            "model_flops": terms.model_flops,
+            "useful_ratio": terms.useful_ratio,
+        },
+    }
+    if verbose:
+        per_dev = (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / chips
+        print(f"[dryrun] {arch} x {shape_name} x {result['mesh']}: "
+              f"compile {t_compile:.1f}s, "
+              f"args+temp/device {per_dev/2**30:.2f} GiB, "
+              f"bottleneck={terms.bottleneck}", flush=True)
+        print(f"  memory_analysis: {mem}", flush=True)
+        print(f"  cost_analysis: flops={terms.flops:.3e} "
+              f"bytes={terms.bytes_accessed:.3e} "
+              f"coll={terms.coll_bytes:.3e}", flush=True)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="auto",
+                    choices=("auto", "tp", "zero3", "dp_seq", "fsdp_all"))
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    combos = ([(args.arch, args.shape)] if not args.all else
+              [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES])
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in combos:
+        tag = f"{arch}__{shape}__{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            res = lower_and_compile(arch, shape, multi_pod=args.multi_pod,
+                                    strategy=args.strategy)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            res = {"arch": arch, "shape": shape, "error": str(e),
+                   "traceback": traceback.format_exc()}
+            print(f"[dryrun] FAIL {tag}: {e}", flush=True)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

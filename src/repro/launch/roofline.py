@@ -1,0 +1,215 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis`` supplies FLOPs and bytes accessed; collective bytes are
+parsed from the (post-SPMD-partitioning) compiled HLO text by summing the
+result-buffer sizes of every collective op.  Result-buffer bytes are the
+per-participant payload actually moved onto the wire for all-gather /
+all-to-all / collective-permute, and the received payload for
+all-reduce / reduce-scatter — a uniform, reproducible proxy documented in
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (per prompt).
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  "bf16[16,512,128]{2,1,0}"  or "f32[]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Map computation name -> its body text."""
+    comps: Dict[str, str] = {}
+    name = None
+    buf: list = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"(?:ENTRY\s+)?%([\w.\-]+)\s*\(", line)
+        if (m and not line.startswith(" ")
+                and line.rstrip().endswith("{")):
+            name = m.group(1)
+            buf = []
+            continue
+        if name is not None:
+            if line.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _line_collective(stripped: str):
+    """(kind, bytes) if the line is a collective op result, else None."""
+    m = re.match(r"%?[\w.\-]+\s*=\s*(.*)$", stripped)
+    if not m:
+        return None
+    rest = m.group(1)
+    kind = None
+    for k in _COLLECTIVES:
+        if re.search(rf"\b{k}(-start|-done)?\(", rest):
+            kind = k
+            break
+    if kind is None or f"{kind}-done(" in rest:
+        return None  # -done pairs with -start; count once
+    head = rest.split("(", 1)[0]
+    return kind, sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+
+
+def _trip_count(cond_text: str) -> int:
+    """Trip count of a while loop from its condition computation: the
+    comparison constant (max s32/u32 constant found)."""
+    consts = [int(v) for v in
+              re.findall(r"[su]\d+\[\]\s+constant\((-?\d+)\)", cond_text)]
+    consts = [c for c in consts if c > 0]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-chip collective payload bytes, loop-aware.
+
+    XLA's cost analysis (and a flat text scan) counts a while-loop body
+    once; scanned-block models execute it ``num_blocks`` times.  This
+    parser walks the call graph: collectives inside a while body are
+    multiplied by the loop's trip count (recovered from the condition
+    computation's comparison constant); fusions/calls/conditionals are
+    counted once.
+    """
+    comps = _split_computations(hlo_text)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1)
+
+    call_re = re.compile(
+        r"(?:to_apply|body|condition|branch_computations)="
+        r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+    while_re = re.compile(
+        r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+
+    def walk(name: str, mult: int, out: Dict[str, int], seen) -> None:
+        text = comps.get(name, "")
+        for line in text.splitlines():
+            stripped = line.lstrip()
+            lc = _line_collective(stripped)
+            if lc:
+                out[lc[0]] += lc[1] * mult
+            wm = while_re.search(stripped)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tc = _trip_count(comps.get(cond, ""))
+                walk(body, mult * tc, out, seen)
+                continue
+            cm = call_re.search(stripped)
+            if cm and "while(" not in stripped:
+                for callee in re.split(r",\s*", cm.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        walk(callee, mult, out, seen)
+
+    out = {k: 0 for k in _COLLECTIVES}
+    if entry:
+        walk(entry, 1, out, set())
+    else:  # fallback: flat scan
+        for line in hlo_text.splitlines():
+            lc = _line_collective(line.lstrip())
+            if lc:
+                out[lc[0]] += lc[1]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # global FLOPs (analytic when provided)
+    bytes_accessed: float        # global HBM bytes (analytic when provided)
+    hlo_flops: float             # raw cost_analysis (per-device × chips)
+    hlo_bytes: float
+    coll_bytes: float            # per-chip collective payload (from HLO)
+    coll_breakdown: Dict[str, int]
+    chips: int
+    # derived (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def finalize(self) -> "RooflineTerms":
+        self.t_compute = self.flops / (self.chips * PEAK_FLOPS)
+        self.t_memory = self.bytes_accessed / (self.chips * HBM_BW)
+        # collective bytes from the per-device HLO module are per-chip
+        self.t_collective = self.coll_bytes / LINK_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.model_flops:
+            self.useful_ratio = self.model_flops / max(self.flops, 1.0)
+        return self
+
+
+def analyze(compiled, hlo_text: str, chips: int,
+            model_flops: Optional[float] = None,
+            analytic: Optional[Dict[str, float]] = None) -> RooflineTerms:
+    """``analytic``: {"flops", "bytes"} global totals from
+    launch/analytic.py; they drive the compute/memory terms (HLO
+    cost_analysis undercounts loop bodies — see analytic.py docstring).
+    The collective term always comes from the compiled HLO schedule."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    coll = collective_bytes(hlo_text)
+    # cost_analysis() on an SPMD executable reports the *per-device*
+    # program (verified empirically); scale to global for the stored
+    # numbers to follow the prompt's HLO_FLOPs/(chips × peak) convention.
+    hlo_flops = float(cost.get("flops", 0.0)) * chips
+    hlo_bytes = float(cost.get("bytes accessed", 0.0)) * chips
+    return RooflineTerms(
+        flops=analytic["flops"] if analytic else hlo_flops,
+        bytes_accessed=analytic["bytes"] if analytic else hlo_bytes,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        chips=chips,
+        model_flops=model_flops,
+    ).finalize()
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train), 2·N·D (inference); N = active params."""
+    n = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * n * tokens

@@ -1,0 +1,256 @@
+"""Sharding rules: parameters, optimizer state, caches, batches.
+
+Strategy (DESIGN.md §5): a 2D/3D FSDP×TP grid.
+
+* last dim of every ≥2-D weight → ``model`` (tensor parallel),
+* second-to-last dim → ``data`` (+``pod``) (ZeRO-3 / FSDP),
+* stacked-block leading dim and 1-D params stay replicated,
+* MoE expert dim → ``model`` when divisible (expert parallelism takes
+  precedence over per-expert TP),
+* batch dims of activations / caches → ``data`` (+``pod``); for the
+  single-request long-context shape the cache sequence dim is sharded
+  instead (see ``cache_pspec``).
+
+Divisibility is checked per-leaf; non-divisible dims fall back to
+replication, so every (arch × mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _axsize(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh, axes) -> bool:
+    return dim % _axsize(mesh, axes) == 0
+
+
+def param_pspec(path: str, leaf, mesh, *, stacked: bool,
+                strategy: str = "tp", cfg=None) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked``: leaf has a leading num_blocks axis (never sharded —
+    it is the lax.scan axis and the pipeline-stage axis).
+
+    Strategies (see EXPERIMENTS.md §Perf):
+      * "tp"       — tensor/expert parallel on ``model`` only; weights are
+                     replicated over the data axes.  XLA then communicates
+                     *activations* once per TP matmul instead of
+                     re-gathering weights/activations per loop body.
+      * "zero3"    — v0 baseline: additionally shard a weight dim over the
+                     data axes (kept for the recorded baseline comparison).
+      * "dp_seq"   — weights fully replicated; the batch/sequence of the
+                     activations carry all the parallelism (for archs
+                     whose head counts don't divide the model axis —
+                     sharded heads otherwise force per-chunk score
+                     all-reduces inside the attention loops).
+      * "fsdp_all" — weights sharded over ``model`` for storage, batch
+                     sharded over data×model: XLA gathers *weights* once
+                     per layer (ZeRO-3 over the flattened mesh).  Optimal
+                     when weight bytes/layer < routed-activation bytes
+                     (deepseek-style fine-grained MoE at large batch).
+    """
+    fsdp = data_axes(mesh)
+    shape = leaf.shape
+    lead = 1 if stacked else 0
+    body = shape[lead:]
+    spec: list = [None] * len(shape)
+    if len(body) == 0:
+        return P()
+    if strategy == "dp_seq":
+        # weights sharded over the data axes for *storage* (per-layer
+        # weight gather ~= params bytes per pass — cheap for <=32B-class
+        # models); activations carry batch(data) x sequence(model).
+        if len(body) >= 2:
+            dims = sorted(range(len(body)), key=lambda i: -body[i])
+            for i in dims:
+                if _fits(body[i], mesh, fsdp):
+                    spec[lead + i] = fsdp
+                    break
+        return P(*spec)
+    if len(body) == 1:
+        return P(*spec)  # norms, biases, A_log ... replicated
+
+    # Mamba2 sublayer (§Perf iteration 6): B/C projections and the
+    # depthwise conv are shared across heads — shard them and every head
+    # re-gathers the SSM state; replicate them (they are tiny) and
+    # row-shard out_proj so its all-reduce is the only collective.
+    if "mixer/wB" in path or "mixer/wC" in path or "mixer/conv" in path:
+        return P(*spec)
+    if path.endswith("mixer/out_proj") and _fits(body[0], mesh, "model"):
+        spec[lead] = "model"
+        return P(*spec)
+
+    is_expert = any(k in path for k in ("ffn/wi", "ffn/wg", "ffn/wo")) \
+        and len(body) == 3  # [E, d, f] / [E, f, d]
+
+    # GQA-aware attention TP (§Perf iteration 5): sharding the flattened
+    # (heads·head_dim) projection dim when heads % model_size != 0 splits
+    # heads mid-head_dim and forces per-chunk score all-reduces inside the
+    # attention loops (1.3 TB/chip on qwen2 prefill).  Shard by whole
+    # heads when divisible, otherwise replicate (k/v projections are
+    # small under GQA).
+    if cfg is not None and "mixer/w" in path and strategy in ("tp", "zero3"):
+        msize = _axsize(mesh, "model")
+        is_kv = path.endswith("mixer/wk") or path.endswith("mixer/wv")
+        heads = cfg.num_kv_heads if is_kv else cfg.num_heads
+        if heads and heads % msize == 0:
+            # wq/wk/wv: [.., d, H*h] -> model on out dim; wo: [.., H*h, d]
+            dim = lead + (len(body) - 1 if not path.endswith("mixer/wo")
+                          else len(body) - 2)
+            spec[dim] = "model"
+            return P(*spec)
+        if path.endswith("mixer/wo") and cfg.num_heads % msize == 0:
+            spec[lead] = "model"
+            return P(*spec)
+        return P(*spec)  # replicate this projection
+
+    if strategy == "fsdp_all":
+        # storage sharding only: largest body dim -> model
+        dims = sorted(range(len(body)), key=lambda i: -body[i])
+        for i in dims:
+            if _fits(body[i], mesh, "model"):
+                spec[lead + i] = "model"
+                break
+        return P(*spec)
+
+    if is_expert and _fits(body[0], mesh, "model"):
+        # expert parallelism (+ v0: FSDP over the expert's input dim)
+        spec[lead] = "model"
+        if strategy == "zero3" and _fits(body[1], mesh, fsdp):
+            spec[lead + 1] = fsdp
+        return P(*spec)
+
+    # generic: last dim -> model (+ v0: previous dim -> fsdp)
+    if _fits(body[-1], mesh, "model"):
+        spec[lead + len(body) - 1] = "model"
+    if strategy == "zero3" and len(body) >= 2 and _fits(body[-2], mesh, fsdp):
+        spec[lead + len(body) - 2] = fsdp
+    return P(*spec)
+
+
+def params_shardings(params_shapes: Any, mesh, strategy: str = "tp",
+                     cfg=None) -> Any:
+    """Pytree of NamedShardings matching a params pytree (of shapes)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        stacked = key.startswith("blocks/")
+        spec = param_pspec(key, leaf, mesh, stacked=stacked,
+                           strategy=strategy, cfg=cfg)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _zero1_spec(leaf, base: P, mesh) -> P:
+    """Add data-axis sharding to the largest still-unsharded dim (ZeRO-1:
+    optimizer moments are sharded even where params are replicated)."""
+    fsdp = data_axes(mesh)
+    spec = list(base) + [None] * (leaf.ndim - len(base))
+    best, best_dim = None, -1
+    for i, (dim, s) in enumerate(zip(leaf.shape, spec)):
+        if s is None and _fits(dim, mesh, fsdp) and dim > best_dim:
+            best, best_dim = i, dim
+    if best is not None and best_dim >= _axsize(mesh, fsdp):
+        spec[best] = fsdp
+    return P(*spec)
+
+
+def opt_state_shardings(opt_shapes: Any, params_sh: Any, mesh,
+                        strategy: str = "tp") -> Any:
+    """m/v: param shardings + ZeRO-1 data-axis sharding; count replicated."""
+    if strategy == "zero3":
+        mv = params_sh
+    else:
+        mv = jax.tree.map(
+            lambda leaf, sh: NamedSharding(
+                mesh, _zero1_spec(leaf, sh.spec, mesh)),
+            opt_shapes["m"], params_sh)
+    return {
+        "m": mv,
+        "v": mv,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def batch_pspec(batch_shapes: Any, mesh, strategy: str = "tp") -> Any:
+    """Shard the inputs' batch dim on the data axes.
+
+    * "dp_seq":   additionally shard the sequence dim on ``model``.
+    * "fsdp_all": shard the batch over data×model (flattened mesh).
+    """
+    fsdp = data_axes(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        s: list = [None] * leaf.ndim
+        if strategy == "fsdp_all" and _fits(leaf.shape[0], mesh,
+                                            fsdp + ("model",)):
+            s[0] = fsdp + ("model",)
+            return NamedSharding(mesh, P(*s))
+        if _fits(leaf.shape[0], mesh, fsdp):
+            s[0] = fsdp
+        if (strategy == "dp_seq" and leaf.ndim >= 2
+                and leaf.shape[1] > 1 and _fits(leaf.shape[1], mesh, "model")):
+            s[1] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh, batch: int) -> Any:
+    """Decode-cache shardings.
+
+    Layout per leaf: [L, B, ...].  Batch dim -> data axes when divisible
+    (decode_32k); the attention-cache *sequence* dim -> ``model``
+    (sequence-parallel cache residency: decode attention becomes a
+    distributed softmax whose reductions are KB-sized — sharding kv-heads
+    or head_dim instead makes XLA all-gather the whole cache per block,
+    §Perf iteration 2).  For the single-request long-context shape (B=1)
+    the sequence dim is additionally sharded over the data axes.
+    Mamba state caches ([L,B,H,P,N] / conv [L,B,W,C]) shard heads /
+    channels on ``model``.
+    """
+    fsdp = data_axes(mesh)
+
+    def spec(leaf):
+        shape = leaf.shape
+        s: list = [None] * len(shape)
+        is_kv = len(shape) == 5 and shape[2] >= 1024  # [L,B,S,kv,h]
+        batched = len(shape) >= 2 and _fits(shape[1], mesh, fsdp)
+        if batched:
+            s[1] = fsdp  # batch
+        if is_kv:
+            if batched and _fits(shape[2], mesh, "model"):
+                s[2] = "model"   # sequence
+            elif not batched:
+                # B=1 long-context: spread the sequence over the mesh
+                if _fits(shape[2], mesh, fsdp + ("model",)):
+                    s[2] = fsdp + ("model",)
+                elif _fits(shape[2], mesh, "model"):
+                    s[2] = "model"
+        elif len(shape) == 5 and _fits(shape[2], mesh, "model"):
+            # mamba ssm state heads [L,B,H,P,N] — must match the
+            # model-sharded channels of wx, or every block re-gathers
+            # the state (§Perf iteration 6)
+            s[2] = "model"
+        elif len(shape) == 4 and _fits(shape[3], mesh, "model"):
+            s[3] = "model"   # mamba conv channels [L,B,W,C]
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, cache_shapes)

@@ -1,0 +1,129 @@
+"""Step builders + input specs for every (arch × input-shape) combination.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for the inputs of the selected step kind:
+
+* train:    {tokens|embeds, labels}                      -> metrics
+* prefill:  {tokens|embeds}                              -> (logits, cache)
+* decode:   {tokens, cache, index}                       -> (logits, cache)
+
+The VLM/audio modality frontend is a stub per the carve-out: embedding
+inputs arrive precomputed with shape [B, S, d_model].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    InputShape,
+    ModelConfig,
+    long_context_variant,
+    shape_is_applicable,
+)
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+PARAM_DTYPE = jnp.bfloat16
+CACHE_DTYPE = jnp.bfloat16
+
+
+def resolve_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Apply the sanctioned long-context variant where required."""
+    ok, why = shape_is_applicable(cfg, shape)
+    if ok:
+        return cfg
+    if shape.name == "long_500k" and cfg.is_decoder:
+        return long_context_variant(cfg)
+    raise ValueError(f"{cfg.name} x {shape.name} not applicable: {why}")
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_params(jax.random.PRNGKey(0), PARAM_DTYPE))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step inputs (excluding params/opt)."""
+    B, S = shape.global_batch, shape.seq_len
+    model = Model(cfg)
+    if shape.mode == "train":
+        batch: Dict[str, Any] = {"labels": _sds((B, S), jnp.int32)}
+        if cfg.embedding_inputs:
+            batch["embeds"] = _sds((B, S, cfg.d_model), PARAM_DTYPE)
+        else:
+            batch["tokens"] = _sds((B, S), jnp.int32)
+        return {"batch": batch}
+    if shape.mode == "prefill":
+        if cfg.embedding_inputs:
+            return {"embeds": _sds((B, S, cfg.d_model), PARAM_DTYPE)}
+        return {"tokens": _sds((B, S), jnp.int32)}
+    if shape.mode == "decode":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(B, S, CACHE_DTYPE))
+        return {"tokens": _sds((B, 1), jnp.int32),
+                "cache": cache,
+                "index": _sds((), jnp.int32)}
+    raise ValueError(shape.mode)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step_fn(cfg: ModelConfig, opt: AdamWConfig = AdamWConfig(),
+                       unroll: bool = False) -> Callable:
+    model = Model(cfg, remat=True, unroll_blocks=unroll)
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_fn(cfg: ModelConfig, shape: InputShape,
+                    unroll: bool = False) -> Callable:
+    model = Model(cfg, remat=True, unroll_blocks=unroll)
+    B, S = shape.global_batch, shape.seq_len
+
+    if cfg.is_decoder:
+        def prefill(params, **inputs):
+            cache = model.init_cache(B, S, CACHE_DTYPE)
+            logits, cache = model.prefill(
+                params, inputs.get("tokens"), inputs.get("embeds"), cache)
+            return logits, cache
+        return prefill
+
+    # encoder-only (hubert): "prefill" = full encoder forward
+    def encode(params, **inputs):
+        logits, _ = model.forward(params, inputs.get("tokens"),
+                                  inputs.get("embeds"))
+        return logits
+    return encode
+
+
+def make_decode_step_fn(cfg: ModelConfig, unroll: bool = False) -> Callable:
+    model = Model(cfg, unroll_blocks=unroll)
+
+    def decode_step(params, tokens, cache, index):
+        return model.decode_step(params, tokens, cache, index)
+
+    return decode_step
+
+
+def opt_state_shapes(params_sh: Any) -> Any:
+    return jax.eval_shape(init_adamw, params_sh)

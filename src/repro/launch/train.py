@@ -1,0 +1,50 @@
+"""Training driver.
+
+    python -m repro.launch.train --arch qwen2-0.5b --steps 100 \
+        [--smoke] [--seq 512] [--batch 8] [--checkpoint-dir ckpt/]
+
+``--smoke`` selects the reduced config of the same family (CPU-runnable);
+full configs are intended for the production mesh (see dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.training import AdamWConfig, train
+from repro.training.data import SyntheticEmbeds, SyntheticLM
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-0.5b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"training {cfg.name}: {cfg.num_blocks} blocks, "
+          f"d_model={cfg.d_model}, ~{cfg.param_count()/1e6:.1f}M params")
+    if cfg.embedding_inputs:
+        data = SyntheticEmbeds(cfg.d_model, cfg.vocab_size, args.seq,
+                               args.batch)
+    else:
+        data = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      total_steps=args.steps)
+    train(cfg, opt, iter(data), args.steps,
+          dtype=jnp.float32,
+          checkpoint_dir=args.checkpoint_dir,
+          checkpoint_every=args.checkpoint_every)
+
+
+if __name__ == "__main__":
+    main()

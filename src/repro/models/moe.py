@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-buffer dispatch.
+
+Dispatch is grouped and scatter-based (t5x-style groups = batch rows, so
+group-local token counts stay small and the cumulative slot assignment
+never crosses a data shard):  every (token, choice) pair claims a slot in
+a per-expert capacity buffer via a cumulative count; overflowing tokens
+are dropped for that expert (standard capacity-factor semantics).  Memory
+is O(B·E·C·d) with C = S·k·cf/E, instead of the O(T·E·C) one-hot dispatch
+tensor — the difference between ~10^8 and ~10^11 elements for
+deepseek-moe's 64-expert/top-6 router at 4k tokens per row.
+
+Supports DeepSeek-style *shared experts* (always-on, fused into one wide
+SwiGLU) next to the routed experts.  Returns the routing statistics needed
+for the load-balance auxiliary loss (Switch-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import init_mlp, mlp
+
+
+def init_moe(rng, d_model: int, m: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    s_in = d_model ** -0.5
+    s_out = m.d_expert ** -0.5
+    E = m.num_experts
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, E)) * s_in
+                   ).astype(jnp.float32),  # router math stays fp32
+        "wi": (jax.random.normal(ks[1], (E, d_model, m.d_expert)) * s_in
+               ).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, d_model, m.d_expert)) * s_in
+               ).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, m.d_expert, d_model)) * s_out
+               ).astype(dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d_model,
+                               m.num_shared_experts * m.d_shared, dtype)
+    return p
+
+
+@dataclasses.dataclass
+class RouterStats:
+    """Per-call routing statistics (fp32 scalars)."""
+    aux_loss: jnp.ndarray       # Switch load-balance loss
+    router_z: jnp.ndarray       # mean squared logsumexp (z-loss term)
+    dropped_frac: jnp.ndarray   # fraction of (token, choice) pairs dropped
+
+
+def capacity_per_group(group_tokens: int, m: MoEConfig) -> int:
+    c = int(group_tokens * m.num_experts_per_tok * m.capacity_factor
+            / m.num_experts)
+    # round up to an MXU-friendly multiple of 8 and keep >= 4
+    return max(4, -(-c // 8) * 8)
+
+
+def _route_group(xf: jnp.ndarray, router: jnp.ndarray, m: MoEConfig, C: int):
+    """One group's routing -> dispatch/combine tensors.
+
+    xf: [T, d].  Returns dispatch [T, E, C] (0/1), combine [T, E, C]
+    (gate-weighted) and the aux statistics.  Everything downstream is an
+    einsum — no scatter/gather, which XLA's SPMD partitioner handles
+    without replicating operands (§Perf iteration 3: the scatter-based
+    dispatch cost 105 GiB/chip of involuntary all-gathers per train step
+    on deepseek-moe).
+    """
+    T = xf.shape[0]
+    E, K = m.num_experts, m.num_experts_per_tok
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T, E]
+    gate, expert_idx = jax.lax.top_k(probs, K)                  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    choice_oh = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # [T,K,E]
+    flat_oh = choice_oh.reshape(T * K, E)
+    pos_in_expert = jnp.cumsum(flat_oh, axis=0) - flat_oh       # [T*K, E]
+    slot = jnp.sum(pos_in_expert * flat_oh, axis=-1).reshape(T, K)
+    keep = (slot < C).astype(jnp.float32)                       # [T, K]
+    slot_oh = jax.nn.one_hot(slot.clip(0, C - 1), C,
+                             dtype=jnp.float32)                 # [T,K,C]
+    slot_oh = slot_oh * keep[..., None]
+    dispatch = jnp.einsum("tke,tkc->tec", choice_oh, slot_oh)   # [T,E,C]
+    combine = jnp.einsum("tke,tkc,tk->tec", choice_oh, slot_oh,
+                         gate)                                  # [T,E,C]
+
+    f = jnp.mean(choice_oh.sum(1), axis=0)                      # [E]
+    pbar = jnp.mean(probs, axis=0)                              # [E]
+    zsum = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep)
+    return dispatch, combine, f, pbar, zsum, dropped
+
+
+def _group_tokens(total: int, S: int, preferred: int) -> int:
+    """Fixed token-group size: bounds the [Tg, E, C] dispatch tensor and
+    the capacity variance.  Decode (S=1) degenerates to per-token groups
+    (never drops)."""
+    tg = min(preferred, S if S > 1 else 1)
+    while total % tg:
+        tg //= 2
+    return max(tg, 1)
+
+
+def moe_forward(params, m: MoEConfig, x: jnp.ndarray,
+                group_size: int = 512) -> Tuple[jnp.ndarray, RouterStats]:
+    """x: [B, S, d] -> (y [B, S, d], stats)."""
+    B, S, d = x.shape
+    E = m.num_experts
+    T = B * S
+    Tg = _group_tokens(T, S, group_size)
+    G = T // Tg
+    C = capacity_per_group(Tg, m)
+    xg = x.reshape(G, Tg, d)
+
+    route = jax.vmap(lambda g: _route_group(g, params["router"], m, C))
+    dispatch, combine, f, pbar, zsum, dropped = route(xg)
+
+    buf = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xg)
+
+    # Expert matmuls batched over groups: [G,E,C,d] x [E,d,f].
+    h = jnp.einsum("gecd,edf->gecf", buf, params["wi"])
+    g = jnp.einsum("gecd,edf->gecf", buf, params["wg"])
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * h, params["wo"])
+
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), y)
+    out = out.reshape(B, S, d)
+
+    if "shared" in params:
+        out = out + mlp(params["shared"], x)
+
+    # Switch aux loss over the whole call: E * sum_e mean(f_e)/K * mean(p_e)
+    aux = E * jnp.sum(jnp.mean(f, 0) / m.num_experts_per_tok * jnp.mean(pbar, 0))
+    return out, RouterStats(aux_loss=aux,
+                            router_z=jnp.mean(zsum),
+                            dropped_frac=jnp.mean(dropped))

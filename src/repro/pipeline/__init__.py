@@ -1,0 +1,5 @@
+from repro.pipeline.executor import (  # noqa: F401
+    LocalPipelineExecutor,
+    MeasuredTimeSource,
+    stage_bounds,
+)

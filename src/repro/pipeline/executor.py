@@ -1,0 +1,144 @@
+"""Recompile-free pipeline-stage executor (DESIGN.md §2).
+
+The model's blocks are stacked along a leading ``[num_blocks, ...]`` axis;
+a pipeline stage executes blocks ``[lo, hi)`` via ``lax.fori_loop`` with
+*traced* bounds, so the ODIN rebalancer can move blocks between stages
+without triggering any recompilation — trial configurations run at full
+speed (beyond-paper: the paper processes queries serially during
+rebalancing; its exhaustive-search alternative took 42.5 minutes).
+
+This executor runs every stage on the host device(s) sequentially and
+*measures* per-stage wall time — exactly the signal ODIN consumes.  The
+SPMD multi-stage schedule (each stage on its own mesh slice) lives in
+``repro.pipeline.spmd``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as blk
+from repro.models.layers import embed, rms_norm, unembed
+
+
+def stage_bounds(config: Sequence[int]) -> List[tuple]:
+    """[(lo, hi)] block ranges per stage for a layer-count config."""
+    out, lo = [], 0
+    for c in config:
+        out.append((lo, lo + c))
+        lo += c
+    return out
+
+
+class LocalPipelineExecutor:
+    """Executes a stage-partitioned model, timing each stage.
+
+    One jitted ``stage_fn(params, x, positions, lo, hi)`` serves *all*
+    stages and *all* configurations — bounds are runtime arguments.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Dict):
+        self.cfg = cfg
+        self.params = params
+        cfg_ = cfg
+
+        @jax.jit
+        def stage_fn(params, x, positions, lo, hi):
+            def body(i, h):
+                bp = jax.tree.map(lambda p: p[i], params["blocks"])
+                h, _ = blk.block_forward(bp, cfg_, h, positions)
+                return h
+            return jax.lax.fori_loop(lo, hi, body, x)
+
+        @jax.jit
+        def embed_fn(params, tokens):
+            return embed(params["embed"], tokens)
+
+        @jax.jit
+        def head_fn(params, x):
+            x = rms_norm(x, params["final_norm"]["scale"], cfg_.rms_eps)
+            return unembed(params["head"], x)
+
+        self._stage_fn = stage_fn
+        self._embed_fn = embed_fn
+        self._head_fn = head_fn
+
+    # -- warmup ---------------------------------------------------------------
+    def warmup(self, batch: int, seq: int) -> None:
+        x = jnp.zeros((batch, seq), jnp.int32)
+        self.run_query(x, [self.cfg.num_blocks])
+
+    # -- execution --------------------------------------------------------------
+    def run_query(self, tokens: jnp.ndarray, config: Sequence[int],
+                  slowdowns: Optional[Sequence[float]] = None
+                  ) -> tuple:
+        """Run one query through the pipeline of ``config``.
+
+        Returns (logits, stage_times_seconds ndarray).  ``slowdowns``
+        emulates co-located interference per EP by stretching the
+        measured stage time (sleep), physically delaying the pipeline —
+        the scheduler only ever sees measured times.
+        """
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed_fn(self.params, tokens)
+        x.block_until_ready()
+        times = np.zeros(len(config))
+        for s, (lo, hi) in enumerate(stage_bounds(config)):
+            t0 = time.perf_counter()
+            x = self._stage_fn(self.params, x, positions,
+                               jnp.int32(lo), jnp.int32(hi))
+            x.block_until_ready()
+            dt = time.perf_counter() - t0
+            if slowdowns is not None and slowdowns[s] > 1.0:
+                extra = dt * (slowdowns[s] - 1.0)
+                time.sleep(extra)
+                dt += extra
+            times[s] = dt
+        logits = self._head_fn(self.params, x)
+        logits.block_until_ready()
+        return logits, times
+
+    def measure_block_times(self, tokens: jnp.ndarray,
+                            repeats: int = 3) -> np.ndarray:
+        """Per-block clean execution times (database column 0)."""
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed_fn(self.params, tokens)
+        L = self.cfg.num_blocks
+        times = np.zeros((repeats, L))
+        for r in range(repeats):
+            h = x
+            for i in range(L):
+                h.block_until_ready()
+                t0 = time.perf_counter()
+                h = self._stage_fn(self.params, h, positions,
+                                   jnp.int32(i), jnp.int32(i + 1))
+                h.block_until_ready()
+                times[r, i] = time.perf_counter() - t0
+        return times.min(axis=0)
+
+
+class MeasuredTimeSource:
+    """StageTimeSource over real measured per-block times + live scenarios.
+
+    Bridges the executor world to the ODIN/LLS controllers: stage time =
+    sum of its blocks' measured clean times × the EP's current slowdown.
+    """
+
+    def __init__(self, block_times: np.ndarray, slowdowns: np.ndarray):
+        self.block_times = np.asarray(block_times, float)
+        self.slowdowns = np.asarray(slowdowns, float)  # per EP
+
+    def stage_times(self, config: Sequence[int]) -> np.ndarray:
+        out = np.zeros(len(config))
+        lo = 0
+        for i, c in enumerate(config):
+            out[i] = self.block_times[lo:lo + c].sum() * self.slowdowns[i]
+            lo += c
+        return out

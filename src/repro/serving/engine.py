@@ -1,0 +1,137 @@
+"""Live serving engine: ODIN/LLS against *measured* stage times.
+
+This is the end-to-end integration of the paper's technique: real JAX
+model execution through the recompile-free pipeline executor, per-stage
+wall-clock monitoring, online interference detection, and stepwise
+rebalancing — one exploration trial per (serially processed) query,
+exactly as in the simulator, but with physical time.
+
+Interference is injected as per-EP slowdown factors (emulating co-located
+tenants; the measured-database builder in tools/ uses real co-running
+stressor processes instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.lls import LLSController
+from repro.core.odin import OdinController
+from repro.core.pipeline_state import balanced_config, throughput
+from repro.pipeline.executor import LocalPipelineExecutor, MeasuredTimeSource
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    latencies: np.ndarray
+    stage_time_max: np.ndarray
+    serial_mask: np.ndarray
+    configs: List[List[int]]
+    num_rebalances: int
+
+    @property
+    def throughputs(self) -> np.ndarray:
+        return 1.0 / np.maximum(self.stage_time_max, 1e-12)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "mean_latency_s": float(self.latencies.mean()),
+            "p99_latency_s": float(np.percentile(self.latencies, 99)),
+            "mean_throughput_qps": float(self.throughputs.mean()),
+            "rebalances": self.num_rebalances,
+            "serial_frac": float(self.serial_mask.mean()),
+        }
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Dict, num_eps: int,
+                 scheduler: str = "odin", alpha: int = 10,
+                 rel_threshold: float = 0.15):
+        self.cfg = cfg
+        self.executor = LocalPipelineExecutor(cfg, params)
+        self.num_eps = num_eps
+        self.scheduler = scheduler
+        if scheduler == "odin":
+            self.controller = OdinController(alpha=alpha,
+                                             rel_threshold=rel_threshold)
+        elif scheduler == "lls":
+            self.controller = LLSController(rel_threshold=rel_threshold)
+        elif scheduler == "none":
+            self.controller = None
+        else:
+            raise ValueError(scheduler)
+        self.config = balanced_config(cfg.num_blocks, num_eps)
+        self._explorer = None
+        # EMA of measured per-block times feeds the scheduler's trial
+        # evaluations between real executions.
+        self._block_times: Optional[np.ndarray] = None
+
+    def _update_block_estimates(self, config: Sequence[int],
+                                stage_times: np.ndarray,
+                                slowdowns: Sequence[float]) -> None:
+        """Refresh per-block clean-time estimates from a measured query."""
+        if self._block_times is None:
+            self._block_times = np.full(self.cfg.num_blocks, 1e-3)
+        lo = 0
+        for s, c in enumerate(config):
+            if c > 0:
+                per_block = stage_times[s] / max(slowdowns[s], 1e-9) / c
+                self._block_times[lo:lo + c] = (
+                    0.5 * self._block_times[lo:lo + c] + 0.5 * per_block)
+            lo += c
+
+    def serve(self, queries: Sequence[jnp.ndarray],
+              slowdown_schedule) -> ServeMetrics:
+        """slowdown_schedule(q) -> per-EP slowdown factors (>= 1.0)."""
+        n = len(queries)
+        latencies = np.zeros(n)
+        tmax = np.zeros(n)
+        serial = np.zeros(n, bool)
+        configs: List[List[int]] = []
+        rebalances = 0
+
+        for q, tokens in enumerate(queries):
+            slow = np.asarray(slowdown_schedule(q), float)
+            source = (MeasuredTimeSource(self._block_times, slow)
+                      if self._block_times is not None else None)
+
+            if self._explorer is not None and source is not None:
+                trial_cfg = self._explorer.step(source)
+                t0 = time.perf_counter()
+                _, st = self.executor.run_query(tokens, trial_cfg,
+                                                slowdowns=slow)
+                latencies[q] = time.perf_counter() - t0
+                tmax[q] = st[np.nonzero(trial_cfg)[0]].max()
+                serial[q] = True
+                configs.append(list(trial_cfg))
+                self._update_block_estimates(trial_cfg, st, slow)
+                if self._explorer.done:
+                    self.config = self._explorer.result().config
+                    self.controller.finish(self.config, source)
+                    self._explorer = None
+                continue
+
+            t0 = time.perf_counter()
+            _, st = self.executor.run_query(tokens, self.config,
+                                            slowdowns=slow)
+            latencies[q] = time.perf_counter() - t0
+            live = [i for i, c in enumerate(self.config) if c > 0]
+            tmax[q] = st[live].max()
+            configs.append(list(self.config))
+            self._update_block_estimates(self.config, st, slow)
+
+            if self.controller is not None:
+                source = MeasuredTimeSource(self._block_times, slow)
+                if self.controller.detect(self.config, source):
+                    rebalances += 1
+                    self._explorer = self.controller.make_explorer(self.config)
+
+        return ServeMetrics(latencies=latencies, stage_time_max=tmax,
+                            serial_mask=serial, configs=configs,
+                            num_rebalances=rebalances)

@@ -1,0 +1,2 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw  # noqa: F401
+from repro.training.train_loop import make_train_step, train  # noqa: F401

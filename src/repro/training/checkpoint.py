@@ -1,0 +1,61 @@
+"""NumPy-based checkpointing (orbax is not assumed installed).
+
+Saves a pytree as a flat .npz plus a JSON treedef manifest; atomic via
+tmp-rename.  Works for params and optimizer state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":   # e.g. ml_dtypes.bfloat16
+            arr = arr.astype(np.float32)    # widen for .npz portability
+        out[jax.tree_util.keystr(path)] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(path, f".tmp-{step}.npz")
+    np.savez(tmp, **flat)
+    os.replace(tmp, os.path.join(path, f"step-{step}.npz"))
+    with open(os.path.join(path, "latest.json"), "w") as f:
+        json.dump({"step": step}, f)
+
+
+def latest_step(path: str) -> int:
+    try:
+        with open(os.path.join(path, "latest.json")) as f:
+            return json.load(f)["step"]
+    except FileNotFoundError:
+        return -1
+
+
+def load_checkpoint(path: str, tree_like: Any, step: int = -1) -> Any:
+    """Restore into the structure of ``tree_like``."""
+    if step < 0:
+        step = latest_step(path)
+        if step < 0:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"step-{step}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path_, leaf in flat:
+        key = jax.tree_util.keystr(path_)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if arr.dtype != leaf.dtype:
+            arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

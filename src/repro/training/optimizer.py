@@ -1,0 +1,81 @@
+"""Hand-rolled AdamW (optax is not assumed installed).
+
+State is a pytree mirroring params: {m, v, count}.  Master math in fp32
+regardless of param dtype; weight decay is decoupled.  The state layout
+is sharding-friendly: m/v inherit the param PartitionSpec (ZeRO-style
+extra sharding over the data axis is applied by launch/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(c: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(c.warmup_steps, 1)
+    prog = jnp.clip((step - c.warmup_steps)
+                    / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0, 1)
+    cos = c.min_lr_frac + (1 - c.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return c.lr * jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def init_adamw(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(c: AdamWConfig, params, grads, state
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(c, count)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * jnp.square(g)
+        mhat = m / (1 - c.b1 ** count.astype(jnp.float32))
+        vhat = v / (1 - c.b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + c.eps)
+        step = step + c.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,60 @@
+"""Training loop: loss + grad + AdamW, optionally pjit-sharded."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, remat: bool = True
+                    ) -> Callable:
+    model = Model(cfg, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt, params, grads, opt_state)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, opt: AdamWConfig, data_iter, num_steps: int,
+          rng=None, dtype=jnp.float32, log_every: int = 10,
+          checkpoint_dir: Optional[str] = None, checkpoint_every: int = 0,
+          params=None, log_fn=print) -> Dict:
+    model = Model(cfg, remat=True)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    if params is None:
+        params = model.init_params(rng, dtype)
+    opt_state = init_adamw(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    history = []
+    t_start = time.perf_counter()
+    for step, batch in enumerate(data_iter):
+        if step >= num_steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t_start
+            history.append(m)
+            log_fn(f"step {step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                   f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}")
+        if checkpoint_dir and checkpoint_every and step and \
+                step % checkpoint_every == 0:
+            from repro.training.checkpoint import save_checkpoint
+            save_checkpoint(checkpoint_dir, {"params": params,
+                                             "opt": opt_state}, step)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,52 @@
+"""Analytic cost model validated against XLA cost_analysis (unrolled HLO)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.base import InputShape
+from repro.launch.analytic import analytic_totals
+from repro.launch import steps as st
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mixtral-8x22b",
+                                  "mamba2-370m", "hubert-xlarge"])
+def test_analytic_flops_vs_hlo_train(arch):
+    """Unrolled-HLO cost_analysis agrees with the analytic model ±25%."""
+    cfg = get_smoke_config(arch)
+    shape = InputShape("tiny_train", 128, 4, "train")
+    fn = st.make_train_step_fn(cfg, unroll=True)
+    params_sh = st.param_shapes(cfg)
+    opt_sh = st.opt_state_shapes(params_sh)
+    specs = st.input_specs(cfg, shape)
+    c = jax.jit(fn).lower(params_sh, opt_sh,
+                          specs["batch"]).compile().cost_analysis()
+    if isinstance(c, list):
+        c = c[0]
+    hlo = float(c.get("flops", 0.0))
+    ana = analytic_totals(cfg, shape, remat=True)["flops"]
+    assert hlo == pytest.approx(ana, rel=0.25)
+
+
+def test_analytic_scaling_laws():
+    """Analytic model scales correctly in S, B, and L."""
+    cfg = get_smoke_config("qwen3-8b")
+    f = lambda s, b: analytic_totals(
+        cfg, InputShape("x", s, b, "train"))["flops"]
+    # doubling batch doubles flops
+    assert f(128, 8) == pytest.approx(2 * f(128, 4), rel=1e-6)
+    # doubling seq more than doubles (attention quadratic term)
+    assert f(256, 4) > 2 * f(128, 4)
+    cfg2 = dataclasses.replace(cfg, num_layers=4)
+    assert analytic_totals(cfg2, InputShape("x", 128, 4, "train"))["flops"] > \
+        analytic_totals(cfg, InputShape("x", 128, 4, "train"))["flops"]
+
+
+def test_decode_cost_is_cache_bound():
+    """Decode bytes are dominated by the KV cache, not params alone."""
+    from repro.configs import get_config
+    cfg = get_config("qwen3-8b")
+    t = analytic_totals(cfg, InputShape("decode_32k", 32768, 128, "decode"))
+    param_bytes = cfg.param_count() * 2
+    assert t["bytes"] > param_bytes  # cache read adds on top

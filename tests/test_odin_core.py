@@ -1,0 +1,205 @@
+"""Unit + property tests for the paper-faithful ODIN core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    SimTimeSource,
+    balanced_config,
+    brute_force_partition,
+    lls_rebalance,
+    odin_rebalance,
+    optimal_partition,
+    paper_scenarios,
+    pipelined_latency,
+    serial_latency,
+    synthetic_database,
+    throughput,
+    utilization,
+    waiting_times,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# database
+# ---------------------------------------------------------------------------
+
+
+def test_database_shape(db):
+    assert db.num_layers == 16
+    assert db.num_scenarios == 12            # paper Table 1
+    assert np.all(db.table > 0)
+    # interference can only slow layers down
+    assert np.all(db.table[:, 1:] >= db.table[:, :1])
+
+
+def test_database_roundtrip(tmp_path, db):
+    p = str(tmp_path / "db.json")
+    db.save(p)
+    from repro.core import LayerDatabase
+    db2 = LayerDatabase.load(p)
+    np.testing.assert_allclose(db.table, db2.table)
+    assert db2.scenario_names == db.scenario_names
+
+
+def test_scenarios_match_paper_table1():
+    scens = paper_scenarios()
+    assert len(scens) == 12
+    assert {s.stressor for s in scens} == {"cpu", "membw"}
+    # Fig. 4 impact range: ~1.05x to ~3.5x
+    assert min(s.slowdown_mean for s in scens) > 1.0
+    assert max(s.slowdown_mean for s in scens) <= 3.5
+
+
+# ---------------------------------------------------------------------------
+# throughput / latency model
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_is_bottleneck_reciprocal():
+    assert throughput(np.array([2.0, 4.0, 1.0])) == 0.25
+
+
+def test_waiting_times_recurrence():
+    t = np.array([3.0, 1.0, 2.0])
+    w = waiting_times(t)
+    assert w[0] == 0.0
+    assert w[1] == 2.0          # w1 = w0 + t0 - t1
+    assert w[2] == 1.0          # w2 = w1 + t1 - t2
+    v = utilization(t)
+    assert v[0] == 1.0
+    assert np.all((0 <= v) & (v <= 1))
+
+
+def test_latency_models():
+    t = np.array([1.0, 1.0, 1.0])
+    assert pipelined_latency(t) == pytest.approx(3.0)
+    assert serial_latency(t) == pytest.approx(3.0)
+    t = np.array([4.0, 1.0, 1.0])
+    # stalls behind the bottleneck add waiting
+    assert pipelined_latency(t) > serial_latency(t)
+
+
+# ---------------------------------------------------------------------------
+# oracle
+# ---------------------------------------------------------------------------
+
+
+def test_dp_matches_brute_force(db):
+    for scen in ([0] * 4, [12, 0, 0, 0], [0, 3, 0, 7]):
+        c1, t1 = optimal_partition(db, scen, 4)
+        c2, t2 = brute_force_partition(db, scen, 4)
+        assert t1 == pytest.approx(t2)
+        assert sum(c1) == db.num_layers
+
+
+@given(st.lists(st.integers(0, 12), min_size=2, max_size=5),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_dp_optimal_property(scenarios, seed):
+    db = synthetic_database("vgg16", seed=seed % 1000)
+    n = len(scenarios)
+    cfg, t_opt = optimal_partition(db, scenarios, n)
+    assert sum(cfg) == db.num_layers
+    # no balanced or random config may beat the DP optimum
+    src = SimTimeSource(db, scenarios)
+    assert throughput(src.stage_times(balanced_config(16, n))) <= t_opt + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# ODIN Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def test_odin_improves_under_interference(db):
+    cfg0, peak = optimal_partition(db, [0] * 4, 4)
+    src = SimTimeSource(db, [12, 0, 0, 0])
+    degraded = throughput(src.stage_times(cfg0))
+    res = odin_rebalance(cfg0, 10, src)
+    assert res.throughput > degraded
+    assert sum(res.config) == db.num_layers
+
+
+def test_odin_trial_counts_match_paper(db):
+    """Paper §4.2: ~4 serial queries for alpha=2, ~12 for alpha=10."""
+    cfg0, _ = optimal_partition(db, [0] * 4, 4)
+    counts = {2: [], 10: []}
+    for alpha in (2, 10):
+        for ep in range(4):
+            for scen in (4, 8, 12):
+                s = [0] * 4
+                s[ep] = scen
+                res = odin_rebalance(cfg0, alpha, SimTimeSource(db, s))
+                counts[alpha].append(res.num_trials)
+    assert 2 <= np.mean(counts[2]) <= 8
+    assert 8 <= np.mean(counts[10]) <= 20
+
+
+def test_odin_near_optimal(db):
+    """Fig. 9: ODIN configurations are close to the exhaustive search."""
+    cfg0, _ = optimal_partition(db, [0] * 4, 4)
+    ratios = []
+    for ep in range(4):
+        for scen in range(1, 13):
+            s = [0] * 4
+            s[ep] = scen
+            src = SimTimeSource(db, s)
+            res = odin_rebalance(cfg0, 10, src)
+            _, t_opt = optimal_partition(db, s, 4)
+            ratios.append(res.throughput / t_opt)
+    assert np.mean(ratios) > 0.85
+    assert min(ratios) > 0.6
+
+
+@given(st.integers(2, 6), st.integers(1, 12), st.integers(0, 5),
+       st.integers(1, 10))
+@settings(max_examples=40, deadline=None)
+def test_odin_invariants(n_eps, scen, ep_mod, alpha):
+    """Layer conservation + returned throughput is best-seen (property)."""
+    db = synthetic_database("resnet50", seed=1)
+    cfg0 = balanced_config(db.num_layers, n_eps)
+    scenarios = [0] * n_eps
+    scenarios[ep_mod % n_eps] = scen
+    src = SimTimeSource(db, scenarios)
+    res = odin_rebalance(cfg0, alpha, src)
+    assert sum(res.config) == db.num_layers
+    assert all(c >= 0 for c in res.config)
+    assert res.throughput == pytest.approx(
+        throughput(src.stage_times(res.config)))
+    # never worse than doing nothing (ODIN returns best-seen)
+    assert res.throughput >= throughput(src.stage_times(cfg0)) - 1e-12
+    # every trial conserves layers
+    for tr in res.trials:
+        assert sum(tr.config) == db.num_layers
+
+
+# ---------------------------------------------------------------------------
+# LLS baseline
+# ---------------------------------------------------------------------------
+
+
+def test_lls_never_degrades(db):
+    cfg0, _ = optimal_partition(db, [0] * 4, 4)
+    for scen_col in range(1, 13):
+        s = [0, 0, scen_col, 0]
+        src = SimTimeSource(db, s)
+        res = lls_rebalance(cfg0, src)
+        assert res.throughput >= throughput(src.stage_times(cfg0)) - 1e-12
+        assert sum(res.config) == db.num_layers
+
+
+def test_lls_short_phase(db):
+    """Paper: ~1 serially processed query per LLS rebalancing phase."""
+    cfg0, _ = optimal_partition(db, [0] * 4, 4)
+    trials = []
+    for ep in range(4):
+        s = [0] * 4
+        s[ep] = 6
+        trials.append(lls_rebalance(cfg0, SimTimeSource(db, s)).num_trials)
+    assert np.mean(trials) <= 8

@@ -1,0 +1,109 @@
+"""Pipeline executor + SPMD schedule tests."""
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.pipeline import LocalPipelineExecutor, MeasuredTimeSource, stage_bounds
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), num_layers=6)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+    return cfg, model, params
+
+
+def test_stage_bounds():
+    assert stage_bounds([2, 0, 3]) == [(0, 2), (2, 2), (2, 5)]
+
+
+def test_executor_matches_model(setup):
+    """Pipeline-partitioned execution == monolithic forward, any config."""
+    cfg, model, params = setup
+    ex = LocalPipelineExecutor(cfg, params)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 32), 0,
+                                cfg.vocab_size)
+    ref_logits, _ = model.forward(params, tokens=tokens)
+    for config in ([2, 2, 2], [1, 3, 2], [6], [3, 0, 3], [1, 1, 1, 1, 1, 1]):
+        logits, times = ex.run_query(tokens, config)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref_logits),
+                                   atol=1e-4, rtol=1e-4)
+        assert times.shape == (len(config),)
+        assert np.all(times[np.asarray(config) > 0] > 0)
+
+
+def test_executor_no_recompile_across_configs(setup):
+    """Dynamic boundaries: one compiled stage_fn serves every config."""
+    cfg, model, params = setup
+    ex = LocalPipelineExecutor(cfg, params)
+    tokens = jnp.zeros((1, 32), jnp.int32)
+    ex.run_query(tokens, [3, 3])
+    n0 = ex._stage_fn._cache_size()
+    for config in ([2, 4], [1, 5], [6, 0], [4, 2]):
+        ex.run_query(tokens, config)
+    assert ex._stage_fn._cache_size() == n0
+
+
+def test_measured_time_source():
+    src = MeasuredTimeSource(np.array([1.0, 2.0, 3.0, 4.0]),
+                             np.array([1.0, 2.0]))
+    t = src.stage_times([2, 2])
+    assert t[0] == pytest.approx(3.0)
+    assert t[1] == pytest.approx(14.0)   # (3+4) * 2.0
+
+
+def test_spmd_pipeline_subprocess():
+    """GPipe shard_map schedule on 4 host devices == monolithic forward,
+    incl. uneven and empty-stage configs (run in a subprocess because
+    XLA_FLAGS must be set before JAX initializes)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.models.layers import embed
+import repro.models.blocks as blk
+from repro.pipeline.spmd import pipelined_forward
+
+cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), num_layers=8)
+model = Model(cfg)
+params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+mesh = jax.make_mesh((4,), ("stage",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+B, S, M = 2, 32, 4
+tokens = jax.random.randint(jax.random.PRNGKey(1), (M, B, S), 0,
+                            cfg.vocab_size)
+inputs = jax.vmap(lambda t: embed(params["embed"], t))(tokens)
+pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+def ref(t):
+    x = embed(params["embed"], t)
+    def body(c, bp):
+        h, _ = blk.block_forward(bp, cfg, c, pos)
+        return h, None
+    h, _ = jax.lax.scan(body, x, params["blocks"])
+    return h
+refs = np.stack([np.asarray(ref(tokens[m])) for m in range(M)])
+for config in ([2,2,2,2], [1,3,2,2], [3,0,3,2]):
+    with mesh:
+        out = pipelined_forward(cfg, mesh, params["blocks"], config,
+                                inputs, cap=4)
+    err = np.max(np.abs(np.asarray(out) - refs))
+    assert err < 1e-4, (config, err)
+print("OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                       "HOME": "/root"}, cwd="/root/repo")
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

@@ -1,0 +1,82 @@
+"""Roofline machinery: HLO collective parser (loop-aware) + terms."""
+import pytest
+
+from repro.launch.roofline import (
+    HBM_BW,
+    PEAK_FLOPS,
+    RooflineTerms,
+    _shape_bytes,
+    _trip_count,
+    collective_bytes,
+)
+
+HLO_FLAT = """
+HloModule test
+
+ENTRY %main.1 (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %ag = f32[32,8]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %ar = f32[8,8]{1,0} all-reduce(%p0), to_apply=%add
+  ROOT %out = f32[8,8] add(%p0, %p0)
+}
+"""
+
+HLO_LOOP = """
+HloModule test
+
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(6)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%arg), index=1
+  %ag = f32[32,8]{1,0} all-gather(%x), dimensions={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%iv, %x)
+}
+
+ENTRY %main.2 (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "8,8") == 256
+    assert _shape_bytes("bf16", "4,2,2") == 32
+    assert _shape_bytes("f32", "") == 4
+
+
+def test_flat_collectives():
+    cb = collective_bytes(HLO_FLAT)
+    assert cb["all-gather"] == 32 * 8 * 4
+    assert cb["all-reduce"] == 8 * 8 * 4
+
+
+def test_loop_aware_collectives():
+    cb = collective_bytes(HLO_LOOP)
+    # all-gather inside a 6-trip while loop counts 6x
+    assert cb["all-gather"] == 6 * 32 * 8 * 4
+
+
+def test_trip_count_parse():
+    assert _trip_count("%c = s32[] constant(24)\ncompare") == 24
+    assert _trip_count("no constants") == 1
+
+
+def test_terms_bottleneck():
+    t = RooflineTerms(
+        flops=197e12 * 256,          # exactly 1s of compute on 256 chips
+        bytes_accessed=819e9,        # ~0.004s memory
+        hlo_flops=0, hlo_bytes=0,
+        coll_bytes=50e9 * 3,         # 3s of collectives
+        coll_breakdown={}, chips=256, model_flops=197e12 * 128,
+    ).finalize()
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.bottleneck == "collective"
+    assert t.useful_ratio == pytest.approx(0.5)

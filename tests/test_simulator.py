@@ -1,0 +1,82 @@
+"""Simulator behaviour + paper-claim sanity checks (fast settings)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import generate_events, simulate, synthetic_database
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+def test_events_schedule():
+    evs = generate_events(1000, 4, 12, freq_period=100, duration=50, seed=0)
+    assert len(evs) == 9
+    assert all(1 <= e.scenario <= 12 for e in evs)
+    assert all(0 <= e.ep < 4 for e in evs)
+
+
+def test_no_interference_no_rebalance(db):
+    r = simulate(db, 4, scheduler="odin", num_queries=200,
+                 events=[])
+    assert r.num_rebalances == 0
+    assert np.all(r.throughputs == r.throughputs[0])
+    assert r.throughputs[0] == pytest.approx(r.peak_throughput)
+
+
+def test_odin_beats_static_under_sustained_interference(db):
+    kw = dict(num_queries=1500, freq_period=100, duration=100, seed=3)
+    r_odin = simulate(db, 4, scheduler="odin", alpha=10, **kw)
+    r_none = simulate(db, 4, scheduler="none", **kw)
+    assert r_odin.throughputs.mean() > r_none.throughputs.mean()
+    assert r_odin.num_rebalances > 0
+
+
+def test_oracle_upper_bounds_odin(db):
+    kw = dict(num_queries=800, freq_period=50, duration=50, seed=5)
+    r_odin = simulate(db, 4, scheduler="odin", alpha=10, **kw)
+    r_orc = simulate(db, 4, scheduler="oracle", **kw)
+    assert r_orc.throughputs.mean() >= r_odin.throughputs.mean() * 0.98
+
+
+def test_slo_violation_monotone_in_level(db):
+    r = simulate(db, 4, scheduler="odin", alpha=10, num_queries=800,
+                 freq_period=20, duration=20, seed=7)
+    v = [r.slo_violations(level) for level in (0.9, 0.7, 0.5, 0.3)]
+    assert all(a >= b - 1e-12 for a, b in zip(v, v[1:]))
+
+
+def test_serial_fraction_increases_with_frequency(db):
+    r_fast = simulate(db, 4, scheduler="odin", alpha=10, num_queries=1000,
+                      freq_period=2, duration=2, seed=1)
+    r_slow = simulate(db, 4, scheduler="odin", alpha=10, num_queries=1000,
+                      freq_period=100, duration=2, seed=1)
+    assert r_fast.rebalance_fraction > r_slow.rebalance_fraction
+
+
+def test_mitigation_phase_length_matches_paper(db):
+    """Mitigation takes 5-15 timesteps (paper abstract / §4.2)."""
+    r = simulate(db, 4, scheduler="odin", alpha=10, num_queries=2000,
+                 freq_period=100, duration=100, seed=2)
+    assert r.mitigation_lengths, "no rebalancing happened"
+    assert 5 <= np.mean(r.mitigation_lengths) <= 20
+
+
+@given(st.sampled_from(["odin", "lls", "none"]),
+       st.integers(2, 5), st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_simulator_properties(sched, n_eps, seed):
+    db = synthetic_database("resnet50", seed=7)
+    r = simulate(db, n_eps, scheduler=sched, alpha=4, num_queries=300,
+                 freq_period=25, duration=25, seed=seed)
+    assert r.latencies.shape == (300,)
+    assert np.all(r.latencies > 0)
+    assert np.all(r.throughputs > 0)
+    # every trace config conserves layers
+    for c in r.configs_trace:
+        assert sum(c) == db.num_layers
+    # resource-constrained oracle bounds observed throughput
+    assert np.all(r.throughputs <= r.rc_throughputs + 1e-9)
