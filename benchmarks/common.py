@@ -22,6 +22,7 @@ SCHEDULERS = {
     "odin_a10": dict(scheduler="odin", alpha=10),
     "odin_a2": dict(scheduler="odin", alpha=2),
     "lls": dict(scheduler="lls"),
+    "hybrid": dict(scheduler="hybrid", alpha=10),
 }
 
 

@@ -22,6 +22,7 @@ def run() -> list:
     for name, kw in (("odin_a10", dict(scheduler="odin", alpha=10)),
                      ("odin_a2", dict(scheduler="odin", alpha=2)),
                      ("lls", dict(scheduler="lls")),
+                     ("hybrid", dict(scheduler="hybrid", alpha=10)),
                      ("none", dict(scheduler="none"))):
         for f, d in PAPER_SETTINGS:
             for seed in (0, 1, 2):

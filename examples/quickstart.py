@@ -52,3 +52,21 @@ print(f"DP oracle    : {oracle_cfg} -> {oracle_T:.5f} "
 rec = odin_rebalance(config, 10, src).throughput
 print(f"\nODIN recovered {100 * rec / oracle_T:.0f}% of the "
       f"resource-constrained optimum.")
+
+# Every mitigation policy is a pluggable scheduler (docs/SCHEDULERS.md):
+# build one by name and drive it with the shared rebalance runtime —
+# the same state machine the simulator and the live engine use.
+from repro.schedulers import RebalanceRuntime, available_schedulers, \
+    make_scheduler  # noqa: E402
+
+print(f"\nregistered schedulers: {', '.join(available_schedulers())}")
+rt = RebalanceRuntime(make_scheduler("hybrid", alpha=10), config)
+rt.poll(clean)         # one quiet query records the clean baseline
+trials = 0
+while True:
+    step = rt.poll(src)
+    if not step.serial:
+        break
+    trials += 1
+print(f"hybrid policy: {rt.config} -> "
+      f"{throughput(src.stage_times(rt.config)):.5f} ({trials} trials)")

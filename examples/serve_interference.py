@@ -46,7 +46,7 @@ def schedule(q):
 
 
 results = {}
-for sched in ("odin", "lls", "none"):
+for sched in ("odin", "lls", "hybrid", "none"):
     eng = ServingEngine(cfg, params, num_eps=NUM_EPS, scheduler=sched,
                         alpha=4)
     eng.executor.warmup(1, SEQ)

@@ -10,9 +10,9 @@ from repro.core.exhaustive import (  # noqa: F401
     brute_force_partition,
     optimal_partition,
 )
-from repro.core.lls import LLSController, lls_rebalance  # noqa: F401
+from repro.core.lls import LLSExplorer, lls_rebalance  # noqa: F401
 from repro.core.odin import (  # noqa: F401
-    OdinController,
+    OdinExplorer,
     RebalanceResult,
     Trial,
     odin_rebalance,
@@ -35,3 +35,19 @@ from repro.core.simulator import (  # noqa: F401
     generate_events,
     simulate,
 )
+
+
+def __getattr__(name):
+    """Back-compat: the online controllers moved to repro.schedulers.
+
+    ``OdinController`` / ``LLSController`` remain importable from
+    ``repro.core`` as aliases of the registry policies.  Lazy so that
+    ``import repro.schedulers`` (which imports repro.core submodules
+    while its own policies module is still executing) cannot deadlock
+    the two packages' initialisation.
+    """
+    aliases = {"OdinController": "OdinPolicy", "LLSController": "LLSPolicy"}
+    if name in aliases:
+        from repro.schedulers import policies
+        return getattr(policies, aliases[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -21,6 +21,8 @@ from repro.core.pipeline_state import StageTimeSource, throughput, utilization
 class LLSExplorer:
     """One greedy move per ``step()`` (one serial query each)."""
 
+    serial = True   # each step costs one serially-processed query
+
     def __init__(self, config: Sequence[int], max_moves: int = 64):
         self.C = list(config)
         self.max_moves = max_moves
@@ -76,31 +78,12 @@ def lls_rebalance(config: Sequence[int], source: StageTimeSource,
     return ex.result()
 
 
-class LLSController:
-    """Online wrapper with the same detection rule as OdinController."""
+# The online wrapper (shared detection + explorer factory) lives in
+# repro.schedulers as LLSPolicy; ``LLSController`` stays importable.
 
-    def __init__(self, rel_threshold: float = 0.02, max_moves: int = 64):
-        self.rel_threshold = rel_threshold
-        self.max_moves = max_moves
-        self._last_bottleneck: Optional[float] = None
 
-    def detect(self, config: Sequence[int], source: StageTimeSource) -> bool:
-        times = source.stage_times(config)
-        idx = _nonempty(config)
-        bottleneck = max(float(times[i]) for i in idx)
-        if self._last_bottleneck is None:
-            self._last_bottleneck = bottleneck
-            return False
-        rel = abs(bottleneck - self._last_bottleneck) / self._last_bottleneck
-        return rel > self.rel_threshold
-
-    def make_explorer(self, config: Sequence[int]) -> LLSExplorer:
-        return LLSExplorer(config, self.max_moves)
-
-    def finish(self, config: Sequence[int], source: StageTimeSource) -> None:
-        times = source.stage_times(config)
-        idx = _nonempty(config)
-        self._last_bottleneck = max(float(times[i]) for i in idx)
-
-    def reset(self) -> None:
-        self._last_bottleneck = None
+def __getattr__(name: str):
+    if name == "LLSController":
+        from repro.schedulers.policies import LLSPolicy
+        return LLSPolicy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -84,6 +84,8 @@ def _lightest_in_direction(times: np.ndarray, config: Sequence[int],
 class OdinExplorer:
     """One Algorithm-1 iteration per ``step()`` (one serial query each)."""
 
+    serial = True   # each step costs one serially-processed query
+
     def __init__(self, config: Sequence[int], alpha: int):
         self.C = list(config)
         self.alpha = alpha
@@ -94,10 +96,13 @@ class OdinExplorer:
         self.done = False
 
     # -- internals -----------------------------------------------------------
-    def _move(self, src: int, dst: int) -> None:
-        if self.C[src] > 1:
-            self.C[src] -= 1
-            self.C[dst] += 1
+    def _move(self, src: int, dst: int) -> bool:
+        """Move one layer src -> dst; False if src cannot donate."""
+        if self.C[src] <= 1:
+            return False
+        self.C[src] -= 1
+        self.C[dst] += 1
+        return True
 
     def step(self, source: StageTimeSource) -> List[int]:
         """Run one exploration iteration; returns the trial configuration
@@ -143,7 +148,16 @@ class OdinExplorer:
             self.C_opt = list(C)
             return list(C)
 
-        self._move(affected, lightest)
+        if not self._move(affected, lightest):
+            # Affected stage holds a single layer and cannot donate: the
+            # configuration is unchanged, so re-measuring it would record
+            # a duplicate-config trial as a fresh measurement.  Count a
+            # non-improving step (so patience still terminates the phase)
+            # without emitting a trial.
+            self.gamma += 1
+            if self.gamma >= self.alpha:
+                self.done = True
+            return list(C)
         T_new = throughput(source.stage_times(C))
 
         if T_new < self.T:
@@ -151,15 +165,21 @@ class OdinExplorer:
             self.trials.append(Trial(list(C), T_new, False))
         elif T_new == self.T:
             # Local-optimum escape (Lines 24-27): one extra layer.
-            self._move(affected, lightest)
-            T_new = throughput(source.stage_times(C))
-            self.gamma += 1
-            improved = T_new > self.T
-            if improved:
-                self.T = T_new
-                self.C_opt = list(C)
-                self.gamma = 0
-            self.trials.append(Trial(list(C), T_new, improved))
+            if self._move(affected, lightest):
+                T_new = throughput(source.stage_times(C))
+                self.gamma += 1
+                improved = T_new > self.T
+                if improved:
+                    self.T = T_new
+                    self.C_opt = list(C)
+                    self.gamma = 0
+                self.trials.append(Trial(list(C), T_new, improved))
+            else:
+                # Escape move failed (donor down to 1 layer): keep the
+                # already-measured single-move trial instead of recording
+                # the same configuration again as a fresh measurement.
+                self.gamma += 1
+                self.trials.append(Trial(list(C), T_new, False))
         else:
             self.gamma = 0
             self.T = T_new
@@ -188,40 +208,14 @@ def odin_rebalance(config: Sequence[int], alpha: int,
 
 
 # ---------------------------------------------------------------------------
-# Online monitor (paper §3.1): trigger rebalancing when the slowest stage's
-# execution time changes (up = interference arrived; down = it left).
+# The online monitor (paper §3.1) lives in repro.schedulers: the shared
+# InterferenceDetector + OdinPolicy replace the old per-algorithm
+# controller.  ``OdinController`` remains importable as an alias.
 # ---------------------------------------------------------------------------
 
 
-class OdinController:
-    """Stateful online detector + explorer factory."""
-
-    def __init__(self, alpha: int, rel_threshold: float = 0.02):
-        self.alpha = alpha
-        self.rel_threshold = rel_threshold
-        self._last_bottleneck: Optional[float] = None
-
-    def detect(self, config: Sequence[int], source: StageTimeSource) -> bool:
-        """True if the bottleneck stage time changed beyond the threshold."""
-        times = source.stage_times(config)
-        idx = _nonempty(config)
-        bottleneck = max(float(times[i]) for i in idx)
-        if self._last_bottleneck is None:
-            self._last_bottleneck = bottleneck
-            return False
-        rel = abs(bottleneck - self._last_bottleneck) / self._last_bottleneck
-        if rel <= self.rel_threshold:
-            return False
-        return True
-
-    def make_explorer(self, config: Sequence[int]) -> OdinExplorer:
-        return OdinExplorer(config, self.alpha)
-
-    def finish(self, config: Sequence[int], source: StageTimeSource) -> None:
-        """Record the post-rebalance bottleneck as the new reference."""
-        times = source.stage_times(config)
-        idx = _nonempty(config)
-        self._last_bottleneck = max(float(times[i]) for i in idx)
-
-    def reset(self) -> None:
-        self._last_bottleneck = None
+def __getattr__(name: str):
+    if name == "OdinController":
+        from repro.schedulers.policies import OdinPolicy
+        return OdinPolicy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -3,28 +3,33 @@
 Simulates an inference pipeline of N stages bound to N execution places
 serving a window of queries (paper: 4000).  Interference events start
 every ``freq_period`` queries on a random EP with a random scenario from
-the database and last ``duration`` queries.  The scheduler under test
-(ODIN / LLS / oracle / none) observes only per-stage execution times;
-during a rebalancing phase, queries are processed serially — one query
-per trial — exactly the paper's exploration-overhead accounting.
+the database and last ``duration`` queries.  The scheduler under test is
+any registered :mod:`repro.schedulers` policy (``odin`` / ``lls`` /
+``oracle`` / ``none`` / ``hybrid`` / user plugins) and observes only
+per-stage execution times; the per-query detect → explore → commit state
+machine is the :class:`~repro.schedulers.runtime.RebalanceRuntime`
+shared with the live serving engine, so during a rebalancing phase
+queries are processed serially — one query per trial — exactly the
+paper's exploration-overhead accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.database import LayerDatabase
 from repro.core.exhaustive import optimal_partition
-from repro.core.lls import LLSController
-from repro.core.odin import OdinController
 from repro.core.pipeline_state import (
     balanced_config,
     pipelined_latency,
     serial_latency,
     throughput,
 )
+from repro.schedulers.base import SchedulerPolicy
+from repro.schedulers.registry import make_scheduler
+from repro.schedulers.runtime import RebalanceRuntime
 
 
 class SimTimeSource:
@@ -105,19 +110,9 @@ class SimResult:
         raise ValueError(reference)
 
 
-def _make_controller(scheduler: str, alpha: int, rel_threshold: float):
-    if scheduler == "odin":
-        return OdinController(alpha=alpha, rel_threshold=rel_threshold)
-    if scheduler == "lls":
-        return LLSController(rel_threshold=rel_threshold)
-    if scheduler in ("none", "oracle"):
-        return None
-    raise ValueError(f"unknown scheduler {scheduler!r}")
-
-
 def simulate(db: LayerDatabase,
              num_eps: int,
-             scheduler: str = "odin",
+             scheduler: Union[str, SchedulerPolicy] = "odin",
              alpha: int = 10,
              num_queries: int = 4000,
              freq_period: int = 10,
@@ -126,7 +121,11 @@ def simulate(db: LayerDatabase,
              rel_threshold: float = 0.02,
              events: Optional[List[InterferenceEvent]] = None,
              initial_config: Optional[List[int]] = None) -> SimResult:
-    """Run one (scheduler, interference-setting) simulation."""
+    """Run one (scheduler, interference-setting) simulation.
+
+    ``scheduler`` is a registry name (``repro.schedulers``) or an
+    already-constructed :class:`SchedulerPolicy` instance.
+    """
     if events is None:
         events = generate_events(num_queries, num_eps, db.num_scenarios,
                                  freq_period, duration, seed)
@@ -142,29 +141,37 @@ def simulate(db: LayerDatabase,
         config = opt_cfg
     peak = throughput(clean.stage_times(config))
 
-    controller = _make_controller(scheduler, alpha, rel_threshold)
-
     scenarios = [0] * num_eps
     source = SimTimeSource(db, scenarios)
+
+    # Cache the oracle per scenario-vector (it is deterministic); it backs
+    # both the resource-constrained reference and the oracle policy.
+    oracle_cache = {}
+
+    def _oracle(scen_key):
+        if scen_key not in oracle_cache:
+            oracle_cache[scen_key] = optimal_partition(db, list(scen_key),
+                                                       num_eps)
+        return oracle_cache[scen_key]
+
+    def oracle_solver(cfg, src) -> List[int]:
+        return list(_oracle(tuple(scenarios))[0])
+
+    if isinstance(scheduler, str):
+        sched_name = scheduler
+        policy = make_scheduler(scheduler, alpha=alpha,
+                                rel_threshold=rel_threshold,
+                                solver=oracle_solver)
+    else:
+        policy = scheduler
+        sched_name = getattr(policy, "name", type(policy).__name__)
+    runtime = RebalanceRuntime(policy, config)
 
     latencies = np.zeros(num_queries)
     throughputs = np.zeros(num_queries)
     serial_mask = np.zeros(num_queries, dtype=bool)
     rc_thr = np.zeros(num_queries)
     configs_trace: List[List[int]] = []
-    mitigation_lengths: List[int] = []
-    num_rebalances = 0
-    total_trials = 0
-    explorer = None  # in-progress rebalancing phase
-
-    # Cache the oracle per scenario-vector (it is deterministic).
-    oracle_cache = {}
-
-    def rc_throughput() -> float:
-        key = tuple(scenarios)
-        if key not in oracle_cache:
-            oracle_cache[key] = optimal_partition(db, scenarios, num_eps)
-        return oracle_cache[key][1]
 
     for q in range(num_queries):
         # -- advance interference state ------------------------------------
@@ -176,65 +183,28 @@ def simulate(db: LayerDatabase,
         if new_scen != scenarios:
             scenarios[:] = new_scen
             source.scenarios[:] = new_scen
-        rc = rc_throughput()
-        rc_thr[q] = rc
+        rc_thr[q] = _oracle(tuple(scenarios))[1]
 
-        # -- in-progress rebalancing phase: one trial = one serial query ----
-        if explorer is not None:
-            trial_cfg = explorer.step(source)
-            times = source.stage_times(trial_cfg)
-            latencies[q] = serial_latency(times)
-            throughputs[q] = throughput(times)
-            serial_mask[q] = True
-            configs_trace.append(list(trial_cfg))
-            if explorer.done:
-                res = explorer.result()
-                config = res.config
-                total_trials += res.num_trials
-                mitigation_lengths.append(res.num_trials)
-                controller.finish(config, source)
-                explorer = None
-            continue
-
-        # -- scheduler observation ------------------------------------------
-        if scheduler == "oracle":
-            opt_cfg, _ = oracle_cache[tuple(scenarios)]
-            config = list(opt_cfg)
-        elif controller is not None and controller.detect(config, source):
-            num_rebalances += 1
-            explorer = controller.make_explorer(config)
-            trial_cfg = explorer.step(source)
-            times = source.stage_times(trial_cfg)
-            latencies[q] = serial_latency(times)
-            throughputs[q] = throughput(times)
-            serial_mask[q] = True
-            configs_trace.append(list(trial_cfg))
-            if explorer.done:
-                res = explorer.result()
-                config = res.config
-                total_trials += res.num_trials
-                mitigation_lengths.append(res.num_trials)
-                controller.finish(config, source)
-                explorer = None
-            continue
-
-        # -- steady-state pipelined query ------------------------------------
-        times = source.stage_times(config)
-        latencies[q] = pipelined_latency(times)
+        # -- one runtime step: steady query, or one exploration trial -------
+        step = runtime.poll(source)
+        times = source.stage_times(step.config)
+        latencies[q] = (serial_latency(times) if step.serial
+                        else pipelined_latency(times))
         throughputs[q] = throughput(times)
-        configs_trace.append(list(config))
+        serial_mask[q] = step.serial
+        configs_trace.append(list(step.config))
 
     return SimResult(
-        scheduler=scheduler,
+        scheduler=sched_name,
         latencies=latencies,
         throughputs=throughputs,
         serial_mask=serial_mask,
         peak_throughput=peak,
         rc_throughputs=rc_thr,
-        num_rebalances=num_rebalances,
-        total_trials=total_trials,
+        num_rebalances=runtime.num_rebalances,
+        total_trials=runtime.total_trials,
         configs_trace=configs_trace,
-        mitigation_lengths=mitigation_lengths,
+        mitigation_lengths=runtime.mitigation_lengths,
     )
 
 

@@ -9,24 +9,30 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer JAX releases; all
+    axes here are Auto, which is also the older default."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e pod mesh: 16x16 = 256 chips per pod; 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_stage_mesh(num_stages: int, *, model_parallel: int = 1):
     """Serving-pipeline mesh: ``stage`` = execution places (paper EPs),
     ``model`` = operator parallelism within an EP."""
     if model_parallel > 1:
-        return jax.make_mesh(
-            (num_stages, model_parallel), ("stage", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return jax.make_mesh((num_stages,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+        return _make_mesh((num_stages, model_parallel), ("stage", "model"))
+    return _make_mesh((num_stages,), ("stage",))
 
 
 def data_axes(mesh) -> tuple:

@@ -20,14 +20,18 @@ import numpy as np
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.core.database import paper_scenarios
 from repro.models import Model
+from repro.schedulers import available_schedulers
 from repro.serving import ServingEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-4b")
-    ap.add_argument("--scheduler", choices=("odin", "lls", "none"),
-                    default="odin")
+    # Every registered policy is servable except the oracle, which needs
+    # a caller-supplied solver (the simulator wires one in).
+    ap.add_argument("--scheduler", default="odin",
+                    choices=tuple(n for n in available_schedulers()
+                                  if n != "oracle"))
     ap.add_argument("--alpha", type=int, default=10)
     ap.add_argument("--eps", type=int, default=4)
     ap.add_argument("--queries", type=int, default=100)

@@ -1,0 +1,32 @@
+"""Pluggable scheduler-policy subsystem (see docs/SCHEDULERS.md).
+
+Policies implement :class:`SchedulerPolicy`, are constructed by name via
+:func:`make_scheduler`, and are executed by the :class:`RebalanceRuntime`
+shared by the simulator and the live serving engine.
+"""
+from repro.schedulers.base import (  # noqa: F401
+    Explorer,
+    InterferenceDetector,
+    SchedulerPolicy,
+    bottleneck_time,
+)
+from repro.schedulers.registry import (  # noqa: F401
+    available_schedulers,
+    make_scheduler,
+    register_scheduler,
+    scheduler_class,
+    unregister_scheduler,
+)
+from repro.schedulers.runtime import (  # noqa: F401
+    RebalanceRuntime,
+    RuntimeStep,
+)
+from repro.schedulers.policies import (  # noqa: F401
+    HybridExplorer,
+    HybridPolicy,
+    LLSPolicy,
+    OdinPolicy,
+    OracleExplorer,
+    OraclePolicy,
+    StaticPolicy,
+)

@@ -1,0 +1,137 @@
+"""The one rebalance state machine shared by simulator and live engine.
+
+Both ``repro.core.simulator.simulate`` and
+``repro.serving.ServingEngine.serve`` previously hand-rolled the same
+loop (detect → drive the explorer one trial per serially-processed query
+→ commit) with drifting details; :class:`RebalanceRuntime` owns it once.
+
+Per query the driver calls :meth:`poll` with the current
+:class:`~repro.core.pipeline_state.StageTimeSource` and receives the
+configuration the query must run with plus whether it is a serial
+(exploration-trial) query:
+
+* no phase active, ``policy.detect`` quiet → steady pipelined query;
+* ``detect`` fires → a phase starts.  Serial explorers (ODIN, LLS,
+  hybrid) consume one query per ``step()``; *instant* explorers
+  (``serial = False``, e.g. the DP oracle) run to completion inside the
+  same poll and the query proceeds pipelined on the new configuration —
+  which is exactly the old ``if scheduler == "oracle"`` special case,
+  now expressed as a normal policy;
+* the explorer finishing commits its result: the runtime adopts the
+  configuration, updates trial accounting, and calls ``policy.finish``
+  so detection re-arms against the post-rebalance bottleneck.
+
+Accounting matches the paper's: ``num_rebalances`` counts phases that
+cost at least one serial query (the oracle is free), ``total_trials`` /
+``mitigation_lengths`` mirror Fig. 8's exploration overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, List, Optional, Sequence
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.core <-> schedulers acyclic
+    from repro.core.pipeline_state import StageTimeSource
+    from repro.schedulers.base import SchedulerPolicy
+
+
+@dataclasses.dataclass
+class RuntimeStep:
+    """What one polled query should do."""
+    config: List[int]          # configuration to process the query with
+    serial: bool               # True = exploration trial (serial query)
+    committed: bool = False    # a rebalancing phase committed at this step
+
+
+class RebalanceRuntime:
+    """Detect → explore → commit driver around one SchedulerPolicy."""
+
+    #: Safety bound on instant (serial=False) explorers, which complete
+    #: inside a single poll: a plugin explorer that never sets ``done``
+    #: raises instead of hanging the serving loop.
+    MAX_INSTANT_STEPS = 10_000
+
+    def __init__(self, policy: SchedulerPolicy, config: Sequence[int]):
+        self.policy = policy
+        self.policy.reset()       # a runtime is a fresh serving window
+        self.config = list(config)
+        self.explorer = None
+        self.num_rebalances = 0
+        self.total_trials = 0
+        self.mitigation_lengths: List[int] = []
+        self._phase_steps = 0     # serial queries consumed by this phase
+
+    @property
+    def exploring(self) -> bool:
+        """True while a rebalancing phase is in progress."""
+        return self.explorer is not None
+
+    def poll(self, source: StageTimeSource) -> RuntimeStep:
+        """Advance the state machine by one query."""
+        if self.explorer is None:
+            if not self.policy.detect(self.config, source):
+                return RuntimeStep(list(self.config), serial=False)
+            self.explorer = self.policy.make_explorer(self.config)
+            if self._serial_phase:
+                self.num_rebalances += 1
+
+        if not self._serial_phase:
+            # Instant policy: commit within this poll; the query itself
+            # runs pipelined on the new configuration.
+            for _ in range(self.MAX_INSTANT_STEPS):
+                if self.explorer.done:
+                    break
+                self.explorer.step(source)
+            else:
+                raise RuntimeError(
+                    f"instant explorer {type(self.explorer).__name__} "
+                    f"(policy {type(self.policy).__name__}) did not "
+                    f"finish within {self.MAX_INSTANT_STEPS} steps")
+            self._commit(source)
+            return RuntimeStep(list(self.config), serial=False,
+                               committed=True)
+
+        trial_cfg = self.explorer.step(source)
+        self._phase_steps += 1
+        committed = False
+        if self.explorer.done:
+            self._commit(source)
+            committed = True
+        return RuntimeStep(list(trial_cfg), serial=True, committed=committed)
+
+    def arm(self, source: StageTimeSource) -> None:
+        """Prime detection with one observation, starting no phase.
+
+        Drivers that cannot poll from the very first query (the live
+        engine has no stage-time estimates until one query has been
+        measured) call this once so 'now' becomes the detection
+        baseline — the same thing the first ``poll``'s ``detect`` call
+        does in the simulator.  Any trigger is discarded.
+        """
+        self.policy.detect(self.config, source)
+
+    def reset(self, config: Optional[Sequence[int]] = None) -> None:
+        """Abandon any in-flight phase and re-arm the policy."""
+        self.explorer = None
+        self._phase_steps = 0
+        if config is not None:
+            self.config = list(config)
+        self.policy.reset()
+
+    # -- internals -----------------------------------------------------------
+    @property
+    def _serial_phase(self) -> bool:
+        return getattr(self.explorer, "serial", True)
+
+    def _commit(self, source: StageTimeSource) -> None:
+        res = self.explorer.result()
+        if self._serial_phase:
+            # Charge the serial queries the phase actually consumed, not
+            # res.num_trials: explorer steps that could not apply a move
+            # log no Trial but still serialized a query.
+            self.total_trials += self._phase_steps
+            self.mitigation_lengths.append(self._phase_steps)
+        self.explorer = None
+        self._phase_steps = 0
+        self.config = list(res.config)
+        self.policy.finish(self.config, source)

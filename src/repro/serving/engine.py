@@ -1,10 +1,17 @@
-"""Live serving engine: ODIN/LLS against *measured* stage times.
+"""Live serving engine: scheduler policies against *measured* stage times.
 
 This is the end-to-end integration of the paper's technique: real JAX
 model execution through the recompile-free pipeline executor, per-stage
 wall-clock monitoring, online interference detection, and stepwise
-rebalancing — one exploration trial per (serially processed) query,
-exactly as in the simulator, but with physical time.
+rebalancing — one exploration trial per (serially processed) query.
+
+The detect → explore → commit state machine is the same
+:class:`~repro.schedulers.runtime.RebalanceRuntime` the simulator drives:
+the engine only supplies physical time (a
+:class:`~repro.pipeline.executor.MeasuredTimeSource` built from the EMA
+of measured per-block times) where the simulator supplies database
+lookups.  Any registered policy name — or a custom
+:class:`~repro.schedulers.base.SchedulerPolicy` instance — plugs in.
 
 Interference is injected as per-EP slowdown factors (emulating co-located
 tenants; the measured-database builder in tools/ uses real co-running
@@ -14,17 +21,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.lls import LLSController
-from repro.core.odin import OdinController
-from repro.core.pipeline_state import balanced_config, throughput
+from repro.core.pipeline_state import balanced_config
 from repro.pipeline.executor import LocalPipelineExecutor, MeasuredTimeSource
+from repro.schedulers.base import SchedulerPolicy
+from repro.schedulers.registry import make_scheduler
+from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
 
 
 @dataclasses.dataclass
@@ -51,26 +58,29 @@ class ServeMetrics:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Dict, num_eps: int,
-                 scheduler: str = "odin", alpha: int = 10,
-                 rel_threshold: float = 0.15):
+                 scheduler: Union[str, SchedulerPolicy] = "odin",
+                 alpha: int = 10, rel_threshold: float = 0.15):
         self.cfg = cfg
         self.executor = LocalPipelineExecutor(cfg, params)
         self.num_eps = num_eps
-        self.scheduler = scheduler
-        if scheduler == "odin":
-            self.controller = OdinController(alpha=alpha,
-                                             rel_threshold=rel_threshold)
-        elif scheduler == "lls":
-            self.controller = LLSController(rel_threshold=rel_threshold)
-        elif scheduler == "none":
-            self.controller = None
+        if isinstance(scheduler, str):
+            self.policy = make_scheduler(scheduler, alpha=alpha,
+                                         rel_threshold=rel_threshold)
+            self.scheduler = scheduler
         else:
-            raise ValueError(scheduler)
-        self.config = balanced_config(cfg.num_blocks, num_eps)
-        self._explorer = None
+            self.policy = scheduler
+            self.scheduler = getattr(scheduler, "name",
+                                     type(scheduler).__name__)
+        self.runtime = RebalanceRuntime(
+            self.policy, balanced_config(cfg.num_blocks, num_eps))
         # EMA of measured per-block times feeds the scheduler's trial
         # evaluations between real executions.
         self._block_times: Optional[np.ndarray] = None
+
+    @property
+    def config(self) -> List[int]:
+        """Current committed stage configuration."""
+        return list(self.runtime.config)
 
     def _update_block_estimates(self, config: Sequence[int],
                                 stage_times: np.ndarray,
@@ -94,44 +104,36 @@ class ServingEngine:
         tmax = np.zeros(n)
         serial = np.zeros(n, bool)
         configs: List[List[int]] = []
-        rebalances = 0
+        rebalances0 = self.runtime.num_rebalances
 
         for q, tokens in enumerate(queries):
             slow = np.asarray(slowdown_schedule(q), float)
-            source = (MeasuredTimeSource(self._block_times, slow)
-                      if self._block_times is not None else None)
-
-            if self._explorer is not None and source is not None:
-                trial_cfg = self._explorer.step(source)
-                t0 = time.perf_counter()
-                _, st = self.executor.run_query(tokens, trial_cfg,
-                                                slowdowns=slow)
-                latencies[q] = time.perf_counter() - t0
-                tmax[q] = st[np.nonzero(trial_cfg)[0]].max()
-                serial[q] = True
-                configs.append(list(trial_cfg))
-                self._update_block_estimates(trial_cfg, st, slow)
-                if self._explorer.done:
-                    self.config = self._explorer.result().config
-                    self.controller.finish(self.config, source)
-                    self._explorer = None
-                continue
+            # Until the first query has been measured there are no block
+            # estimates for the policy to reason over: run steady.
+            first_measurement = self._block_times is None
+            if first_measurement:
+                step = RuntimeStep(list(self.runtime.config), serial=False)
+            else:
+                source = MeasuredTimeSource(self._block_times, slow)
+                step = self.runtime.poll(source)
 
             t0 = time.perf_counter()
-            _, st = self.executor.run_query(tokens, self.config,
+            _, st = self.executor.run_query(tokens, step.config,
                                             slowdowns=slow)
             latencies[q] = time.perf_counter() - t0
-            live = [i for i, c in enumerate(self.config) if c > 0]
+            live = [i for i, c in enumerate(step.config) if c > 0]
             tmax[q] = st[live].max()
-            configs.append(list(self.config))
-            self._update_block_estimates(self.config, st, slow)
-
-            if self.controller is not None:
-                source = MeasuredTimeSource(self._block_times, slow)
-                if self.controller.detect(self.config, source):
-                    rebalances += 1
-                    self._explorer = self.controller.make_explorer(self.config)
+            serial[q] = step.serial
+            configs.append(list(step.config))
+            self._update_block_estimates(step.config, st, slow)
+            if first_measurement:
+                # Arm detection against this query's measured conditions,
+                # so interference beginning at the very next query is a
+                # shift from this baseline rather than the baseline.
+                self.runtime.arm(
+                    MeasuredTimeSource(self._block_times, slow))
 
         return ServeMetrics(latencies=latencies, stage_time_max=tmax,
                             serial_mask=serial, configs=configs,
-                            num_rebalances=rebalances)
+                            num_rebalances=(self.runtime.num_rebalances
+                                            - rebalances0))

@@ -1,8 +1,7 @@
 """Unit + property tests for the paper-faithful ODIN core."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep shim
 
 from repro.core import (
     SimTimeSource,

@@ -1,5 +1,7 @@
 """Pipeline executor + SPMD schedule tests."""
 import dataclasses
+import os
+import pathlib
 import subprocess
 import sys
 
@@ -74,12 +76,12 @@ from repro.models import Model
 from repro.models.layers import embed
 import repro.models.blocks as blk
 from repro.pipeline.spmd import pipelined_forward
+from repro.launch.mesh import make_stage_mesh
 
 cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), num_layers=8)
 model = Model(cfg)
 params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_stage_mesh(4)
 B, S, M = 2, 32, 4
 tokens = jax.random.randint(jax.random.PRNGKey(1), (M, B, S), 0,
                             cfg.vocab_size)
@@ -102,8 +104,13 @@ for config in ([2,2,2,2], [1,3,2,2], [3,0,3,2]):
     assert err < 1e-4, (config, err)
 print("OK")
 """
+    root = pathlib.Path(__file__).resolve().parents[1]
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                       "HOME": "/root"}, cwd="/root/repo")
+                       text=True,
+                       env={"PYTHONPATH": str(root / "src"),
+                            "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+                            "HOME": os.environ.get("HOME", "/tmp"),
+                            # host-device run: skip accelerator probing
+                            "JAX_PLATFORMS": "cpu"}, cwd=str(root))
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout

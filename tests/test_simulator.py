@@ -1,8 +1,7 @@
 """Simulator behaviour + paper-claim sanity checks (fast settings)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st  # optional-dep shim
 
 from repro.core import generate_events, simulate, synthetic_database
 
