@@ -4,7 +4,7 @@ from __future__ import annotations
 import csv
 import os
 import time
-from typing import Dict, Iterable, List
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -33,16 +33,28 @@ def db_for(model: str):
 def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
                settings: Iterable = PAPER_SETTINGS,
                num_eps: int = NUM_EPS,
-               num_queries: int = NUM_QUERIES) -> List[dict]:
-    """One row per (scheduler, freq, dur, seed) with summary metrics."""
+               num_queries: int = NUM_QUERIES,
+               seeds: Sequence[int] = SEEDS,
+               workload: str = "closed",
+               workload_kwargs: Optional[dict] = None) -> List[dict]:
+    """One row per (scheduler, freq, dur, seed) with summary metrics.
+
+    ``workload``/``workload_kwargs`` select the arrival process
+    (``repro.workloads``); the default closed loop reproduces the paper's
+    saturated stream.  Every row carries the queue-aware columns
+    (offered/achieved load, queueing delay, queue depth) — zero /
+    degenerate under the closed loop, load-bearing for open-loop sweeps.
+    """
     db = db_for(model)
     rows = []
     for name, kw in schedulers.items():
         for freq, dur in settings:
-            for seed in SEEDS:
+            for seed in seeds:
                 t0 = time.perf_counter()
                 r = simulate(db, num_eps, num_queries=num_queries,
-                             freq_period=freq, duration=dur, seed=seed, **kw)
+                             freq_period=freq, duration=dur, seed=seed,
+                             workload=workload,
+                             workload_kwargs=workload_kwargs, **kw)
                 rows.append({
                     "model": model, "scheduler": name,
                     "freq": freq, "dur": dur, "seed": seed,
@@ -57,6 +69,13 @@ def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
                     "mean_mitigation": (np.mean(r.mitigation_lengths)
                                         if r.mitigation_lengths else 0.0),
                     "sim_wall_s": time.perf_counter() - t0,
+                    "workload": r.workload,
+                    "offered_load": r.offered_load,
+                    "achieved_load": r.achieved_load,
+                    "mean_queue_delay": r.mean_queue_delay,
+                    "p99_queue_delay": float(
+                        np.percentile(r.queue_delays, 99)),
+                    "max_queue_depth": int(r.queue_depths.max()),
                 })
     return rows
 

@@ -1,0 +1,61 @@
+"""CI smoke benchmark: a tiny ``run_matrix`` through the full
+simulate -> PipelineTrace -> CSV path.
+
+    REPRO_QUERIES=200 PYTHONPATH=src python -m benchmarks.smoke
+
+Two (freq, dur) settings x one seed, closed-loop plus one open-loop
+bursty sweep, finishing in seconds — so a regression anywhere on the
+benchmark path (simulator, workloads, trace metrics, CSV schema) fails
+CI instead of surfacing the next time someone runs the full figure
+suite.  Exits non-zero if required columns are missing or non-finite.
+"""
+from __future__ import annotations
+
+import math
+import sys
+
+from benchmarks.common import run_matrix, write_csv
+
+SETTINGS = ((10, 10), (100, 10))
+SCHEDULERS = {
+    "odin_a10": dict(scheduler="odin", alpha=10),
+    "lls": dict(scheduler="lls"),
+}
+# Columns every row must carry with finite values: the pre-workloads
+# summary metrics plus the queue-aware additions.
+REQUIRED = (
+    "mean_latency", "p50_latency", "p99_latency", "mean_throughput",
+    "steady_throughput", "peak_throughput", "serial_frac",
+    "offered_load", "achieved_load", "mean_queue_delay",
+    "p99_queue_delay", "max_queue_depth",
+)
+
+
+def main() -> int:
+    rows = run_matrix("vgg16", schedulers=SCHEDULERS, settings=SETTINGS,
+                      seeds=(0,))
+    rows += run_matrix(
+        "vgg16", schedulers={"odin_a10": SCHEDULERS["odin_a10"]},
+        settings=SETTINGS[:1], seeds=(0,), workload="bursty",
+        workload_kwargs=dict(burst_rate=0.03, base_rate=0.002,
+                             mean_burst=2000, mean_gap=2000, seed=0))
+    bad = [(i, col) for i, r in enumerate(rows) for col in REQUIRED
+           if col not in r or not math.isfinite(float(r[col]))]
+    if bad:
+        print(f"smoke FAILED: missing/non-finite columns {bad}")
+        return 1
+    closed = [r for r in rows if r["workload"] == "closed"]
+    bursty = [r for r in rows if r["workload"] == "bursty"]
+    if not closed or not bursty:
+        print("smoke FAILED: expected both closed and bursty rows")
+        return 1
+    if any(r["mean_queue_delay"] != 0.0 for r in closed):
+        print("smoke FAILED: closed-loop rows must have zero queue delay")
+        return 1
+    path = write_csv("smoke", rows)
+    print(f"smoke OK: {len(rows)} rows -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

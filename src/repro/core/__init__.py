@@ -27,8 +27,10 @@ from repro.core.pipeline_state import (  # noqa: F401
     validate_config,
     waiting_times,
 )
+from repro.core.events import EventTimeline  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     PAPER_SETTINGS,
+    DatabaseQueryExecutor,
     InterferenceEvent,
     SimResult,
     SimTimeSource,

@@ -106,6 +106,16 @@ class LayerDatabase:
     def layer_time(self, layer: int, scenario: int) -> float:
         return float(self.table[layer, scenario])
 
+    def scenario_severities(self) -> np.ndarray:
+        """Mean slowdown vs. clean per interference scenario (1..n).
+
+        Ranks scenarios for the event advancer's overlap rule
+        (:class:`repro.core.events.EventTimeline`): when several events
+        hit one EP at once, the scenario with the largest measured mean
+        slowdown wins.
+        """
+        return (self.table[:, 1:] / self.table[:, :1]).mean(axis=0)
+
     def stage_time(self, lo: int, hi: int, scenario: int) -> float:
         """Time of a stage owning layers [lo, hi) under one scenario."""
         return float(self.table[lo:hi, scenario].sum())

@@ -1,0 +1,87 @@
+"""Interference-event schedule + the per-query event advancer.
+
+The simulator injects interference as :class:`InterferenceEvent`\\ s — a
+scenario lands on one EP at a query index and lasts for a number of
+queries (paper §4.2: one event every ``freq_period`` queries, lasting
+``duration``).  With the paper's high-pressure settings (e.g. ``freq=2,
+dur=100``) many events overlap on the same EP at once; an EP can only be
+in *one* scenario, so the advancer must pick.
+
+The old loop resolved overlaps by dict-overwrite order — whichever event
+happened to come last in the list silently won.  :class:`EventTimeline`
+makes the rule explicit and deterministic: **the highest-severity
+scenario wins** (co-located stressors don't cancel each other; the
+worst one dominates the EP).  Severity defaults to the scenario index
+and can be supplied from the database's measured slowdowns
+(:meth:`~repro.core.database.LayerDatabase.scenario_severities`); exact
+severity ties break toward the higher scenario index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class InterferenceEvent:
+    start: int      # query index at which the event begins
+    duration: int   # in queries
+    ep: int
+    scenario: int   # column in the database (>= 1)
+
+    @property
+    def end(self) -> int:
+        return self.start + self.duration
+
+
+def generate_events(num_queries: int, num_eps: int, num_scenarios: int,
+                    freq_period: int, duration: int,
+                    seed: int = 0) -> List[InterferenceEvent]:
+    """One event every ``freq_period`` queries on a random EP/scenario."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for start in range(freq_period, num_queries, freq_period):
+        events.append(InterferenceEvent(
+            start=start, duration=duration,
+            ep=int(rng.integers(num_eps)),
+            scenario=int(rng.integers(1, num_scenarios + 1))))
+    return events
+
+
+SeveritySpec = Union[None, Sequence[float], Callable[[int], float]]
+
+
+class EventTimeline:
+    """Per-query scenario advancer with a deterministic overlap rule.
+
+    ``severity`` ranks scenarios when several events cover one EP at the
+    same query: ``None`` ranks by scenario index, a sequence is indexed
+    ``severity[scenario - 1]`` (scenario 0 is always "clean"), a
+    callable is ``severity(scenario)``.  The winner is the max of
+    ``(severity, scenario)`` — the tuple's second element makes exact
+    severity ties deterministic.
+    """
+
+    def __init__(self, events: Sequence[InterferenceEvent], num_eps: int,
+                 severity: SeveritySpec = None):
+        self.events = list(events)
+        self.num_eps = num_eps
+        if severity is None:
+            self._rank = lambda scenario: float(scenario)
+        elif callable(severity):
+            self._rank = severity
+        else:
+            table = np.asarray(severity, dtype=float)
+            self._rank = lambda scenario: float(table[scenario - 1])
+
+    def scenarios_at(self, q: int) -> List[int]:
+        """Per-EP scenario vector for query ``q`` (0 = no interference)."""
+        best: List[Optional[tuple]] = [None] * self.num_eps
+        for ev in self.events:
+            if ev.start <= q < ev.end:
+                key = (self._rank(ev.scenario), ev.scenario)
+                if best[ev.ep] is None or key > best[ev.ep][0]:
+                    best[ev.ep] = (key, ev.scenario)
+        return [0 if b is None else b[1] for b in best]

@@ -3,23 +3,35 @@
 Simulates an inference pipeline of N stages bound to N execution places
 serving a window of queries (paper: 4000).  Interference events start
 every ``freq_period`` queries on a random EP with a random scenario from
-the database and last ``duration`` queries.  The scheduler under test is
-any registered :mod:`repro.schedulers` policy (``odin`` / ``lls`` /
-``oracle`` / ``none`` / ``hybrid`` / user plugins) and observes only
-per-stage execution times; the per-query detect → explore → commit state
-machine is the :class:`~repro.schedulers.runtime.RebalanceRuntime`
-shared with the live serving engine, so during a rebalancing phase
-queries are processed serially — one query per trial — exactly the
-paper's exploration-overhead accounting.
+the database and last ``duration`` queries (overlaps resolve to the
+highest-severity scenario; :class:`~repro.core.events.EventTimeline`).
+The scheduler under test is any registered :mod:`repro.schedulers`
+policy (``odin`` / ``lls`` / ``oracle`` / ``none`` / ``hybrid`` / user
+plugins); the per-query detect → explore → commit state machine is the
+:class:`~repro.schedulers.runtime.RebalanceRuntime` and the per-query
+tick itself is :func:`repro.workloads.run_pipeline` — both shared with
+the live serving engine, so during a rebalancing phase queries are
+processed serially — one query per trial — exactly the paper's
+exploration-overhead accounting.
+
+Traffic is pluggable (:mod:`repro.workloads`): the default ``closed``
+workload reproduces the paper's saturated back-to-back stream
+bit-for-bit; open-loop workloads (``poisson`` / ``bursty`` / ``trace``)
+add arrival-queueing so latency decomposes into queueing delay +
+service time.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import List, Optional, Union
 
 import numpy as np
 
 from repro.core.database import LayerDatabase
+from repro.core.events import (  # noqa: F401  (re-exported, back-compat)
+    EventTimeline,
+    InterferenceEvent,
+    generate_events,
+)
 from repro.core.exhaustive import optimal_partition
 from repro.core.pipeline_state import (
     balanced_config,
@@ -29,85 +41,68 @@ from repro.core.pipeline_state import (
 )
 from repro.schedulers.base import SchedulerPolicy
 from repro.schedulers.registry import make_scheduler
-from repro.schedulers.runtime import RebalanceRuntime
+from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
+from repro.workloads import (
+    PipelineTrace,
+    QueryRecord,
+    Workload,
+    run_pipeline,
+)
 
 
 class SimTimeSource:
     """StageTimeSource backed by the database + current per-EP scenarios."""
 
-    def __init__(self, db: LayerDatabase, scenarios: Sequence[int]):
+    def __init__(self, db: LayerDatabase, scenarios):
         self.db = db
         self.scenarios = list(scenarios)
 
-    def stage_times(self, config: Sequence[int]) -> np.ndarray:
+    def stage_times(self, config) -> np.ndarray:
         return self.db.stage_times(config, self.scenarios)
 
 
-@dataclasses.dataclass
-class InterferenceEvent:
-    start: int      # query index at which the event begins
-    duration: int   # in queries
-    ep: int
-    scenario: int   # column in the database (>= 1)
-
-    @property
-    def end(self) -> int:
-        return self.start + self.duration
+#: Deprecated alias — the simulator now returns the unified
+#: :class:`repro.workloads.PipelineTrace` (same fields plus the
+#: arrival-queue surface).
+SimResult = PipelineTrace
 
 
-def generate_events(num_queries: int, num_eps: int, num_scenarios: int,
-                    freq_period: int, duration: int,
-                    seed: int = 0) -> List[InterferenceEvent]:
-    """One event every ``freq_period`` queries on a random EP/scenario."""
-    rng = np.random.default_rng(seed)
-    events = []
-    for start in range(freq_period, num_queries, freq_period):
-        events.append(InterferenceEvent(
-            start=start, duration=duration,
-            ep=int(rng.integers(num_eps)),
-            scenario=int(rng.integers(1, num_scenarios + 1))))
-    return events
+class DatabaseQueryExecutor:
+    """Simulator-side :class:`~repro.workloads.QueryExecutor`.
 
+    The environment advance is the interference-event timeline; query
+    "execution" is a database lookup evaluated with the paper's latency
+    model (pipelined when steady, serial during exploration trials).
+    Provides the resource-constrained DP optimum as the trace's
+    reference throughput.
+    """
 
-@dataclasses.dataclass
-class SimResult:
-    scheduler: str
-    latencies: np.ndarray          # per query
-    throughputs: np.ndarray        # per query (1 / bottleneck stage time)
-    serial_mask: np.ndarray        # True where query was processed serially
-    peak_throughput: float         # interference-free optimum
-    rc_throughputs: np.ndarray     # resource-constrained optimum per query
-    num_rebalances: int
-    total_trials: int
-    configs_trace: List[List[int]]
-    mitigation_lengths: List[int]  # trials consumed per rebalancing phase
+    def __init__(self, db: LayerDatabase, num_eps: int,
+                 events: List[InterferenceEvent], oracle):
+        self.db = db
+        self.num_eps = num_eps
+        self.timeline = EventTimeline(events, num_eps,
+                                      severity=db.scenario_severities())
+        self.scenarios = [0] * num_eps
+        self.source = SimTimeSource(db, self.scenarios)
+        self._oracle = oracle    # tuple(scenarios) -> (config, throughput)
 
-    @property
-    def rebalance_fraction(self) -> float:
-        return float(np.mean(self.serial_mask))
+    def begin_query(self, q: int) -> SimTimeSource:
+        new_scen = self.timeline.scenarios_at(q)
+        if new_scen != self.scenarios:
+            self.scenarios[:] = new_scen
+            self.source.scenarios[:] = new_scen
+        return self.source
 
-    @property
-    def steady_throughput(self) -> float:
-        """Mean throughput over pipelined (non-exploration) queries — the
-        pipeline's operating rate, which is what the paper's Fig. 6
-        reports (exploration overhead is Fig. 8's separate metric)."""
-        pipe = self.throughputs[~self.serial_mask]
-        return float(pipe.mean()) if len(pipe) else float(
-            self.throughputs.mean())
+    def reference_throughput(self, q: int) -> float:
+        return self._oracle(tuple(self.scenarios))[1]
 
-    def tail_latency(self, pct: float = 99.0) -> float:
-        return float(np.percentile(self.latencies, pct))
-
-    def slo_violations(self, slo_level: float,
-                       reference: str = "peak") -> float:
-        """Fraction of queries with throughput below slo_level × reference."""
-        if reference == "peak":
-            target = slo_level * self.peak_throughput
-            return float(np.mean(self.throughputs < target))
-        elif reference == "resource_constrained":
-            target = slo_level * self.rc_throughputs
-            return float(np.mean(self.throughputs < target))
-        raise ValueError(reference)
+    def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
+        times = self.source.stage_times(step.config)
+        latency = (serial_latency(times) if step.serial
+                   else pipelined_latency(times))
+        return QueryRecord(service_latency=latency,
+                           throughput=throughput(times))
 
 
 def simulate(db: LayerDatabase,
@@ -118,13 +113,21 @@ def simulate(db: LayerDatabase,
              freq_period: int = 10,
              duration: int = 10,
              seed: int = 0,
-             rel_threshold: float = 0.02,
+             rel_threshold: Optional[float] = None,
              events: Optional[List[InterferenceEvent]] = None,
-             initial_config: Optional[List[int]] = None) -> SimResult:
-    """Run one (scheduler, interference-setting) simulation.
+             initial_config: Optional[List[int]] = None,
+             workload: Union[str, Workload, None] = "closed",
+             workload_kwargs: Optional[dict] = None) -> PipelineTrace:
+    """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
-    already-constructed :class:`SchedulerPolicy` instance.
+    already-constructed :class:`SchedulerPolicy` instance; ``workload``
+    likewise resolves through :mod:`repro.workloads` (``closed`` —
+    the default, the paper's saturated stream — or an open-loop
+    process such as ``workload="poisson",
+    workload_kwargs={"rate": ..., "seed": ...}``).
+    ``rel_threshold=None`` uses the shared
+    :data:`repro.schedulers.DEFAULT_REL_THRESHOLD`.
     """
     if events is None:
         events = generate_events(num_queries, num_eps, db.num_scenarios,
@@ -141,9 +144,6 @@ def simulate(db: LayerDatabase,
         config = opt_cfg
     peak = throughput(clean.stage_times(config))
 
-    scenarios = [0] * num_eps
-    source = SimTimeSource(db, scenarios)
-
     # Cache the oracle per scenario-vector (it is deterministic); it backs
     # both the resource-constrained reference and the oracle policy.
     oracle_cache = {}
@@ -154,8 +154,10 @@ def simulate(db: LayerDatabase,
                                                        num_eps)
         return oracle_cache[scen_key]
 
+    executor = DatabaseQueryExecutor(db, num_eps, events, _oracle)
+
     def oracle_solver(cfg, src) -> List[int]:
-        return list(_oracle(tuple(scenarios))[0])
+        return list(_oracle(tuple(executor.scenarios))[0])
 
     if isinstance(scheduler, str):
         sched_name = scheduler
@@ -167,45 +169,9 @@ def simulate(db: LayerDatabase,
         sched_name = getattr(policy, "name", type(policy).__name__)
     runtime = RebalanceRuntime(policy, config)
 
-    latencies = np.zeros(num_queries)
-    throughputs = np.zeros(num_queries)
-    serial_mask = np.zeros(num_queries, dtype=bool)
-    rc_thr = np.zeros(num_queries)
-    configs_trace: List[List[int]] = []
-
-    for q in range(num_queries):
-        # -- advance interference state ------------------------------------
-        active = {}
-        for ev in events:
-            if ev.start <= q < ev.end:
-                active[ev.ep] = ev.scenario
-        new_scen = [active.get(ep, 0) for ep in range(num_eps)]
-        if new_scen != scenarios:
-            scenarios[:] = new_scen
-            source.scenarios[:] = new_scen
-        rc_thr[q] = _oracle(tuple(scenarios))[1]
-
-        # -- one runtime step: steady query, or one exploration trial -------
-        step = runtime.poll(source)
-        times = source.stage_times(step.config)
-        latencies[q] = (serial_latency(times) if step.serial
-                        else pipelined_latency(times))
-        throughputs[q] = throughput(times)
-        serial_mask[q] = step.serial
-        configs_trace.append(list(step.config))
-
-    return SimResult(
-        scheduler=sched_name,
-        latencies=latencies,
-        throughputs=throughputs,
-        serial_mask=serial_mask,
-        peak_throughput=peak,
-        rc_throughputs=rc_thr,
-        num_rebalances=runtime.num_rebalances,
-        total_trials=runtime.total_trials,
-        configs_trace=configs_trace,
-        mitigation_lengths=runtime.mitigation_lengths,
-    )
+    return run_pipeline(executor, runtime, num_queries,
+                        workload=workload, workload_kwargs=workload_kwargs,
+                        scheduler_name=sched_name, peak_throughput=peak)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

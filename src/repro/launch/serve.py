@@ -22,6 +22,7 @@ from repro.core.database import paper_scenarios
 from repro.models import Model
 from repro.schedulers import available_schedulers
 from repro.serving import ServingEngine
+from repro.workloads import available_workloads
 
 
 def main() -> None:
@@ -42,6 +43,14 @@ def main() -> None:
                     help="interference frequency period (queries)")
     ap.add_argument("--duration", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workload", default="closed",
+                    choices=tuple(n for n in available_workloads()
+                                  if n != "trace"),
+                    help="arrival process (docs/WORKLOADS.md); open-loop "
+                         "runs report queueing delay separately")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop arrival rate, q/s (poisson rate / "
+                         "bursty burst_rate; bursty idles between bursts)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -75,7 +84,16 @@ def main() -> None:
     eng = ServingEngine(cfg, params, num_eps=args.eps,
                         scheduler=args.scheduler, alpha=args.alpha)
     eng.executor.warmup(1, args.seq)
-    metrics = eng.serve(queries, schedule)
+    if args.workload == "closed":
+        wl_kwargs = None             # --rate is irrelevant (and may be 0)
+    else:
+        wl_kwargs = dict(rate=args.rate, burst_rate=args.rate,
+                         base_rate=args.rate / 10,
+                         mean_burst=5.0 / args.rate * args.eps,
+                         mean_gap=10.0 / args.rate * args.eps,
+                         seed=args.seed)
+    metrics = eng.serve(queries, schedule, workload=args.workload,
+                        workload_kwargs=wl_kwargs)
     s = metrics.summary()
     s["final_config"] = metrics.configs[-1]
     if args.json:

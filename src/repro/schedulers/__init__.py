@@ -10,6 +10,12 @@ from repro.schedulers.base import (  # noqa: F401
     SchedulerPolicy,
     bottleneck_time,
 )
+from repro.schedulers.defaults import (  # noqa: F401
+    DEFAULT_ALPHA,
+    DEFAULT_REL_THRESHOLD,
+    MEASURED_DETECTOR_MODE,
+    resolve_rel_threshold,
+)
 from repro.schedulers.registry import (  # noqa: F401
     available_schedulers,
     make_scheduler,

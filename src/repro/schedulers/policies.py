@@ -22,13 +22,15 @@ from repro.core.lls import LLSExplorer
 from repro.core.odin import OdinExplorer, RebalanceResult
 from repro.core.pipeline_state import StageTimeSource, throughput
 from repro.schedulers.base import InterferenceDetector
+from repro.schedulers.defaults import DEFAULT_ALPHA, resolve_rel_threshold
 from repro.schedulers.registry import register_scheduler
 
 DetectorSpec = Union[InterferenceDetector, str, None]
 
 
 def _make_detector(detector: DetectorSpec,
-                   rel_threshold: float) -> InterferenceDetector:
+                   rel_threshold: Optional[float]) -> InterferenceDetector:
+    rel_threshold = resolve_rel_threshold(rel_threshold)
     if isinstance(detector, InterferenceDetector):
         return detector
     if isinstance(detector, str):
@@ -38,9 +40,14 @@ def _make_detector(detector: DetectorSpec,
 
 
 class _DetectorPolicy:
-    """Common detect/finish/reset around the shared detector."""
+    """Common detect/finish/reset around the shared detector.
 
-    def __init__(self, rel_threshold: float = 0.02,
+    ``rel_threshold=None`` resolves to the repo-wide
+    :data:`~repro.schedulers.defaults.DEFAULT_REL_THRESHOLD` so the
+    simulator and the live engine agree by construction.
+    """
+
+    def __init__(self, rel_threshold: Optional[float] = None,
                  detector: DetectorSpec = None):
         self.detector = _make_detector(detector, rel_threshold)
 
@@ -60,7 +67,8 @@ class _DetectorPolicy:
 class OdinPolicy(_DetectorPolicy):
     """Paper Algorithm 1 behind the shared detector."""
 
-    def __init__(self, alpha: int = 10, rel_threshold: float = 0.02,
+    def __init__(self, alpha: int = DEFAULT_ALPHA,
+                 rel_threshold: Optional[float] = None,
                  detector: DetectorSpec = None):
         super().__init__(rel_threshold, detector)
         self.alpha = alpha
@@ -73,7 +81,8 @@ class OdinPolicy(_DetectorPolicy):
 class LLSPolicy(_DetectorPolicy):
     """Least-Loaded Scheduling baseline behind the shared detector."""
 
-    def __init__(self, rel_threshold: float = 0.02, max_moves: int = 64,
+    def __init__(self, rel_threshold: Optional[float] = None,
+                 max_moves: int = 64,
                  detector: DetectorSpec = None):
         super().__init__(rel_threshold, detector)
         self.max_moves = max_moves
@@ -222,7 +231,8 @@ class HybridExplorer:
 class HybridPolicy(_DetectorPolicy):
     """Beyond-paper policy: LLS's cheap move, ODIN's escape hatch."""
 
-    def __init__(self, alpha: int = 10, rel_threshold: float = 0.02,
+    def __init__(self, alpha: int = DEFAULT_ALPHA,
+                 rel_threshold: Optional[float] = None,
                  plateau_margin: float = 0.01, max_moves: int = 64,
                  detector: DetectorSpec = None):
         super().__init__(rel_threshold, detector)

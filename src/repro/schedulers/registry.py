@@ -18,14 +18,19 @@ LLS, ``solver`` means nothing to ODIN); ``make_scheduler`` filters them
 against the policy's ``__init__`` signature so one call site can build
 any registered policy.  *Required* parameters a caller omits still raise
 (e.g. ``oracle`` without a ``solver``).
+
+The mechanism itself is :class:`repro.util.Registry`, shared with the
+workload-generator registry (``repro.workloads.registry``).
 """
 from __future__ import annotations
 
-import inspect
-from typing import Callable, Dict, List, Tuple, Type
+from typing import Callable, List, Type
 
+from repro.util.registry import Registry
 
-_REGISTRY: Dict[str, Tuple[Type, dict]] = {}
+# Importing the policies module runs its @register_scheduler decorators;
+# lazy so registry.py itself stays import-cycle-free.
+_REGISTRY = Registry("scheduler", builtins_module="repro.schedulers.policies")
 
 
 def register_scheduler(name: str, **defaults) -> Callable[[Type], Type]:
@@ -35,43 +40,21 @@ def register_scheduler(name: str, **defaults) -> Callable[[Type], Type]:
     every ``make_scheduler(name, ...)`` call — useful for registering one
     class under several tunings.
     """
-    def deco(cls: Type) -> Type:
-        if name in _REGISTRY:
-            raise ValueError(f"scheduler {name!r} already registered "
-                             f"({_REGISTRY[name][0].__qualname__})")
-        _REGISTRY[name] = (cls, dict(defaults))
-        # Stamp the registered name unless the class itself (not a base)
-        # already declares one.
-        if not cls.__dict__.get("name"):
-            cls.name = name
-        return cls
-    return deco
+    return _REGISTRY.register(name, **defaults)
 
 
 def unregister_scheduler(name: str) -> None:
     """Remove a registration (tests / plugin reload)."""
-    _REGISTRY.pop(name, None)
-
-
-def _ensure_builtins() -> None:
-    # Importing the module runs its @register_scheduler decorators; lazy
-    # so registry.py itself stays import-cycle-free.
-    from repro.schedulers import policies  # noqa: F401
+    _REGISTRY.unregister(name)
 
 
 def available_schedulers() -> List[str]:
     """Sorted names of every registered policy."""
-    _ensure_builtins()
-    return sorted(_REGISTRY)
+    return _REGISTRY.available()
 
 
 def scheduler_class(name: str) -> Type:
-    _ensure_builtins()
-    try:
-        return _REGISTRY[name][0]
-    except KeyError:
-        raise ValueError(f"unknown scheduler {name!r}; available: "
-                         f"{available_schedulers()}") from None
+    return _REGISTRY.cls(name)
 
 
 def make_scheduler(name: str, **kwargs):
@@ -81,18 +64,4 @@ def make_scheduler(name: str, **kwargs):
     dropped (callers pass one superset for all policies); missing
     *required* arguments still raise ``TypeError``.
     """
-    _ensure_builtins()
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown scheduler {name!r}; available: "
-                         f"{available_schedulers()}")
-    cls, defaults = _REGISTRY[name]
-    merged = {**defaults, **kwargs}
-    if cls.__init__ is object.__init__:
-        merged = {}
-    else:
-        sig = inspect.signature(cls.__init__)
-        params = sig.parameters.values()
-        if not any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params):
-            accepted = {p.name for p in params}
-            merged = {k: v for k, v in merged.items() if k in accepted}
-    return cls(**merged)
+    return _REGISTRY.make(name, **kwargs)

@@ -66,6 +66,15 @@ class RebalanceRuntime:
         """True while a rebalancing phase is in progress."""
         return self.explorer is not None
 
+    def steady_step(self) -> RuntimeStep:
+        """A pipelined step on the committed config, without polling.
+
+        For drivers that cannot consult the policy on some query (the
+        live engine has no stage-time estimates before the first
+        measurement) but still need a :class:`RuntimeStep` to execute.
+        """
+        return RuntimeStep(list(self.config), serial=False)
+
     def poll(self, source: StageTimeSource) -> RuntimeStep:
         """Advance the state machine by one query."""
         if self.explorer is None:

@@ -1,1 +1,4 @@
-from repro.serving.engine import ServeMetrics, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ServeMetrics,
+    ServingEngine,
+)

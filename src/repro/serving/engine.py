@@ -6,12 +6,21 @@ wall-clock monitoring, online interference detection, and stepwise
 rebalancing — one exploration trial per (serially processed) query.
 
 The detect → explore → commit state machine is the same
-:class:`~repro.schedulers.runtime.RebalanceRuntime` the simulator drives:
-the engine only supplies physical time (a
-:class:`~repro.pipeline.executor.MeasuredTimeSource` built from the EMA
-of measured per-block times) where the simulator supplies database
-lookups.  Any registered policy name — or a custom
-:class:`~repro.schedulers.base.SchedulerPolicy` instance — plugs in.
+:class:`~repro.schedulers.runtime.RebalanceRuntime` the simulator
+drives, and the per-query loop itself is the same
+:func:`repro.workloads.run_pipeline`: the engine only supplies physical
+time (a :class:`~repro.pipeline.executor.MeasuredTimeSource` built from
+the EMA of measured per-block times) where the simulator supplies
+database lookups.  Any registered policy name — or a custom
+:class:`~repro.schedulers.base.SchedulerPolicy` instance — plugs in, as
+does any registered workload (closed-loop by default; ``poisson`` /
+``bursty`` / ``trace`` for open-loop runs with queueing accounting in
+wall-clock seconds).
+
+Detection runs at the shared
+:data:`repro.schedulers.DEFAULT_REL_THRESHOLD` in the detector's
+EMA/hysteresis mode (measured times jitter query-to-query; see
+``repro.schedulers.defaults``).
 
 Interference is injected as per-EP slowdown factors (emulating co-located
 tenants; the measured-database builder in tools/ uses real co-running
@@ -19,7 +28,6 @@ stressor processes instead).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -27,52 +35,89 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pipeline_state import balanced_config
+from repro.core.pipeline_state import balanced_config, throughput
 from repro.pipeline.executor import LocalPipelineExecutor, MeasuredTimeSource
 from repro.schedulers.base import SchedulerPolicy
+from repro.schedulers.defaults import DEFAULT_ALPHA, MEASURED_DETECTOR_MODE
 from repro.schedulers.registry import make_scheduler
 from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
+from repro.workloads import (
+    PipelineTrace,
+    QueryRecord,
+    Workload,
+    run_pipeline,
+)
+
+#: Deprecated alias — ``serve()`` now returns the unified
+#: :class:`repro.workloads.PipelineTrace` (same summary keys plus the
+#: queueing/SLO surface the simulator already had).
+ServeMetrics = PipelineTrace
 
 
-@dataclasses.dataclass
-class ServeMetrics:
-    latencies: np.ndarray
-    stage_time_max: np.ndarray
-    serial_mask: np.ndarray
-    configs: List[List[int]]
-    num_rebalances: int
+class _LiveQueryExecutor:
+    """Engine-side :class:`~repro.workloads.QueryExecutor`.
 
-    @property
-    def throughputs(self) -> np.ndarray:
-        return 1.0 / np.maximum(self.stage_time_max, 1e-12)
+    Each query runs for real through the
+    :class:`~repro.pipeline.executor.LocalPipelineExecutor`; the
+    scheduler runtime is polled with a
+    :class:`~repro.pipeline.executor.MeasuredTimeSource` over the
+    engine's online per-block time estimates.  Until the first query has
+    been measured there are no estimates to reason over, so
+    ``begin_query`` returns ``None`` and the query runs steady.
+    """
 
-    def summary(self) -> Dict[str, float]:
-        return {
-            "mean_latency_s": float(self.latencies.mean()),
-            "p99_latency_s": float(np.percentile(self.latencies, 99)),
-            "mean_throughput_qps": float(self.throughputs.mean()),
-            "rebalances": self.num_rebalances,
-            "serial_frac": float(self.serial_mask.mean()),
-        }
+    def __init__(self, engine: "ServingEngine",
+                 queries: Sequence[jnp.ndarray], slowdown_schedule):
+        self.engine = engine
+        self.queries = queries
+        self.schedule = slowdown_schedule
+        self._slow: Optional[np.ndarray] = None
+
+    def begin_query(self, q: int) -> Optional[MeasuredTimeSource]:
+        self._slow = np.asarray(self.schedule(q), float)
+        if self.engine._block_times is None:
+            return None
+        return MeasuredTimeSource(self.engine._block_times, self._slow)
+
+    def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
+        eng = self.engine
+        first_measurement = eng._block_times is None
+        t0 = time.perf_counter()
+        _, st = eng.executor.run_query(self.queries[q], step.config,
+                                       slowdowns=self._slow)
+        latency = time.perf_counter() - t0
+        live = [i for i, c in enumerate(step.config) if c > 0]
+        tmax = float(st[live].max())
+        eng._update_block_estimates(step.config, st, self._slow)
+        if first_measurement:
+            # Arm detection against this query's measured conditions,
+            # so interference beginning at the very next query is a
+            # shift from this baseline rather than the baseline.
+            eng.runtime.arm(
+                MeasuredTimeSource(eng._block_times, self._slow))
+        return QueryRecord(service_latency=latency,
+                           throughput=1.0 / max(tmax, 1e-12))
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Dict, num_eps: int,
                  scheduler: Union[str, SchedulerPolicy] = "odin",
-                 alpha: int = 10, rel_threshold: float = 0.15):
+                 alpha: int = DEFAULT_ALPHA,
+                 rel_threshold: Optional[float] = None):
         self.cfg = cfg
         self.executor = LocalPipelineExecutor(cfg, params)
         self.num_eps = num_eps
         if isinstance(scheduler, str):
             self.policy = make_scheduler(scheduler, alpha=alpha,
-                                         rel_threshold=rel_threshold)
+                                         rel_threshold=rel_threshold,
+                                         detector=MEASURED_DETECTOR_MODE)
             self.scheduler = scheduler
         else:
             self.policy = scheduler
             self.scheduler = getattr(scheduler, "name",
                                      type(scheduler).__name__)
-        self.runtime = RebalanceRuntime(
-            self.policy, balanced_config(cfg.num_blocks, num_eps))
+        self._initial_config = balanced_config(cfg.num_blocks, num_eps)
+        self.runtime = RebalanceRuntime(self.policy, self._initial_config)
         # EMA of measured per-block times feeds the scheduler's trial
         # evaluations between real executions.
         self._block_times: Optional[np.ndarray] = None
@@ -81,6 +126,17 @@ class ServingEngine:
     def config(self) -> List[int]:
         """Current committed stage configuration."""
         return list(self.runtime.config)
+
+    def estimated_peak_throughput(self) -> float:
+        """Interference-free throughput of the starting configuration,
+        from the online clean per-block estimates — the live analogue of
+        the simulator's "executing alone" peak reference.  NaN until a
+        query has been measured."""
+        if self._block_times is None:
+            return float("nan")
+        clean = MeasuredTimeSource(self._block_times,
+                                   np.ones(self.num_eps))
+        return throughput(clean.stage_times(self._initial_config))
 
     def _update_block_estimates(self, config: Sequence[int],
                                 stage_times: np.ndarray,
@@ -97,43 +153,24 @@ class ServingEngine:
             lo += c
 
     def serve(self, queries: Sequence[jnp.ndarray],
-              slowdown_schedule) -> ServeMetrics:
-        """slowdown_schedule(q) -> per-EP slowdown factors (>= 1.0)."""
-        n = len(queries)
-        latencies = np.zeros(n)
-        tmax = np.zeros(n)
-        serial = np.zeros(n, bool)
-        configs: List[List[int]] = []
-        rebalances0 = self.runtime.num_rebalances
+              slowdown_schedule,
+              workload: Union[str, Workload, None] = "closed",
+              workload_kwargs: Optional[dict] = None) -> PipelineTrace:
+        """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
+        slowdown factors (>= 1.0)``.
 
-        for q, tokens in enumerate(queries):
-            slow = np.asarray(slowdown_schedule(q), float)
-            # Until the first query has been measured there are no block
-            # estimates for the policy to reason over: run steady.
-            first_measurement = self._block_times is None
-            if first_measurement:
-                step = RuntimeStep(list(self.runtime.config), serial=False)
-            else:
-                source = MeasuredTimeSource(self._block_times, slow)
-                step = self.runtime.poll(source)
-
-            t0 = time.perf_counter()
-            _, st = self.executor.run_query(tokens, step.config,
-                                            slowdowns=slow)
-            latencies[q] = time.perf_counter() - t0
-            live = [i for i, c in enumerate(step.config) if c > 0]
-            tmax[q] = st[live].max()
-            serial[q] = step.serial
-            configs.append(list(step.config))
-            self._update_block_estimates(step.config, st, slow)
-            if first_measurement:
-                # Arm detection against this query's measured conditions,
-                # so interference beginning at the very next query is a
-                # shift from this baseline rather than the baseline.
-                self.runtime.arm(
-                    MeasuredTimeSource(self._block_times, slow))
-
-        return ServeMetrics(latencies=latencies, stage_time_max=tmax,
-                            serial_mask=serial, configs=configs,
-                            num_rebalances=(self.runtime.num_rebalances
-                                            - rebalances0))
+        ``workload`` picks the arrival process (``repro.workloads``):
+        the default closed loop executes back-to-back exactly as before;
+        open-loop workloads (rates in queries/second of wall-clock
+        service time) additionally report queueing delay and offered
+        vs. achieved load in the returned trace.
+        """
+        live = _LiveQueryExecutor(self, queries, slowdown_schedule)
+        trace = run_pipeline(live, self.runtime, len(queries),
+                             workload=workload,
+                             workload_kwargs=workload_kwargs,
+                             scheduler_name=self.scheduler)
+        # The peak reference only exists after measurement: stamp it
+        # post-hoc so the trace's SLO metrics work like the simulator's.
+        trace.peak_throughput = self.estimated_peak_throughput()
+        return trace

@@ -1,0 +1,2 @@
+"""Small shared infrastructure with no repro.* dependencies."""
+from repro.util.registry import Registry  # noqa: F401

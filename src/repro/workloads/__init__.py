@@ -1,0 +1,31 @@
+"""Traffic workloads + the unified run loop (see docs/WORKLOADS.md).
+
+A :class:`Workload` (arrival process) plus a :class:`QueryExecutor`
+(driver-specific query execution) feed :func:`run_pipeline`, the one
+traffic-driven event loop shared by the database simulator and the live
+JAX serving engine; every run yields the unified :class:`PipelineTrace`
+metric surface.
+"""
+from repro.workloads.base import (  # noqa: F401
+    QueryExecutor,
+    QueryRecord,
+    Workload,
+)
+from repro.workloads.generators import (  # noqa: F401
+    BurstyWorkload,
+    ClosedLoopWorkload,
+    PoissonWorkload,
+    TraceWorkload,
+)
+from repro.workloads.registry import (  # noqa: F401
+    available_workloads,
+    make_workload,
+    register_workload,
+    unregister_workload,
+    workload_class,
+)
+from repro.workloads.runner import (  # noqa: F401
+    resolve_workload,
+    run_pipeline,
+)
+from repro.workloads.trace import PipelineTrace  # noqa: F401

@@ -1,0 +1,77 @@
+"""Workload & executor protocols for the unified run loop.
+
+A :class:`Workload` describes *when queries arrive*; a
+:class:`QueryExecutor` describes *how one query runs* (database lookups
+in the simulator, real JAX execution in the live engine).  The one
+:func:`~repro.workloads.runner.run_pipeline` event loop combines them
+with the shared :class:`~repro.schedulers.runtime.RebalanceRuntime`, so
+the simulator and the serving engine execute scheduling policies —
+and report metrics — through identical code.
+
+Time is whatever unit the executor's stage times are in: wall-clock
+seconds for the live engine, database time units for the simulator.
+Open-loop rates are expressed in queries per that unit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+if TYPE_CHECKING:  # annotation-only: keeps workloads import-cycle-free
+    from repro.core.pipeline_state import StageTimeSource
+    from repro.schedulers.runtime import RuntimeStep
+
+
+@runtime_checkable
+class Workload(Protocol):
+    """An arrival process: closed-loop or a seeded open-loop generator."""
+
+    #: False = closed loop: each query arrives the instant the pipeline
+    #: can take it (no queueing).  True = open loop: arrivals are
+    #: exogenous and queries queue when the pipeline falls behind.
+    open_loop: bool
+
+    def inter_arrivals(self, num_queries: int) -> Optional[np.ndarray]:
+        """Gap before each query (same unit as the executor's times).
+
+        Returns ``None`` for closed-loop workloads.  Must be
+        deterministic: calling twice yields the identical array.
+        """
+        ...
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    """What one executed query reports back to the run loop."""
+
+    #: Time the query spent in service (pipelined or serial latency);
+    #: excludes any arrival-queue wait, which the run loop accounts.
+    service_latency: float
+    #: Pipeline capability while serving this query: 1 / bottleneck
+    #: stage time.  Determines how soon the pipeline frees up for the
+    #: next query when running pipelined.
+    throughput: float
+
+
+class QueryExecutor(Protocol):
+    """One query's environment + execution, driver-specific.
+
+    Optionally an executor may also provide ``reference_throughput(q)
+    -> float`` — the resource-constrained optimum under query ``q``'s
+    interference (the simulator's DP oracle); the run loop records it
+    into ``PipelineTrace.rc_throughputs`` when present.
+    """
+
+    def begin_query(self, q: int) -> Optional[StageTimeSource]:
+        """Advance the environment to query ``q`` (interference events /
+        slowdown schedules) and return the time source the scheduler
+        runtime should be polled with — or ``None`` if the policy cannot
+        be consulted yet (live engine before its first measurement), in
+        which case the query runs steady on the committed config."""
+        ...
+
+    def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
+        """Run query ``q`` with ``step.config`` and report timings."""
+        ...

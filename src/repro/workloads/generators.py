@@ -1,0 +1,126 @@
+"""Built-in arrival processes: closed, poisson, bursty, trace.
+
+All open-loop generators are seeded and deterministic — calling
+``inter_arrivals`` twice returns the identical array, so a run can be
+reproduced from ``(workload name, kwargs, seed)`` alone.  Rates are in
+queries per time unit of the driver (wall-clock seconds for the live
+engine, database units for the simulator).
+
+* ``closed`` — today's back-to-back behaviour and the default: each
+  query arrives the instant the pipeline frees up; no queueing, results
+  bit-compatible with the pre-workloads drivers.
+* ``poisson`` — open-loop memoryless arrivals at ``rate`` (the classic
+  serving-benchmark process; e.g. Clockwork's SLO evaluations).
+* ``bursty`` — a 2-state Markov-modulated Poisson process (MMPP):
+  exponentially-distributed ON phases at ``burst_rate`` alternate with
+  OFF phases at ``base_rate`` (MArk-style flash crowds).
+* ``trace`` — replays a recorded inter-arrival array (cycled if the run
+  is longer than the trace).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.workloads.registry import register_workload
+
+
+@register_workload("closed")
+class ClosedLoopWorkload:
+    """Closed loop: the next query arrives exactly when the pipeline can
+    take it.  This is the paper's §4 methodology (a saturated stream of
+    back-to-back queries) and the behaviour of the pre-workloads
+    ``simulate()`` / ``ServingEngine.serve()``."""
+
+    open_loop = False
+
+    def inter_arrivals(self, num_queries: int) -> Optional[np.ndarray]:
+        return None
+
+
+@register_workload("poisson")
+class PoissonWorkload:
+    """Open-loop Poisson arrivals: i.i.d. exponential inter-arrivals."""
+
+    open_loop = True
+
+    def __init__(self, rate: float, seed: int = 0):
+        if rate <= 0:
+            raise ValueError(f"poisson rate must be > 0, got {rate}")
+        self.rate = float(rate)
+        self.seed = int(seed)
+
+    def inter_arrivals(self, num_queries: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return rng.exponential(1.0 / self.rate, size=num_queries)
+
+
+@register_workload("bursty")
+class BurstyWorkload:
+    """2-state MMPP: Poisson at ``burst_rate`` during exponentially long
+    ON phases (mean ``mean_burst``), at ``base_rate`` during OFF phases
+    (mean ``mean_gap``).  ``base_rate=0`` gives pure on/off traffic.
+
+    Long-run mean rate = (mean_burst * burst_rate + mean_gap *
+    base_rate) / (mean_burst + mean_gap).
+    """
+
+    open_loop = True
+
+    def __init__(self, burst_rate: float, base_rate: float = 0.0,
+                 mean_burst: float = 1.0, mean_gap: float = 1.0,
+                 seed: int = 0):
+        if burst_rate <= 0:
+            raise ValueError(f"burst_rate must be > 0, got {burst_rate}")
+        if base_rate < 0:
+            raise ValueError(f"base_rate must be >= 0, got {base_rate}")
+        if mean_burst <= 0 or mean_gap <= 0:
+            raise ValueError("phase durations must be > 0")
+        self.burst_rate = float(burst_rate)
+        self.base_rate = float(base_rate)
+        self.mean_burst = float(mean_burst)
+        self.mean_gap = float(mean_gap)
+        self.seed = int(seed)
+
+    def inter_arrivals(self, num_queries: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        arrivals = np.empty(num_queries)
+        count = 0
+        t = 0.0
+        on = True        # start inside a burst so short runs see one
+        while count < num_queries:
+            mean_len = self.mean_burst if on else self.mean_gap
+            rate = self.burst_rate if on else self.base_rate
+            phase_end = t + rng.exponential(mean_len)
+            if rate > 0:
+                while count < num_queries:
+                    gap = rng.exponential(1.0 / rate)
+                    if t + gap >= phase_end:
+                        break
+                    t += gap
+                    arrivals[count] = t
+                    count += 1
+            t = phase_end
+            on = not on
+        return np.diff(arrivals, prepend=0.0)
+
+
+@register_workload("trace")
+class TraceWorkload:
+    """Replays a recorded inter-arrival array (e.g. from production
+    logs), cycling it when the run outlasts the trace."""
+
+    open_loop = True
+
+    def __init__(self, inter_arrivals: Sequence[float]):
+        gaps = np.asarray(inter_arrivals, dtype=float)
+        if gaps.ndim != 1 or len(gaps) == 0:
+            raise ValueError("inter_arrivals must be a non-empty 1-D array")
+        if np.any(gaps < 0):
+            raise ValueError("inter_arrivals must be non-negative")
+        self.gaps = gaps
+
+    def inter_arrivals(self, num_queries: int) -> np.ndarray:
+        reps = -(-num_queries // len(self.gaps))      # ceil division
+        return np.tile(self.gaps, reps)[:num_queries]

@@ -1,0 +1,146 @@
+"""The one traffic-driven event loop shared by simulator and live engine.
+
+``run_pipeline`` owns the per-query tick that ``simulate()`` and
+``ServingEngine.serve()`` used to hand-roll separately: advance the
+environment (interference events / slowdown schedules) via the
+executor, poll the shared :class:`RebalanceRuntime` for the
+configuration the query must run with, execute the query through the
+driver's :class:`~repro.workloads.base.QueryExecutor`, and keep the
+arrival-queue ledger that turns a :class:`~repro.workloads.base.Workload`
+into per-query queueing delays and offered-vs-achieved load.
+
+Queueing model: the pipeline admits one query per bottleneck beat.  A
+pipelined query holds the admission head for ``1 / throughput`` (the
+bottleneck stage time) and completes ``service_latency`` after it
+starts; a serial (exploration-trial) query drains the pipeline and
+holds the head for its full serial latency.  Closed-loop workloads
+arrive exactly when the head frees up — zero queue delay, bit-identical
+to the pre-workloads drivers.  Open-loop workloads arrive on their own
+clock; when arrivals outpace admission, queries wait and
+``latency = queue_delay + service_latency``.
+"""
+from __future__ import annotations
+
+import bisect
+from typing import TYPE_CHECKING, List, Optional, Union
+
+import numpy as np
+
+from repro.workloads.base import QueryExecutor, Workload
+from repro.workloads.registry import make_workload
+from repro.workloads.trace import PipelineTrace
+
+if TYPE_CHECKING:  # annotation-only: keeps workloads <-> schedulers acyclic
+    from repro.schedulers.runtime import RebalanceRuntime
+
+
+def resolve_workload(workload: Union[str, Workload, None],
+                     workload_kwargs: Optional[dict] = None) -> Workload:
+    """Name (+ kwargs) or instance -> Workload instance."""
+    if workload is None:
+        workload = "closed"
+    if isinstance(workload, str):
+        return make_workload(workload, **(workload_kwargs or {}))
+    if workload_kwargs:
+        raise ValueError("workload_kwargs only apply to a workload name, "
+                         "not an already-constructed instance")
+    return workload
+
+
+def run_pipeline(executor: QueryExecutor,
+                 runtime: RebalanceRuntime,
+                 num_queries: int,
+                 workload: Union[str, Workload, None] = "closed",
+                 workload_kwargs: Optional[dict] = None,
+                 scheduler_name: str = "",
+                 peak_throughput: float = float("nan")) -> PipelineTrace:
+    """Serve ``num_queries`` arrivals of ``workload`` through one
+    scheduler runtime; returns the unified :class:`PipelineTrace`.
+
+    ``runtime`` counters are snapshotted so the trace reports *this
+    run's* rebalance accounting even when a runtime is reused across
+    serving windows (the live engine's pattern).
+    """
+    wl = resolve_workload(workload, workload_kwargs)
+    wl_name = getattr(wl, "name", type(wl).__name__)
+    gaps = wl.inter_arrivals(num_queries) if wl.open_loop else None
+    if gaps is not None and len(gaps) != num_queries:
+        raise ValueError(f"workload {wl_name!r} produced {len(gaps)} "
+                         f"inter-arrivals for {num_queries} queries")
+    arrivals = np.cumsum(gaps) if gaps is not None else None
+
+    rebalances0 = runtime.num_rebalances
+    trials0 = runtime.total_trials
+    mitigations0 = len(runtime.mitigation_lengths)
+    has_reference = hasattr(executor, "reference_throughput")
+
+    latencies = np.zeros(num_queries)
+    service_lat = np.zeros(num_queries)
+    queue_delay = np.zeros(num_queries)
+    throughputs = np.zeros(num_queries)
+    serial_mask = np.zeros(num_queries, dtype=bool)
+    arrival_t = np.zeros(num_queries)
+    completion_t = np.zeros(num_queries)
+    queue_depth = np.zeros(num_queries, dtype=int)
+    rc_thr = np.zeros(num_queries) if has_reference else None
+    configs_trace: List[List[int]] = []
+
+    free_at = 0.0                  # when the admission head frees up
+    drain_at = 0.0                 # when every admitted query has completed
+    pending: List[float] = []      # completion times of admitted queries
+
+    for q in range(num_queries):
+        # -- advance the environment; poll the scheduler runtime ----------
+        source = executor.begin_query(q)
+        if rc_thr is not None:
+            rc_thr[q] = executor.reference_throughput(q)
+        step = runtime.poll(source) if source is not None \
+            else runtime.steady_step()
+
+        # -- execute the query -------------------------------------------
+        rec = executor.execute(q, step)
+        throughputs[q] = rec.throughput
+        serial_mask[q] = step.serial
+        configs_trace.append(list(step.config))
+
+        # -- arrival-queue ledger ----------------------------------------
+        # A serial trial runs on the drained pipeline, so it cannot start
+        # until every in-flight pipelined query has completed.
+        ready = max(free_at, drain_at) if step.serial else free_at
+        arrival = arrivals[q] if arrivals is not None else ready
+        # In-system depth at this arrival: admitted or waiting queries
+        # that have not yet completed (a full pipeline holds ~N).
+        queue_depth[q] = len(pending) - bisect.bisect_right(pending, arrival)
+        start = max(arrival, ready)
+        occupancy = (rec.service_latency if step.serial
+                     else (1.0 / rec.throughput if rec.throughput > 0
+                           else 0.0))
+        free_at = start + occupancy
+        completion = start + rec.service_latency
+        drain_at = max(drain_at, completion)
+        bisect.insort(pending, completion)
+
+        arrival_t[q] = arrival
+        completion_t[q] = completion
+        queue_delay[q] = start - arrival
+        service_lat[q] = rec.service_latency
+        latencies[q] = queue_delay[q] + rec.service_latency
+
+    return PipelineTrace(
+        scheduler=scheduler_name,
+        latencies=latencies,
+        throughputs=throughputs,
+        serial_mask=serial_mask,
+        configs_trace=configs_trace,
+        num_rebalances=runtime.num_rebalances - rebalances0,
+        total_trials=runtime.total_trials - trials0,
+        mitigation_lengths=list(runtime.mitigation_lengths[mitigations0:]),
+        workload=wl_name,
+        service_latencies=service_lat,
+        queue_delays=queue_delay,
+        arrival_times=arrival_t,
+        completion_times=completion_t,
+        queue_depths=queue_depth,
+        peak_throughput=peak_throughput,
+        rc_throughputs=rc_thr,
+    )

@@ -1,0 +1,163 @@
+"""The one per-run result type shared by simulator and live engine.
+
+:class:`PipelineTrace` replaces the duplicated (and diverging) halves of
+the old ``SimResult`` / ``ServeMetrics``: per-query arrays, rebalance
+accounting, and the full metric surface (percentile latency, steady
+throughput, SLO violations, queueing delay, offered vs. achieved load)
+are computed identically whether the queries ran against the database
+simulator or real JAX execution.  ``SimResult`` and ``ServeMetrics``
+remain importable as deprecated aliases of this class.
+
+Latency decomposition (open-loop workloads): ``latencies = queue_delays
++ service_latencies``.  Closed-loop runs have zero queue delay, so
+``latencies`` is bit-identical to the pre-workloads per-query latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PipelineTrace:
+    scheduler: str
+    latencies: np.ndarray          # per query: queue delay + service time
+    throughputs: np.ndarray        # per query: 1 / bottleneck stage time
+    serial_mask: np.ndarray        # True where query was processed serially
+    configs_trace: List[List[int]]
+    num_rebalances: int
+    total_trials: int
+    mitigation_lengths: List[int]  # trials consumed per rebalancing phase
+    workload: str = "closed"
+    service_latencies: Optional[np.ndarray] = None  # = latencies when closed
+    queue_delays: Optional[np.ndarray] = None       # zeros when closed
+    arrival_times: Optional[np.ndarray] = None
+    completion_times: Optional[np.ndarray] = None
+    # In-system depth (queued + in-flight through the pipeline) seen at
+    # each query's arrival; a saturated closed loop sits at ~num_stages.
+    queue_depths: Optional[np.ndarray] = None
+    peak_throughput: float = float("nan")  # interference-free optimum
+    rc_throughputs: Optional[np.ndarray] = None  # per-query DP optimum
+
+    def __post_init__(self):
+        n = len(self.latencies)
+        if self.service_latencies is None:
+            self.service_latencies = np.array(self.latencies, copy=True)
+        if self.queue_delays is None:
+            self.queue_delays = np.zeros(n)
+        if self.queue_depths is None:
+            self.queue_depths = np.zeros(n, dtype=int)
+
+    # -- compat surface (old ServeMetrics field names) ----------------------
+    @property
+    def configs(self) -> List[List[int]]:
+        """Alias of :attr:`configs_trace` (old ``ServeMetrics`` name)."""
+        return self.configs_trace
+
+    @property
+    def stage_time_max(self) -> np.ndarray:
+        """Per-query bottleneck stage time (old ``ServeMetrics`` field)."""
+        return 1.0 / np.maximum(self.throughputs, 1e-12)
+
+    # -- rebalance accounting ------------------------------------------------
+    @property
+    def rebalance_fraction(self) -> float:
+        return float(np.mean(self.serial_mask))
+
+    @property
+    def steady_throughput(self) -> float:
+        """Mean throughput over pipelined (non-exploration) queries — the
+        pipeline's operating rate, which is what the paper's Fig. 6
+        reports (exploration overhead is Fig. 8's separate metric)."""
+        pipe = self.throughputs[~self.serial_mask]
+        return float(pipe.mean()) if len(pipe) else float(
+            self.throughputs.mean())
+
+    # -- latency -----------------------------------------------------------
+    def tail_latency(self, pct: float = 99.0) -> float:
+        return float(np.percentile(self.latencies, pct))
+
+    @property
+    def mean_queue_delay(self) -> float:
+        return float(np.mean(self.queue_delays))
+
+    # -- SLO --------------------------------------------------------------
+    def slo_violations(self, slo_level: float,
+                       reference: str = "peak") -> float:
+        """Fraction of queries with throughput below slo_level × reference."""
+        if reference == "peak":
+            target = slo_level * self.peak_throughput
+            return float(np.mean(self.throughputs < target))
+        elif reference == "resource_constrained":
+            if self.rc_throughputs is None:
+                raise ValueError(
+                    "this trace has no resource-constrained reference "
+                    "(the executor provided no reference_throughput)")
+            target = slo_level * self.rc_throughputs
+            return float(np.mean(self.throughputs < target))
+        raise ValueError(reference)
+
+    # -- offered vs. achieved load ------------------------------------------
+    @property
+    def offered_load(self) -> float:
+        """Arrival rate over the run (queries / time unit)."""
+        if self.arrival_times is None or len(self.arrival_times) < 2:
+            return float("nan")
+        span = float(self.arrival_times[-1])
+        return len(self.arrival_times) / span if span > 0 else float("inf")
+
+    @property
+    def achieved_load(self) -> float:
+        """Completion rate over the run (queries / time unit)."""
+        if self.completion_times is None or len(self.completion_times) < 2:
+            return float("nan")
+        span = float(np.max(self.completion_times))
+        return (len(self.completion_times) / span if span > 0
+                else float("inf"))
+
+    def load_profile(self, num_windows: int = 20
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-window offered vs. achieved rates.
+
+        Returns ``(window_starts, offered_qps, achieved_qps)`` over
+        ``num_windows`` equal windows spanning the run; shows where an
+        open-loop burst outran the pipeline (offered > achieved) and the
+        later drain (achieved > offered).
+        """
+        if self.arrival_times is None or self.completion_times is None:
+            raise ValueError("no arrival ledger on this trace")
+        end = float(max(np.max(self.completion_times),
+                        self.arrival_times[-1]))
+        edges = np.linspace(0.0, end if end > 0 else 1.0, num_windows + 1)
+        width = edges[1] - edges[0]
+        offered = np.histogram(self.arrival_times, bins=edges)[0] / width
+        achieved = np.histogram(self.completion_times, bins=edges)[0] / width
+        return edges[:-1], offered, achieved
+
+    # -- the one summary dict ------------------------------------------------
+    #: SLO level summary() reports violations at (throughput >= 90% of
+    #: the interference-free peak; paper Fig. 9's mid-range level).
+    SUMMARY_SLO_LEVEL = 0.9
+
+    def summary(self) -> Dict[str, float]:
+        """Flat metric dict — identical keys for sim and live runs."""
+        peak_known = np.isfinite(self.peak_throughput)
+        return {
+            "mean_latency_s": float(self.latencies.mean()),
+            "p50_latency_s": float(np.percentile(self.latencies, 50)),
+            "p99_latency_s": self.tail_latency(99),
+            "mean_service_latency_s": float(self.service_latencies.mean()),
+            "mean_queue_delay_s": self.mean_queue_delay,
+            "p99_queue_delay_s": float(np.percentile(self.queue_delays, 99)),
+            "mean_throughput_qps": float(self.throughputs.mean()),
+            "steady_throughput_qps": self.steady_throughput,
+            "peak_throughput_qps": float(self.peak_throughput),
+            "offered_load_qps": self.offered_load,
+            "achieved_load_qps": self.achieved_load,
+            "slo_violations": (self.slo_violations(self.SUMMARY_SLO_LEVEL)
+                               if peak_known else float("nan")),
+            "rebalances": self.num_rebalances,
+            "serial_frac": self.rebalance_fraction,
+        }

@@ -7,8 +7,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core import SimResult, simulate, synthetic_database
 from repro.models import Model
-from repro.serving import ServingEngine
+from repro.serving import ServeMetrics, ServingEngine
+from repro.workloads import PipelineTrace
 
 
 @pytest.fixture(scope="module")
@@ -53,3 +55,43 @@ def test_static_scheduler_never_rebalances(setup):
     m = eng.serve(queries[:20], _schedule)
     assert m.num_rebalances == 0
     assert all(c == m.configs[0] for c in m.configs)
+
+
+def test_serve_metrics_summary_parity_with_simulator(setup):
+    """One trace type: ServeMetrics summaries carry the identical key
+    set — p50 / SLO / queueing included — as SimResult summaries."""
+    assert ServeMetrics is PipelineTrace and SimResult is PipelineTrace
+    cfg, params, queries = setup
+    eng = ServingEngine(cfg, params, num_eps=4, scheduler="odin", alpha=3)
+    eng.executor.warmup(1, 64)
+    live = eng.serve(queries[:12], _schedule).summary()
+    sim = simulate(synthetic_database("vgg16", seed=0), 4,
+                   scheduler="odin", num_queries=100, freq_period=20,
+                   duration=10, seed=0).summary()
+    assert set(live.keys()) == set(sim.keys())
+    for s in (live, sim):
+        assert s["p50_latency_s"] <= s["p99_latency_s"]
+        assert 0.0 <= s["slo_violations"] <= 1.0
+    # the engine's peak reference comes from its clean block estimates
+    assert np.isfinite(live["peak_throughput_qps"])
+
+
+def test_engine_open_loop_bursty_reports_queueing(setup):
+    """Open-loop serving through the same engine: queueing delay is
+    accounted separately from measured service latency."""
+    cfg, params, queries = setup
+    eng = ServingEngine(cfg, params, num_eps=4, scheduler="none")
+    eng.executor.warmup(1, 64)
+    # calibrate the burst to this host: measure one closed-loop query
+    probe = eng.serve(queries[:2], lambda q: [1.0] * 4)
+    service = float(probe.service_latencies.mean())
+    m = eng.serve(queries[:20], lambda q: [1.0] * 4, workload="bursty",
+                  workload_kwargs=dict(burst_rate=4.0 / service,
+                                       base_rate=0.0,
+                                       mean_burst=40 * service,
+                                       mean_gap=5 * service, seed=0))
+    assert m.workload == "bursty"
+    assert np.allclose(m.latencies, m.queue_delays + m.service_latencies)
+    assert m.queue_delays.max() > 0           # the burst outran the pipe
+    assert np.all(m.service_latencies > 0)
+    assert m.offered_load > 0 and np.isfinite(m.achieved_load)
