@@ -36,7 +36,8 @@ def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
                num_queries: int = NUM_QUERIES,
                seeds: Sequence[int] = SEEDS,
                workload: str = "closed",
-               workload_kwargs: Optional[dict] = None) -> List[dict]:
+               workload_kwargs: Optional[dict] = None,
+               chunking: bool = True) -> List[dict]:
     """One row per (scheduler, freq, dur, seed) with summary metrics.
 
     ``workload``/``workload_kwargs`` select the arrival process
@@ -44,6 +45,11 @@ def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
     saturated stream.  Every row carries the queue-aware columns
     (offered/achieved load, queueing delay, queue depth) — zero /
     degenerate under the closed loop, load-bearing for open-loop sweeps.
+
+    ``chunking=False`` times the scalar per-query tick instead of the
+    batch-granular fast path — results are identical (closed loop:
+    bit-identical); ``benchmarks/runner_bench.py`` uses the pair to
+    track the fast path's speedup.
     """
     db = db_for(model)
     rows = []
@@ -54,7 +60,8 @@ def run_matrix(model: str, schedulers: Dict[str, dict] = SCHEDULERS,
                 r = simulate(db, num_eps, num_queries=num_queries,
                              freq_period=freq, duration=dur, seed=seed,
                              workload=workload,
-                             workload_kwargs=workload_kwargs, **kw)
+                             workload_kwargs=workload_kwargs,
+                             chunking=chunking, **kw)
                 rows.append({
                     "model": model, "scheduler": name,
                     "freq": freq, "dur": dur, "seed": seed,

@@ -1,0 +1,132 @@
+"""Perf benchmark + regression gate for the batch-granular fast path.
+
+Times identical ``run_matrix`` rows through the scalar per-query tick
+(``chunking=False``) and the chunked fast path (``chunking=True``),
+verifies the closed-loop summaries are bit-identical, and emits
+``BENCH_runner.json`` — the perf-trajectory artifact this and future
+perf PRs diff against.  Exits non-zero when the steady-state row's
+speedup falls below the gate (CI runs this next to the smoke benchmark).
+
+    PYTHONPATH=src python -m benchmarks.runner_bench
+
+Environment:
+    REPRO_BENCH_QUERIES      queries per row          (default 2000)
+    REPRO_BENCH_REPEATS      best-of repeats per row  (default 3)
+    REPRO_BENCH_MIN_SPEEDUP  gate on the steady row   (default 5.0)
+
+The gate row (``steady_none``) is the fast path's home turf: long
+environment-steady segments with no exploration phases, where the run
+is dominated by the per-query tick the chunking removes.  The ODIN/LLS
+rows are reported (not gated): their runs interleave serial exploration
+phases — which are inherently per-query — so their speedups measure
+the steady fraction, not the fast path itself.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+from benchmarks.common import RESULTS_DIR, run_matrix
+
+NUM_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "2000"))
+REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
+MIN_SPEEDUP = float(os.environ.get("REPRO_BENCH_MIN_SPEEDUP", "5.0"))
+GATE_ROW = "steady_none"
+
+#: (row name, run_matrix scheduler spec, (freq, dur) paper setting)
+ROWS = (
+    ("steady_none", dict(scheduler="none"), (100, 100)),
+    ("odin_a10", dict(scheduler="odin", alpha=10), (100, 100)),
+    ("lls", dict(scheduler="lls"), (100, 10)),
+)
+
+#: run_matrix columns that must be bit-identical between the two paths
+#: on a closed-loop row (NaN-valued columns compare as both-NaN).
+SUMMARY_KEYS = (
+    "mean_latency", "p50_latency", "p99_latency", "mean_throughput",
+    "steady_throughput", "peak_throughput", "rebalances", "serial_frac",
+    "mean_mitigation", "mean_queue_delay", "p99_queue_delay",
+    "max_queue_depth", "offered_load", "achieved_load",
+)
+
+
+def _summaries_identical(a: dict, b: dict) -> bool:
+    for k in SUMMARY_KEYS:
+        x, y = float(a[k]), float(b[k])
+        if math.isnan(x) and math.isnan(y):
+            continue
+        if x != y:
+            return False
+    return True
+
+
+def bench_row(name: str, spec: dict, setting) -> dict:
+    kw = dict(schedulers={name: spec}, settings=(setting,), seeds=(0,),
+              num_queries=NUM_QUERIES)
+    walls = {False: [], True: []}
+    rows = {}
+    for _ in range(REPEATS):
+        for chunking in (False, True):
+            out = run_matrix("vgg16", chunking=chunking, **kw)
+            assert len(out) == 1
+            walls[chunking].append(out[0]["sim_wall_s"])
+            rows[chunking] = out[0]
+    scalar_s, chunked_s = min(walls[False]), min(walls[True])
+    identical = _summaries_identical(rows[False], rows[True])
+    return {
+        "row": name,
+        "freq": setting[0],
+        "dur": setting[1],
+        "num_queries": NUM_QUERIES,
+        "scalar_s": scalar_s,
+        "chunked_s": chunked_s,
+        "scalar_qps": NUM_QUERIES / scalar_s,
+        "chunked_qps": NUM_QUERIES / chunked_s,
+        "speedup": scalar_s / chunked_s,
+        "summaries_identical": identical,
+    }
+
+
+def main() -> int:
+    results = [bench_row(*row) for row in ROWS]
+    report = {
+        "schema": 1,
+        "benchmark": "runner_fast_path",
+        "model": "vgg16",
+        "workload": "closed",
+        "num_queries": NUM_QUERIES,
+        "repeats": REPEATS,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "gate": {"row": GATE_ROW, "min_speedup": MIN_SPEEDUP},
+        "rows": results,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_runner.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+
+    failed = []
+    for r in results:
+        print(f"{r['row']:12s} ({r['freq']:3d},{r['dur']:3d}): "
+              f"scalar {r['scalar_qps']:9.0f} q/s  "
+              f"chunked {r['chunked_qps']:9.0f} q/s  "
+              f"speedup {r['speedup']:5.1f}x  "
+              f"{'bit-identical' if r['summaries_identical'] else 'DIVERGED'}")
+        if not r["summaries_identical"]:
+            failed.append(f"{r['row']}: summaries diverged between paths")
+    gate = next(r for r in results if r["row"] == GATE_ROW)
+    if gate["speedup"] < MIN_SPEEDUP:
+        failed.append(f"{GATE_ROW}: speedup {gate['speedup']:.1f}x "
+                      f"< gate {MIN_SPEEDUP:.1f}x")
+    if failed:
+        print("runner_bench FAILED: " + "; ".join(failed))
+        return 1
+    print(f"runner_bench OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

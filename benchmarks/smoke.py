@@ -52,6 +52,16 @@ def main() -> int:
     if any(r["mean_queue_delay"] != 0.0 for r in closed):
         print("smoke FAILED: closed-loop rows must have zero queue delay")
         return 1
+    # Fast-path regression: run_matrix defaults to the chunked tick;
+    # its first row must match the scalar tick column-for-column.
+    scalar = run_matrix("vgg16",
+                        schedulers={"odin_a10": SCHEDULERS["odin_a10"]},
+                        settings=SETTINGS[:1], seeds=(0,), chunking=False)
+    diverged = [c for c in REQUIRED + ("rebalances",)
+                if scalar[0][c] != rows[0][c]]
+    if diverged:
+        print(f"smoke FAILED: chunked vs scalar diverged on {diverged}")
+        return 1
     path = write_csv("smoke", rows)
     print(f"smoke OK: {len(rows)} rows -> {path}")
     return 0

@@ -72,28 +72,60 @@ print(f"\nODIN vs LLS: {100 * (1 - odin['mean_latency_s'] / lls['mean_latency_s'
       f"{100 * (odin['mean_throughput_qps'] / lls['mean_throughput_qps'] - 1):+.1f}% "
       f"throughput")
 
-# --- open-loop bursty traffic (repro.workloads) ----------------------------
+# --- open-loop bursty traffic + batched serving ----------------------------
 # The runs above are closed-loop: a saturated back-to-back stream, the
 # paper's methodology.  Real serving traffic is open-loop and bursty —
 # queries arrive on their own clock and queue when a burst outruns the
 # pipeline.  Same engine, same scheduler; only the workload changes, and
-# the trace now separates queueing delay from service latency.
-mean_service = float(odin["mean_service_latency_s"])
-eng = ServingEngine(cfg, params, num_eps=NUM_EPS, scheduler="odin", alpha=4)
+# the trace separates queueing delay from service latency.
+#
+# serve(max_batch=N) then lets a burst amortize: queries that queued up
+# are stacked and run through every stage once (one set of stage
+# dispatches + syncs per batch).  Freezing the engine's block-time
+# estimates (estimate_beta = 0 after a short calibration window) makes
+# the scheduling layer deterministic, so the batched and unbatched runs
+# take the identical detect -> explore -> commit walk and differ ONLY in
+# execution granularity — an apples-to-apples A/B of batching.
+eng = ServingEngine(cfg, params, num_eps=NUM_EPS, scheduler="odin", alpha=4,
+                    estimate_beta=0.3)
 eng.executor.warmup(1, SEQ)
-m = eng.serve(
-    queries, schedule, workload="bursty",
-    workload_kwargs=dict(
-        burst_rate=1.6 / mean_service,       # bursts outrun the pipeline
-        base_rate=0.3 / mean_service,        # quiet phases drain the queue
-        mean_burst=12 * mean_service, mean_gap=20 * mean_service, seed=0))
-s = m.summary()
-print(f"\nODIN under open-loop bursty arrivals (MMPP on/off):")
-print(f"  offered load  : {s['offered_load_qps']:7.1f} q/s  "
-      f"(achieved {s['achieved_load_qps']:.1f} q/s)")
-print(f"  mean latency  : {s['mean_latency_s'] * 1e3:7.2f} ms  "
-      f"= queue {s['mean_queue_delay_s'] * 1e3:.2f} ms "
-      f"+ service {s['mean_service_latency_s'] * 1e3:.2f} ms")
-print(f"  p99 queue wait: {s['p99_queue_delay_s'] * 1e3:7.2f} ms   "
-      f"max in-system depth: {int(m.queue_depths.max())}")
-print(f"  SLO(90% peak) : {100 * s['slo_violations']:.0f}% of queries below")
+probe = eng.serve(queries[:10], lambda q: [1.0] * NUM_EPS)  # calibrate
+mean_service = float(probe.service_latencies[3:].mean())
+eng.estimate_beta = 0.0          # freeze -> reproducible scheduling
+bursty_kwargs = dict(
+    burst_rate=6.0 / mean_service,       # bursts outrun the pipeline
+    base_rate=0.3 / mean_service,        # quiet phases drain the queue
+    mean_burst=40 * mean_service, mean_gap=20 * mean_service, seed=0)
+
+batched = {}
+for max_batch in (1, 8):
+    eng.reset_policy()               # fresh window, same frozen estimates
+    m = eng.serve(queries, schedule, workload="bursty",
+                  workload_kwargs=bursty_kwargs, max_batch=max_batch)
+    batched[max_batch] = m
+    s = m.summary()
+    print(f"\nODIN under bursty arrivals (MMPP on/off), "
+          f"max_batch={max_batch}:")
+    print(f"  offered load  : {s['offered_load_qps']:7.1f} q/s  "
+          f"(achieved {s['achieved_load_qps']:.1f} q/s)")
+    print(f"  mean latency  : {s['mean_latency_s'] * 1e3:7.2f} ms  "
+          f"= queue {s['mean_queue_delay_s'] * 1e3:.2f} ms "
+          f"+ service {s['mean_service_latency_s'] * 1e3:.2f} ms")
+    print(f"  p99 queue wait: {s['p99_queue_delay_s'] * 1e3:7.2f} ms   "
+          f"max in-system depth: {int(m.queue_depths.max())}")
+    print(f"  rebalances    : {s['rebalances']}  "
+          f"(trials {m.total_trials}, serial fraction "
+          f"{100 * s['serial_frac']:.0f}%)")
+
+m1, m8 = batched[1], batched[8]
+acct_match = (m8.num_rebalances == m1.num_rebalances
+              and m8.total_trials == m1.total_trials
+              and m8.configs_trace == m1.configs_trace)
+print(f"\nBatching (max_batch=8 vs 1) at the same offered load:")
+print(f"  mean queue delay: {m1.mean_queue_delay * 1e3:.2f} -> "
+      f"{m8.mean_queue_delay * 1e3:.2f} ms "
+      f"({m1.mean_queue_delay / max(m8.mean_queue_delay, 1e-12):.1f}x lower)")
+print(f"  achieved load   : {m1.achieved_load:.1f} -> "
+      f"{m8.achieved_load:.1f} q/s")
+print(f"  rebalance/trial accounting identical: {acct_match} "
+      f"(rebalances {m8.num_rebalances}, trials {m8.total_trials})")

@@ -106,6 +106,16 @@ class LayerDatabase:
     def layer_time(self, layer: int, scenario: int) -> float:
         return float(self.table[layer, scenario])
 
+    def prefix_times(self) -> np.ndarray:
+        """``P[k, j]`` = sum of layer times ``[0, j)`` under scenario
+        ``k`` — cached; the DP oracle is called once per distinct
+        scenario vector and the prefix table never changes."""
+        if not hasattr(self, "_prefix"):
+            prefix = np.zeros((self.table.shape[1], self.num_layers + 1))
+            prefix[:, 1:] = np.cumsum(self.table.T, axis=1)
+            self._prefix = prefix
+        return self._prefix
+
     def scenario_severities(self) -> np.ndarray:
         """Mean slowdown vs. clean per interference scenario (1..n).
 

@@ -18,6 +18,7 @@ severity ties break toward the higher scenario index.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -75,6 +76,22 @@ class EventTimeline:
         else:
             table = np.asarray(severity, dtype=float)
             self._rank = lambda scenario: float(table[scenario - 1])
+        # Sorted distinct event edges: the per-EP scenario vector is
+        # piecewise-constant between consecutive edges, which is what
+        # lets the run loop chunk environment-steady query ranges.
+        # (Computed once; mutate ``events`` via a new EventTimeline.)
+        self._edges = sorted({b for ev in self.events
+                              for b in (ev.start, ev.end)})
+
+    def next_change(self, q: int) -> int:
+        """First query index ``> q`` where the scenario vector can
+        change (an event starts or ends); a large sentinel when no
+        further edge exists.  ``scenarios_at`` is constant over
+        ``[q, next_change(q))``."""
+        i = bisect.bisect_right(self._edges, q)
+        if i < len(self._edges):
+            return self._edges[i]
+        return int(np.iinfo(np.int64).max)
 
     def scenarios_at(self, q: int) -> List[int]:
         """Per-EP scenario vector for query ``q`` (0 = no interference)."""

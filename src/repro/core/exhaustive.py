@@ -11,11 +11,18 @@ brute-force enumerator is retained for cross-checking on small instances.
 from __future__ import annotations
 
 import itertools
+from functools import lru_cache
 from typing import List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.database import LayerDatabase
+
+
+@lru_cache(maxsize=8)
+def _invalid_mask(m: int) -> np.ndarray:
+    """invalid[j, lo] masks cut points past the boundary (lo > j)."""
+    return np.triu(np.ones((m + 1, m + 1), dtype=bool), k=1)
 
 
 def optimal_partition(db: LayerDatabase,
@@ -30,27 +37,23 @@ def optimal_partition(db: LayerDatabase,
     m = db.num_layers
     N = num_stages
     # prefix[k][j] = sum of layer times [0, j) under scenario k
-    prefix = np.zeros((db.table.shape[1], m + 1))
-    prefix[:, 1:] = np.cumsum(db.table.T, axis=1)
-
-    def seg(i: int, lo: int, hi: int) -> float:
-        k = scenarios[i]
-        return prefix[k, hi] - prefix[k, lo]
+    prefix = db.prefix_times()
 
     INF = float("inf")
     # dp[i][j] = min bottleneck placing first j layers on stages [0, i)
     dp = np.full((N + 1, m + 1), INF)
     choice = np.zeros((N + 1, m + 1), dtype=np.int64)
     dp[0, 0] = 0.0
+    invalid = _invalid_mask(m)
     for i in range(1, N + 1):
-        for j in range(m + 1):
-            best, arg = INF, 0
-            for lo in range(j + 1):
-                cost = max(dp[i - 1, lo], seg(i - 1, lo, j))
-                if cost < best:
-                    best, arg = cost, lo
-            dp[i, j] = best
-            choice[i, j] = arg
+        pref = prefix[scenarios[i - 1]]
+        # cost[j, lo] = max(dp[i-1, lo], time of layers [lo, j) on
+        # stage i-1); argmin along lo keeps the first (lowest-lo)
+        # minimum, matching a scalar scan's strict `<` tie-breaking.
+        cost = np.maximum(dp[i - 1][None, :], pref[:, None] - pref[None, :])
+        cost[invalid] = INF
+        dp[i] = cost.min(axis=1)
+        choice[i] = cost.argmin(axis=1)
     # Backtrack.
     config = [0] * N
     j = m

@@ -43,6 +43,7 @@ from repro.schedulers.base import SchedulerPolicy
 from repro.schedulers.registry import make_scheduler
 from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
 from repro.workloads import (
+    BatchRecord,
     PipelineTrace,
     QueryRecord,
     Workload,
@@ -75,7 +76,16 @@ class DatabaseQueryExecutor:
     model (pipelined when steady, serial during exploration trials).
     Provides the resource-constrained DP optimum as the trace's
     reference throughput.
+
+    Batch-granular fast path: the scenario vector is piecewise-constant
+    between interference-event edges, so a steady chunk needs exactly
+    one database gather per (config, scenario-segment) —
+    ``execute_many`` broadcasts it; ``steady_horizon`` is the distance
+    to the next event edge.  ``batch_mode = "vector"``: chunking is a
+    pure computational speedup, per-query semantics unchanged.
     """
+
+    batch_mode = "vector"
 
     def __init__(self, db: LayerDatabase, num_eps: int,
                  events: List[InterferenceEvent], oracle):
@@ -94,6 +104,9 @@ class DatabaseQueryExecutor:
             self.source.scenarios[:] = new_scen
         return self.source
 
+    def steady_horizon(self, q: int) -> int:
+        return self.timeline.next_change(q) - q
+
     def reference_throughput(self, q: int) -> float:
         return self._oracle(tuple(self.scenarios))[1]
 
@@ -103,6 +116,16 @@ class DatabaseQueryExecutor:
                    else pipelined_latency(times))
         return QueryRecord(service_latency=latency,
                            throughput=throughput(times))
+
+    def execute_many(self, q0: int, steps) -> BatchRecord:
+        # Steady chunks share one (config, scenario-segment): one
+        # database gather serves every query in the chunk, broadcast
+        # to the chunk without materializing per-query copies.
+        times = self.source.stage_times(steps[0].config)
+        n = len(steps)
+        return BatchRecord(
+            service_latencies=np.broadcast_to(pipelined_latency(times), n),
+            throughputs=np.broadcast_to(throughput(times), n))
 
 
 def simulate(db: LayerDatabase,
@@ -117,7 +140,9 @@ def simulate(db: LayerDatabase,
              events: Optional[List[InterferenceEvent]] = None,
              initial_config: Optional[List[int]] = None,
              workload: Union[str, Workload, None] = "closed",
-             workload_kwargs: Optional[dict] = None) -> PipelineTrace:
+             workload_kwargs: Optional[dict] = None,
+             chunking: bool = True,
+             max_chunk: Optional[int] = None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -128,6 +153,10 @@ def simulate(db: LayerDatabase,
     workload_kwargs={"rate": ..., "seed": ...}``).
     ``rel_threshold=None`` uses the shared
     :data:`repro.schedulers.DEFAULT_REL_THRESHOLD`.
+
+    ``chunking=False`` forces the scalar per-query tick (the fast path
+    is the default; closed-loop traces are bit-identical either way —
+    see docs/WORKLOADS.md "Batching & the fast path").
     """
     if events is None:
         events = generate_events(num_queries, num_eps, db.num_scenarios,
@@ -171,7 +200,8 @@ def simulate(db: LayerDatabase,
 
     return run_pipeline(executor, runtime, num_queries,
                         workload=workload, workload_kwargs=workload_kwargs,
-                        scheduler_name=sched_name, peak_throughput=peak)
+                        scheduler_name=sched_name, peak_throughput=peak,
+                        chunking=chunking, max_chunk=max_chunk)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

@@ -51,6 +51,10 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=50.0,
                     help="open-loop arrival rate, q/s (poisson rate / "
                          "bursty burst_rate; bursty idles between bursts)")
+    ap.add_argument("--max-batch", type=int, default=1,
+                    help="batched serving: stack up to N queued arrivals "
+                         "per dispatch (docs/WORKLOADS.md; >1 only pays "
+                         "off for open-loop workloads with bursts)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -93,7 +97,8 @@ def main() -> None:
                          mean_gap=10.0 / args.rate * args.eps,
                          seed=args.seed)
     metrics = eng.serve(queries, schedule, workload=args.workload,
-                        workload_kwargs=wl_kwargs)
+                        workload_kwargs=wl_kwargs,
+                        max_batch=args.max_batch)
     s = metrics.summary()
     s["final_config"] = metrics.configs[-1]
     if args.json:

@@ -67,13 +67,39 @@ class LocalPipelineExecutor:
         self._stage_fn = stage_fn
         self._embed_fn = embed_fn
         self._head_fn = head_fn
+        self._warmed = set()       # (batch, seq) shapes already compiled
 
     # -- warmup ---------------------------------------------------------------
     def warmup(self, batch: int, seq: int) -> None:
         x = jnp.zeros((batch, seq), jnp.int32)
         self.run_query(x, [self.cfg.num_blocks])
+        self._warmed.add((batch, seq))
+
+    def ensure_warm(self, batch: int, seq: int) -> None:
+        """Compile the (batch, seq) input shape if not yet seen.
+
+        The executor is recompile-free across *configurations* (stage
+        bounds are runtime arguments), but XLA still specializes on the
+        input shape — so a batched dispatch must never pay (or measure)
+        a first-shape compile inside the serving loop."""
+        if (batch, seq) not in self._warmed:
+            self.warmup(batch, seq)
 
     # -- execution --------------------------------------------------------------
+    def _device_bounds(self, config: Sequence[int]) -> List[tuple]:
+        """Stage bounds as committed device scalars.
+
+        Hoisted out of the timed stage loop so the host→device transfer
+        of the ``lo``/``hi`` runtime arguments — and its jitter — never
+        lands inside a stage-time measurement the scheduler consumes.
+        """
+        bounds = [(jnp.int32(lo), jnp.int32(hi))
+                  for lo, hi in stage_bounds(config)]
+        for lo, hi in bounds:
+            lo.block_until_ready()
+            hi.block_until_ready()
+        return bounds
+
     def run_query(self, tokens: jnp.ndarray, config: Sequence[int],
                   slowdowns: Optional[Sequence[float]] = None
                   ) -> tuple:
@@ -86,13 +112,13 @@ class LocalPipelineExecutor:
         """
         B, S = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        bounds = self._device_bounds(config)
         x = self._embed_fn(self.params, tokens)
         x.block_until_ready()
         times = np.zeros(len(config))
-        for s, (lo, hi) in enumerate(stage_bounds(config)):
+        for s, (lo, hi) in enumerate(bounds):
             t0 = time.perf_counter()
-            x = self._stage_fn(self.params, x, positions,
-                               jnp.int32(lo), jnp.int32(hi))
+            x = self._stage_fn(self.params, x, positions, lo, hi)
             x.block_until_ready()
             dt = time.perf_counter() - t0
             if slowdowns is not None and slowdowns[s] > 1.0:
@@ -104,6 +130,32 @@ class LocalPipelineExecutor:
         logits.block_until_ready()
         return logits, times
 
+    def run_batch(self, queries: Sequence[jnp.ndarray],
+                  config: Sequence[int],
+                  slowdowns: Optional[Sequence[float]] = None
+                  ) -> tuple:
+        """Run a stacked batch of queries through the pipeline once.
+
+        ``queries`` are ``[B_i, S]`` token arrays with one shared
+        sequence length; they are concatenated along the batch axis and
+        every stage executes a single time over the stacked batch — the
+        same jitted ``stage_fn`` (the batch dimension was always a
+        runtime size), so a burst of B queries pays one set of stage
+        dispatches + device syncs instead of B of them.
+
+        Returns (logits ``[sum(B_i), S, V]``, stage_times ndarray).
+        Stage times cover the whole batch; per-query attribution is the
+        caller's policy (the serving engine divides by the batch size).
+        """
+        if len(queries) == 0:
+            raise ValueError("run_batch needs at least one query")
+        if len({int(t.shape[-1]) for t in queries}) != 1:
+            raise ValueError("run_batch queries must share one sequence "
+                             "length (pad or group by length upstream)")
+        tokens = (queries[0] if len(queries) == 1
+                  else jnp.concatenate(list(queries), axis=0))
+        return self.run_query(tokens, config, slowdowns=slowdowns)
+
     def measure_block_times(self, tokens: jnp.ndarray,
                             repeats: int = 3) -> np.ndarray:
         """Per-block clean execution times (database column 0)."""
@@ -111,6 +163,11 @@ class LocalPipelineExecutor:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         x = self._embed_fn(self.params, tokens)
         L = self.cfg.num_blocks
+        # One committed device scalar per block boundary, outside the
+        # timed region (same hoist as run_query).
+        edges = [jnp.int32(i) for i in range(L + 1)]
+        for e in edges:
+            e.block_until_ready()
         times = np.zeros((repeats, L))
         for r in range(repeats):
             h = x
@@ -118,7 +175,7 @@ class LocalPipelineExecutor:
                 h.block_until_ready()
                 t0 = time.perf_counter()
                 h = self._stage_fn(self.params, h, positions,
-                                   jnp.int32(i), jnp.int32(i + 1))
+                                   edges[i], edges[i + 1])
                 h.block_until_ready()
                 times[r, i] = time.perf_counter() - t0
         return times.min(axis=0)
@@ -129,6 +186,9 @@ class MeasuredTimeSource:
 
     Bridges the executor world to the ODIN/LLS controllers: stage time =
     sum of its blocks' measured clean times × the EP's current slowdown.
+    Polled on every exploration trial, so the per-stage reduction is one
+    ``np.add.reduceat`` over the config's block offsets instead of a
+    Python loop over stages.
     """
 
     def __init__(self, block_times: np.ndarray, slowdowns: np.ndarray):
@@ -136,9 +196,13 @@ class MeasuredTimeSource:
         self.slowdowns = np.asarray(slowdowns, float)  # per EP
 
     def stage_times(self, config: Sequence[int]) -> np.ndarray:
-        out = np.zeros(len(config))
-        lo = 0
-        for i, c in enumerate(config):
-            out[i] = self.block_times[lo:lo + c].sum() * self.slowdowns[i]
-            lo += c
-        return out
+        counts = np.asarray(config, dtype=np.int64)
+        out = np.zeros(len(counts))
+        nz = counts > 0
+        if nz.any():
+            starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+            # reduceat over the offsets of non-empty stages only: each
+            # segment then ends exactly at the next non-empty stage's
+            # start (empty stages contribute no blocks and stay 0).
+            out[nz] = np.add.reduceat(self.block_times, starts[nz])
+        return out * self.slowdowns

@@ -58,7 +58,16 @@ class Explorer(Protocol):
 
 @runtime_checkable
 class SchedulerPolicy(Protocol):
-    """A pluggable mitigation policy: decides, the runtime executes."""
+    """A pluggable mitigation policy: decides, the runtime executes.
+
+    Policies may additionally expose ``steady_detect_stable: bool``:
+    True declares that ``detect`` has no side effects and returns a
+    constant answer while (config, stage times) are unchanged — and
+    stays quiet right after ``finish`` re-arms it.  The run loop's
+    batch-granular fast path then polls once per environment-steady
+    segment instead of once per query.  Absent (or False) keeps
+    per-query polling, which is always correct.
+    """
 
     def detect(self, config: Sequence[int], source: StageTimeSource) -> bool:
         """True if a rebalancing phase should start now."""
@@ -111,6 +120,17 @@ class InterferenceDetector:
         self.hysteresis = max(1, int(hysteresis))
         self._ref: Optional[float] = None
         self._streak = 0
+
+    @property
+    def steady_stable(self) -> bool:
+        """Whether repeated quiet observations are side-effect-free.
+
+        The paper's ``rel`` rule is a pure comparison against the
+        post-rebalance reference, so skipping redundant observations in
+        an unchanged environment cannot alter any later decision.  The
+        EMA mode folds every quiet observation into the reference, so
+        it must see each query."""
+        return self.mode == "rel"
 
     def observe(self, config: Sequence[int],
                 source: StageTimeSource) -> bool:

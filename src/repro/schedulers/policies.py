@@ -51,6 +51,13 @@ class _DetectorPolicy:
                  detector: DetectorSpec = None):
         self.detector = _make_detector(detector, rel_threshold)
 
+    @property
+    def steady_detect_stable(self) -> bool:
+        """Fast-path contract (see ``SchedulerPolicy``): the paper's
+        pure ``rel`` rule tolerates one poll per steady segment; the
+        stateful EMA mode must observe every query."""
+        return self.detector.steady_stable
+
     def detect(self, config: Sequence[int],
                source: StageTimeSource) -> bool:
         return self.detector.observe(config, source)
@@ -95,6 +102,8 @@ class LLSPolicy(_DetectorPolicy):
 class StaticPolicy:
     """Static pipeline: never rebalances (the paper's 'no mitigation')."""
 
+    steady_detect_stable = True
+
     def detect(self, config: Sequence[int],
                source: StageTimeSource) -> bool:
         return False
@@ -137,6 +146,11 @@ class OraclePolicy:
     the optimum is recomputed on every detect, no bottleneck-threshold
     detector is needed: detection is simply "the optimum moved".
     """
+
+    # Detect recomputes the optimum from (config, current stage times)
+    # and commits instantly when it moves, so under an unchanged
+    # environment one poll answers for the whole segment.
+    steady_detect_stable = True
 
     def __init__(self, solver: Callable[[Sequence[int], StageTimeSource],
                                         Sequence[int]]):

@@ -66,6 +66,21 @@ class RebalanceRuntime:
         """True while a rebalancing phase is in progress."""
         return self.explorer is not None
 
+    def steady_poll_stable(self) -> bool:
+        """True when one steady ``poll`` answers for a whole chunk.
+
+        The run loop's vectorized fast path polls once per
+        environment-steady segment instead of once per query.  That is
+        equivalent exactly when the policy advertises
+        ``steady_detect_stable``: ``detect`` is side-effect-free and
+        returns the same answer while (config, stage times) are
+        unchanged, including immediately after ``finish`` re-arms it.
+        True for the built-in policies on the paper's pure relative
+        threshold; False for the EMA/hysteresis detector mode (every
+        observation moves the reference) and for unknown plugins.
+        """
+        return bool(getattr(self.policy, "steady_detect_stable", False))
+
     def steady_step(self) -> RuntimeStep:
         """A pipelined step on the committed config, without polling.
 

@@ -25,6 +25,12 @@ EMA/hysteresis mode (measured times jitter query-to-query; see
 Interference is injected as per-EP slowdown factors (emulating co-located
 tenants; the measured-database builder in tools/ uses real co-running
 stressor processes instead).
+
+``serve(..., max_batch=N)`` enables batched serving: open-loop arrivals
+that queued up behind the pipeline are stacked and executed through
+``LocalPipelineExecutor.run_batch`` — one set of stage dispatches per
+burst — while the detect → explore → commit machinery still observes
+every query (docs/WORKLOADS.md "Batching & the fast path").
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ from repro.schedulers.defaults import DEFAULT_ALPHA, MEASURED_DETECTOR_MODE
 from repro.schedulers.registry import make_scheduler
 from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
 from repro.workloads import (
+    BatchRecord,
     PipelineTrace,
     QueryRecord,
     Workload,
@@ -64,14 +71,33 @@ class _LiveQueryExecutor:
     engine's online per-block time estimates.  Until the first query has
     been measured there are no estimates to reason over, so
     ``begin_query`` returns ``None`` and the query runs steady.
+
+    With ``max_batch > 1`` the executor opts into the run loop's real
+    batching (``batch_mode = "batch"``): queries that have already
+    arrived are drained into one stacked
+    :meth:`~repro.pipeline.executor.LocalPipelineExecutor.run_batch`
+    call — one set of stage dispatches + device syncs per burst instead
+    of one per query.  The scheduler is still polled per query (the
+    EMA/hysteresis detector must see every observation), so
+    rebalance/trial accounting stays aligned with the unbatched run.
     """
 
     def __init__(self, engine: "ServingEngine",
-                 queries: Sequence[jnp.ndarray], slowdown_schedule):
+                 queries: Sequence[jnp.ndarray], slowdown_schedule,
+                 max_batch: int = 1):
         self.engine = engine
         self.queries = queries
         self.schedule = slowdown_schedule
+        self.max_batch = max(1, int(max_batch))
         self._slow: Optional[np.ndarray] = None
+
+    @property
+    def batch_mode(self) -> Optional[str]:
+        return "batch" if self.max_batch > 1 else None
+
+    @property
+    def max_chunk(self) -> int:
+        return self.max_batch
 
     def begin_query(self, q: int) -> Optional[MeasuredTimeSource]:
         self._slow = np.asarray(self.schedule(q), float)
@@ -79,34 +105,90 @@ class _LiveQueryExecutor:
             return None
         return MeasuredTimeSource(self.engine._block_times, self._slow)
 
+    def steady_horizon(self, q: int) -> int:
+        """Constant-interference run length from ``q``: a batch must
+        share one slowdown vector (a schedule edge ends the chunk)."""
+        base = np.asarray(self.schedule(q), float)
+        n = 1
+        while (n < self.max_batch and q + n < len(self.queries)
+               and np.array_equal(np.asarray(self.schedule(q + n), float),
+                                  base)):
+            n += 1
+        return n
+
+    def _measure(self, config, first_measurement: bool):
+        """Post-execution bookkeeping shared by both paths: bottleneck
+        time, EMA estimate refresh, first-measurement detector arming."""
+        eng = self.engine
+
+        def finish(stage_times_per_query: np.ndarray) -> float:
+            live = [i for i, c in enumerate(config) if c > 0]
+            tmax = float(stage_times_per_query[live].max())
+            eng._update_block_estimates(config, stage_times_per_query,
+                                        self._slow)
+            if first_measurement:
+                # Arm detection against this query's measured
+                # conditions, so interference beginning at the very
+                # next query is a shift from this baseline rather
+                # than the baseline.
+                eng.runtime.arm(
+                    MeasuredTimeSource(eng._block_times, self._slow))
+            return tmax
+
+        return finish
+
     def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
         eng = self.engine
-        first_measurement = eng._block_times is None
+        finish = self._measure(step.config, eng._block_times is None)
         t0 = time.perf_counter()
         _, st = eng.executor.run_query(self.queries[q], step.config,
                                        slowdowns=self._slow)
         latency = time.perf_counter() - t0
-        live = [i for i, c in enumerate(step.config) if c > 0]
-        tmax = float(st[live].max())
-        eng._update_block_estimates(step.config, st, self._slow)
-        if first_measurement:
-            # Arm detection against this query's measured conditions,
-            # so interference beginning at the very next query is a
-            # shift from this baseline rather than the baseline.
-            eng.runtime.arm(
-                MeasuredTimeSource(eng._block_times, self._slow))
+        tmax = finish(st)
         return QueryRecord(service_latency=latency,
                            throughput=1.0 / max(tmax, 1e-12))
+
+    def execute_many(self, q0: int, steps) -> BatchRecord:
+        eng = self.engine
+        n = len(steps)
+        batch = [self.queries[q0 + i] for i in range(n)]
+        # Never measure a first-shape XLA compile as service time.
+        eng.executor.ensure_warm(sum(int(t.shape[0]) for t in batch),
+                                 int(batch[0].shape[-1]))
+        finish = self._measure(steps[0].config, eng._block_times is None)
+        t0 = time.perf_counter()
+        _, st = eng.executor.run_batch(batch, steps[0].config,
+                                       slowdowns=self._slow)
+        wall = time.perf_counter() - t0
+        # Stage times cover the whole batch; the per-query estimate the
+        # EMA consumes is the per-query share.
+        tmax = max(finish(st / n), 1e-12)
+        # The batch holds the admission head for one batch-bottleneck
+        # beat (per-query occupancy = tmax_batch / n) and every member
+        # completes when the batch drains.  The run loop staggers member
+        # starts by exactly that occupancy (members are queued by
+        # construction), so attributing service = wall - i * occupancy
+        # lands every completion at dispatch + wall — the stagger is
+        # head-of-line accounting, not extra service.
+        return BatchRecord(
+            service_latencies=wall - np.arange(n) * tmax,
+            throughputs=np.broadcast_to(1.0 / tmax, n))
 
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Dict, num_eps: int,
                  scheduler: Union[str, SchedulerPolicy] = "odin",
                  alpha: int = DEFAULT_ALPHA,
-                 rel_threshold: Optional[float] = None):
+                 rel_threshold: Optional[float] = None,
+                 estimate_beta: float = 0.5):
         self.cfg = cfg
         self.executor = LocalPipelineExecutor(cfg, params)
         self.num_eps = num_eps
+        # Weight of the newest measurement in the per-block clean-time
+        # EMA.  0.5 (default) tracks fast; smaller values smooth
+        # measurement jitter out of the estimates the explorer compares,
+        # making exploration walks reproducible on noisy hosts.
+        self.estimate_beta = float(estimate_beta)
         if isinstance(scheduler, str):
             self.policy = make_scheduler(scheduler, alpha=alpha,
                                          rel_threshold=rel_threshold,
@@ -127,6 +209,15 @@ class ServingEngine:
         """Current committed stage configuration."""
         return list(self.runtime.config)
 
+    def reset_policy(self) -> None:
+        """Fresh serving window: abandon any in-flight phase, re-arm
+        detection, and restart from the balanced initial configuration.
+        Online block-time estimates are kept (they describe the model,
+        not the window) — combined with ``estimate_beta = 0`` this makes
+        scheduling decisions reproducible across serving windows, e.g.
+        for A/B comparisons of ``serve(..., max_batch=...)``."""
+        self.runtime.reset(self._initial_config)
+
     def estimated_peak_throughput(self) -> float:
         """Interference-free throughput of the starting configuration,
         from the online clean per-block estimates — the live analogue of
@@ -141,21 +232,31 @@ class ServingEngine:
     def _update_block_estimates(self, config: Sequence[int],
                                 stage_times: np.ndarray,
                                 slowdowns: Sequence[float]) -> None:
-        """Refresh per-block clean-time estimates from a measured query."""
+        """Refresh per-block clean-time estimates from a measured query.
+
+        Vectorized: one ``np.repeat`` spreads each stage's de-slowed
+        per-block time over its blocks (empty stages repeat zero times
+        and contribute nothing), one fused EMA update runs in place.
+        The first measurement seeds the estimates directly — averaging
+        against a placeholder would hand the detector a reference that
+        drifts for the next ~1/beta queries.
+        """
+        counts = np.asarray(config, dtype=np.int64)
+        per_stage = (np.asarray(stage_times, float)
+                     / np.maximum(np.asarray(slowdowns, float), 1e-9)
+                     / np.maximum(counts, 1))
+        per_block = np.repeat(per_stage, counts)
         if self._block_times is None:
-            self._block_times = np.full(self.cfg.num_blocks, 1e-3)
-        lo = 0
-        for s, c in enumerate(config):
-            if c > 0:
-                per_block = stage_times[s] / max(slowdowns[s], 1e-9) / c
-                self._block_times[lo:lo + c] = (
-                    0.5 * self._block_times[lo:lo + c] + 0.5 * per_block)
-            lo += c
+            self._block_times = per_block.copy()
+            return
+        b = self.estimate_beta
+        self._block_times[:] = (1.0 - b) * self._block_times + b * per_block
 
     def serve(self, queries: Sequence[jnp.ndarray],
               slowdown_schedule,
               workload: Union[str, Workload, None] = "closed",
-              workload_kwargs: Optional[dict] = None) -> PipelineTrace:
+              workload_kwargs: Optional[dict] = None,
+              max_batch: int = 1) -> PipelineTrace:
         """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
         slowdown factors (>= 1.0)``.
 
@@ -164,8 +265,17 @@ class ServingEngine:
         open-loop workloads (rates in queries/second of wall-clock
         service time) additionally report queueing delay and offered
         vs. achieved load in the returned trace.
+
+        ``max_batch > 1`` turns on batched serving (docs/WORKLOADS.md
+        "Batching & the fast path"): queued arrivals are stacked and
+        executed together, up to ``max_batch`` per dispatch, so bursts
+        amortize stage dispatch + sync overhead instead of queueing
+        one-by-one.  Batches never span an interference edge or a
+        rebalance, and only queries that have already arrived join
+        (a closed loop therefore still serves one at a time).
         """
-        live = _LiveQueryExecutor(self, queries, slowdown_schedule)
+        live = _LiveQueryExecutor(self, queries, slowdown_schedule,
+                                  max_batch=max_batch)
         trace = run_pipeline(live, self.runtime, len(queries),
                              workload=workload,
                              workload_kwargs=workload_kwargs,

@@ -7,6 +7,7 @@ JAX serving engine; every run yields the unified :class:`PipelineTrace`
 metric surface.
 """
 from repro.workloads.base import (  # noqa: F401
+    BatchRecord,
     QueryExecutor,
     QueryRecord,
     Workload,
@@ -25,6 +26,7 @@ from repro.workloads.registry import (  # noqa: F401
     workload_class,
 )
 from repro.workloads.runner import (  # noqa: F401
+    DEFAULT_MAX_CHUNK,
     resolve_workload,
     run_pipeline,
 )

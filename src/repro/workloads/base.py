@@ -55,6 +55,34 @@ class QueryRecord:
     throughput: float
 
 
+@dataclasses.dataclass
+class BatchRecord:
+    """What one executed *chunk* of queries reports back to the run loop.
+
+    The batch-granular analogue of :class:`QueryRecord`: per-query
+    arrays, index-aligned with the chunk.  Chunks are always
+    environment-steady (one configuration, one interference state), so
+    in practice every entry is the same value — but executors that
+    attribute measured time non-uniformly may vary them, as long as the
+    implied completion times stay non-decreasing (the run loop's
+    vectorized ledger relies on that monotonicity).
+    """
+
+    #: Per-query time in service (excludes arrival-queue wait).
+    service_latencies: np.ndarray
+    #: Per-query pipeline capability.  ``1 / throughput`` is how long
+    #: the query holds the admission head; a real stacked batch reports
+    #: ``batch_size / bottleneck_stage_time`` for each member so the
+    #: whole batch occupies the head for one bottleneck beat.
+    throughputs: np.ndarray
+
+    def __post_init__(self):
+        self.service_latencies = np.asarray(self.service_latencies, float)
+        self.throughputs = np.asarray(self.throughputs, float)
+        if self.service_latencies.shape != self.throughputs.shape:
+            raise ValueError("BatchRecord arrays must be index-aligned")
+
+
 class QueryExecutor(Protocol):
     """One query's environment + execution, driver-specific.
 
@@ -62,6 +90,23 @@ class QueryExecutor(Protocol):
     -> float`` — the resource-constrained optimum under query ``q``'s
     interference (the simulator's DP oracle); the run loop records it
     into ``PipelineTrace.rc_throughputs`` when present.
+
+    Executors that can service several queries at once opt into the
+    run loop's batch-granular fast path by additionally providing:
+
+    * ``batch_mode`` — ``"vector"`` (chunks are a pure computational
+      speedup; per-query semantics unchanged, e.g. the simulator's
+      array lookups) or ``"batch"`` (chunks are *real* batches whose
+      members share one execution, e.g. the live engine stacking token
+      arrays).  ``None`` / absent keeps the scalar path.
+    * ``execute_many(q0, steps) -> BatchRecord`` — run queries
+      ``q0 .. q0+len(steps)-1``; all steps are steady and share one
+      configuration.
+    * ``steady_horizon(q) -> int`` — how many queries starting at ``q``
+      the environment is guaranteed constant for (same interference
+      state); chunks never cross this boundary.
+    * ``max_chunk`` (optional int) — executor-preferred chunk cap
+      (e.g. the live engine's ``max_batch``).
     """
 
     def begin_query(self, q: int) -> Optional[StageTimeSource]:

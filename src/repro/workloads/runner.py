@@ -18,11 +18,29 @@ arrive exactly when the head frees up — zero queue delay, bit-identical
 to the pre-workloads drivers.  Open-loop workloads arrive on their own
 clock; when arrivals outpace admission, queries wait and
 ``latency = queue_delay + service_latency``.
+
+Batch-granular fast path (docs/WORKLOADS.md "Batching & the fast
+path"): executors that provide ``execute_many`` are driven in *chunks*
+whenever the runtime is steady — no exploration phase in flight and no
+detector transition pending.  A chunk never crosses a
+rebalance-relevant boundary: an interference-event edge (the
+executor's ``steady_horizon``), a detector trigger, a configuration
+change, or the chunk cap.  Two flavors share the code:
+
+* ``batch_mode = "vector"`` — the chunk is a pure computational
+  speedup (the simulator): the scheduler is polled once per
+  environment-steady segment (valid when the policy advertises
+  ``steady_detect_stable``) and the whole arrival/queue/completion
+  ledger is computed with vectorized numpy instead of the scalar tick.
+* ``batch_mode = "batch"`` — the chunk is a *real* batch (the live
+  engine): the scheduler is still polled per query, but queries that
+  have already arrived are stacked and executed together, so a burst
+  pays one set of stage dispatches instead of one per query.
 """
 from __future__ import annotations
 
-import bisect
-from typing import TYPE_CHECKING, List, Optional, Union
+import heapq
+from typing import TYPE_CHECKING, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -32,6 +50,10 @@ from repro.workloads.trace import PipelineTrace
 
 if TYPE_CHECKING:  # annotation-only: keeps workloads <-> schedulers acyclic
     from repro.schedulers.runtime import RebalanceRuntime
+
+#: Fallback chunk cap when the executor does not prefer one.  Bounds the
+#: temporary per-chunk arrays; segments longer than this simply split.
+DEFAULT_MAX_CHUNK = 4096
 
 
 def resolve_workload(workload: Union[str, Workload, None],
@@ -47,19 +69,117 @@ def resolve_workload(workload: Union[str, Workload, None],
     return workload
 
 
+class _CompletionLedger:
+    """Completion times of admitted-but-unfinished queries.
+
+    Replaces the old never-pruned ``bisect.insort`` list (O(n²) time and
+    O(n) memory over a run) with a pruned min-heap: arrivals are
+    monotone, so any completion ``<= arrival`` can never be counted by a
+    later depth query and is dropped as the run advances — million-query
+    runs stay O(n log n) with flat memory (the heap holds only the
+    in-system queries, ~pipeline depth).
+    """
+
+    def __init__(self):
+        self._heap: List[float] = []
+        self._idx = np.arange(256)     # grown on demand, reused per chunk
+
+    def depth_at(self, arrival: float) -> int:
+        """In-system depth seen by an arrival (completions > arrival)."""
+        heap = self._heap
+        while heap and heap[0] <= arrival:
+            heapq.heappop(heap)
+        return len(heap)
+
+    def push(self, completion: float) -> None:
+        heapq.heappush(self._heap, completion)
+
+    def depths_bulk(self, arrivals: np.ndarray,
+                    completions: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`depth_at` + :meth:`push` for one chunk.
+
+        ``arrivals`` and ``completions`` are the chunk's index-aligned
+        ledger arrays; both are non-decreasing (chunks are
+        environment-steady).  Depth ``i`` counts prior in-flight
+        completions plus chunk members ``j < i`` still in flight.
+        """
+        if len(completions) > 1:
+            dec = completions[:-1] - completions[1:]
+            # Executors attribute per-query times with float arithmetic
+            # whose rounding can wiggle mathematically-equal completions
+            # by an ulp; only a *real* decrease breaks the contract.
+            if bool(np.any(dec > 1e-9 * np.abs(completions[:-1]))):
+                raise ValueError(
+                    "chunk completion times must be non-decreasing")
+            # Identity for truly monotone chunks (the simulator's — its
+            # bit-exactness is untouched); irons out ulp wiggles so the
+            # binary searches below stay well-defined.
+            completions = np.maximum.accumulate(completions)
+        prior = np.sort(self._heap) if self._heap else np.empty(0)
+        depths = (len(prior) - np.searchsorted(prior, arrivals, side="right"))
+        # Chunk members j < i with completion_j > arrival_i: completions
+        # are monotone, so every counted entry precedes i (min-clip
+        # handles the completion == arrival equality edge exactly).
+        if len(arrivals) > len(self._idx):
+            self._idx = np.arange(len(arrivals))
+        idx = self._idx[:len(arrivals)]
+        intra_done = np.searchsorted(completions, arrivals, side="right")
+        depths = depths + idx - np.minimum(intra_done, idx)
+        # Re-arm the heap: everything <= the chunk's last arrival can
+        # never be counted again (arrivals are monotone run-wide).
+        last = arrivals[-1]
+        merged = np.concatenate([prior[prior > last],
+                                 completions[completions > last]])
+        self._heap = merged.tolist()
+        heapq.heapify(self._heap)
+        return depths
+
+
+def _chunk_ledger(arrivals_chunk: Optional[np.ndarray],
+                  occupancy: np.ndarray,
+                  free_at: float) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Vectorized admission for one steady chunk.
+
+    Returns ``(arrival, start, new_free_at)`` replicating the scalar
+    recursion ``start_i = max(arrival_i, free_{i-1})``,
+    ``free_i = start_i + occupancy_i``.  The closed loop (``arrivals_chunk
+    is None``) uses a prepended cumsum so every floating-point addition
+    happens in the same order as the scalar tick — bit-identical traces.
+    The open loop uses the max-plus closed form
+    (``np.maximum.accumulate``), exact up to float re-association.
+    """
+    if arrivals_chunk is None:
+        # arrival_i = ready_i = free_{i-1}; start = arrival.
+        c = np.cumsum(np.concatenate(([free_at], occupancy)))
+        start = c[:-1]
+        return start, start, float(c[-1])
+    # start_i = O_i + max(free_at, max_{j<=i}(arrival_j - O_j)) with
+    # O the exclusive prefix sum of occupancies.
+    excl = np.concatenate(([0.0], np.cumsum(occupancy)[:-1]))
+    base = np.maximum.accumulate(arrivals_chunk - excl)
+    start = np.maximum(base, free_at) + excl
+    return arrivals_chunk, start, float(start[-1] + occupancy[-1])
+
+
 def run_pipeline(executor: QueryExecutor,
                  runtime: RebalanceRuntime,
                  num_queries: int,
                  workload: Union[str, Workload, None] = "closed",
                  workload_kwargs: Optional[dict] = None,
                  scheduler_name: str = "",
-                 peak_throughput: float = float("nan")) -> PipelineTrace:
+                 peak_throughput: float = float("nan"),
+                 chunking: bool = True,
+                 max_chunk: Optional[int] = None) -> PipelineTrace:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
 
     ``runtime`` counters are snapshotted so the trace reports *this
     run's* rebalance accounting even when a runtime is reused across
     serving windows (the live engine's pattern).
+
+    ``chunking=False`` forces the scalar per-query tick even when the
+    executor supports ``execute_many`` (benchmark baseline / debugging);
+    ``max_chunk`` overrides the executor's preferred chunk cap.
     """
     wl = resolve_workload(workload, workload_kwargs)
     wl_name = getattr(wl, "name", type(wl).__name__)
@@ -74,6 +194,26 @@ def run_pipeline(executor: QueryExecutor,
     mitigations0 = len(runtime.mitigation_lengths)
     has_reference = hasattr(executor, "reference_throughput")
 
+    mode = getattr(executor, "batch_mode", None) if chunking else None
+    if mode is not None and not callable(getattr(executor, "execute_many",
+                                                 None)):
+        mode = None
+    if mode not in (None, "vector", "batch"):
+        raise ValueError(f"unknown executor batch_mode {mode!r}; "
+                         f"expected 'vector', 'batch' or None")
+    if mode is not None and not callable(getattr(executor, "steady_horizon",
+                                                 None)):
+        raise ValueError("a batching executor must provide "
+                         "steady_horizon(q); chunks must not cross an "
+                         "interference edge")
+    cap = (max_chunk if max_chunk is not None
+           else getattr(executor, "max_chunk", DEFAULT_MAX_CHUNK))
+    cap = max(1, int(cap))
+    # "vector" chunks poll the scheduler once per environment-steady
+    # segment, which is only equivalent to per-query polling when the
+    # policy's steady detect is stable (pure under unchanged conditions).
+    poll_once = mode == "vector" and runtime.steady_poll_stable()
+
     latencies = np.zeros(num_queries)
     service_lat = np.zeros(num_queries)
     queue_delay = np.zeros(num_queries)
@@ -87,30 +227,20 @@ def run_pipeline(executor: QueryExecutor,
 
     free_at = 0.0                  # when the admission head frees up
     drain_at = 0.0                 # when every admitted query has completed
-    pending: List[float] = []      # completion times of admitted queries
+    pending = _CompletionLedger()  # completions of in-system queries
 
-    for q in range(num_queries):
-        # -- advance the environment; poll the scheduler runtime ----------
-        source = executor.begin_query(q)
-        if rc_thr is not None:
-            rc_thr[q] = executor.reference_throughput(q)
-        step = runtime.poll(source) if source is not None \
-            else runtime.steady_step()
-
-        # -- execute the query -------------------------------------------
+    def scalar_tick(q, step):
+        """One query through the per-query (compatibility) path."""
+        nonlocal free_at, drain_at
         rec = executor.execute(q, step)
         throughputs[q] = rec.throughput
         serial_mask[q] = step.serial
         configs_trace.append(list(step.config))
-
-        # -- arrival-queue ledger ----------------------------------------
-        # A serial trial runs on the drained pipeline, so it cannot start
-        # until every in-flight pipelined query has completed.
+        # A serial trial runs on the drained pipeline, so it cannot
+        # start until every in-flight pipelined query has completed.
         ready = max(free_at, drain_at) if step.serial else free_at
         arrival = arrivals[q] if arrivals is not None else ready
-        # In-system depth at this arrival: admitted or waiting queries
-        # that have not yet completed (a full pipeline holds ~N).
-        queue_depth[q] = len(pending) - bisect.bisect_right(pending, arrival)
+        queue_depth[q] = pending.depth_at(arrival)
         start = max(arrival, ready)
         occupancy = (rec.service_latency if step.serial
                      else (1.0 / rec.throughput if rec.throughput > 0
@@ -118,13 +248,114 @@ def run_pipeline(executor: QueryExecutor,
         free_at = start + occupancy
         completion = start + rec.service_latency
         drain_at = max(drain_at, completion)
-        bisect.insort(pending, completion)
-
+        pending.push(completion)
         arrival_t[q] = arrival
         completion_t[q] = completion
         queue_delay[q] = start - arrival
         service_lat[q] = rec.service_latency
         latencies[q] = queue_delay[q] + rec.service_latency
+
+    def chunk_tick(q0, steps):
+        """``len(steps)`` steady queries through ``execute_many``."""
+        nonlocal free_at, drain_at
+        n = len(steps)
+        sl = slice(q0, q0 + n)
+        rec = executor.execute_many(q0, steps)
+        if len(rec.throughputs) != n:
+            raise ValueError(f"execute_many returned {len(rec.throughputs)} "
+                             f"records for a chunk of {n}")
+        throughputs[sl] = rec.throughputs
+        if steps[0] is steps[-1]:
+            # poll-once chunks replicate one step: share one row object
+            # instead of materializing n copies (entries are read-only
+            # by convention; the scalar path appends fresh lists).
+            configs_trace.extend([list(steps[0].config)] * n)
+        else:
+            configs_trace.extend(list(s.config) for s in steps)
+        occ = np.where(rec.throughputs > 0, 1.0 / rec.throughputs, 0.0)
+        arr_chunk = arrivals[sl] if arrivals is not None else None
+        arrival, start, free_at = _chunk_ledger(arr_chunk, occ, free_at)
+        completion = start + rec.service_latencies
+        queue_depth[sl] = pending.depths_bulk(arrival, completion)
+        drain_at = max(drain_at, float(completion[-1]))
+        arrival_t[sl] = arrival
+        completion_t[sl] = completion
+        queue_delay[sl] = start - arrival
+        service_lat[sl] = rec.service_latencies
+        latencies[sl] = queue_delay[sl] + rec.service_latencies
+
+    q = 0
+    while q < num_queries:
+        # -- advance the environment; poll the scheduler runtime ----------
+        source = executor.begin_query(q)
+        if rc_thr is not None:
+            rc_thr[q] = executor.reference_throughput(q)
+        step = runtime.poll(source) if source is not None \
+            else runtime.steady_step()
+
+        if mode is None or step.serial:
+            scalar_tick(q, step)
+            q += 1
+            continue
+
+        if mode == "batch":
+            # A real batch only forms from queries already queued at
+            # dispatch time; don't pay the steady-horizon scan (up to
+            # max_chunk schedule evaluations) when there is no backlog.
+            dispatch_t = (max(free_at, arrivals[q]) if arrivals is not None
+                          else free_at)
+            if (arrivals is None or q + 1 >= num_queries
+                    or arrivals[q + 1] > dispatch_t):
+                chunk_tick(q, [step])
+                q += 1
+                continue
+
+        limit = min(num_queries - q,
+                    cap,
+                    max(1, int(executor.steady_horizon(q))))
+
+        if poll_once:
+            # One poll covers the whole environment-steady segment: the
+            # policy's detect is pure under unchanged (config, stage
+            # times), so queries q+1 .. q+limit-1 would poll identically.
+            n = limit
+            if rc_thr is not None:
+                rc_thr[q:q + n] = rc_thr[q]
+            chunk_tick(q, [step] * n)
+            q += n
+            continue
+
+        # Per-query polling ("batch" mode, or "vector" with a stateful
+        # detector): accumulate steady same-config queries, stopping at
+        # the steady horizon, the chunk cap, a detector trigger, a
+        # config change, or — for real batches — the arrival backlog
+        # (a query that has not arrived by dispatch time cannot join).
+        steps = [step]
+        leftover = None              # (q, step) polled but not chunk-able
+        dispatch_t = (max(free_at, arrivals[q]) if arrivals is not None
+                      else free_at)
+        j = q + 1
+        while j < q + limit:
+            if mode == "batch" and (arrivals is None
+                                    or arrivals[j] > dispatch_t):
+                break
+            src_j = executor.begin_query(j)
+            if rc_thr is not None:
+                rc_thr[j] = executor.reference_throughput(j)
+            step_j = runtime.poll(src_j) if src_j is not None \
+                else runtime.steady_step()
+            if step_j.serial or step_j.config != step.config:
+                leftover = (j, step_j)
+                break
+            steps.append(step_j)
+            j += 1
+        chunk_tick(q, steps)
+        q += len(steps)
+        if leftover is not None:
+            # Already polled (the trial/commit is charged to this
+            # query); execute it without re-advancing the runtime.
+            scalar_tick(*leftover)
+            q += 1
 
     return PipelineTrace(
         scheduler=scheduler_name,

@@ -1,0 +1,328 @@
+"""Batch-granular fast path: chunked == scalar, pruned ledger, vectorized
+helpers (docs/WORKLOADS.md "Batching & the fast path")."""
+import bisect
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EventTimeline,
+    InterferenceEvent,
+    generate_events,
+    simulate,
+    synthetic_database,
+)
+from repro.core.simulator import DatabaseQueryExecutor
+from repro.pipeline.executor import MeasuredTimeSource
+from repro.schedulers import RebalanceRuntime, make_scheduler
+from repro.serving.engine import ServingEngine
+from repro.workloads import BatchRecord, run_pipeline
+from repro.workloads.runner import _CompletionLedger
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+def _trace_fields(r):
+    return (r.latencies, r.throughputs, r.service_latencies, r.queue_delays,
+            r.arrival_times, r.completion_times, r.rc_throughputs)
+
+
+# ---------------------------------------------------------------------------
+# chunked == scalar: closed loop bit-identical, open loop within tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheduler", ["odin", "lls", "hybrid", "none",
+                                       "oracle"])
+@pytest.mark.parametrize("freq,dur", [(10, 10), (2, 100), (100, 10)])
+def test_closed_loop_chunked_bit_identical(db, scheduler, freq, dur):
+    """The fast path must change nothing: full per-query arrays,
+    configs, accounting, and queue depths — bit for bit — including the
+    paper's heavy-overlap setting (freq=2, dur=100) where rebalances
+    constantly interleave with the steady chunks."""
+    kw = dict(num_queries=500, freq_period=freq, duration=dur, seed=3)
+    if scheduler != "oracle":
+        kw["alpha"] = 4
+    a = simulate(db, 4, scheduler=scheduler, chunking=False, **kw)
+    b = simulate(db, 4, scheduler=scheduler, chunking=True, **kw)
+    for x, y in zip(_trace_fields(a), _trace_fields(b)):
+        assert np.array_equal(x, y)
+    assert np.array_equal(a.serial_mask, b.serial_mask)
+    assert np.array_equal(a.queue_depths, b.queue_depths)
+    assert a.configs_trace == b.configs_trace
+    assert a.num_rebalances == b.num_rebalances
+    assert a.total_trials == b.total_trials
+    assert a.mitigation_lengths == b.mitigation_lengths
+
+
+@pytest.mark.parametrize("workload,wl_kwargs", [
+    ("poisson", dict(rate=0.012, seed=7)),
+    ("bursty", dict(burst_rate=0.03, base_rate=0.001,
+                    mean_burst=2000, mean_gap=4000, seed=3)),
+])
+@pytest.mark.parametrize("scheduler", ["odin", "none"])
+def test_open_loop_chunked_within_tolerance(db, workload, wl_kwargs,
+                                            scheduler):
+    """Open-loop chunks use the max-plus closed form, exact up to float
+    re-association: identical accounting and integer depths, per-query
+    times within 1e-9 relative."""
+    kw = dict(num_queries=500, freq_period=20, duration=10, seed=1,
+              workload=workload, workload_kwargs=wl_kwargs)
+    a = simulate(db, 4, scheduler=scheduler, chunking=False, **kw)
+    b = simulate(db, 4, scheduler=scheduler, chunking=True, **kw)
+    for x, y in zip(_trace_fields(a), _trace_fields(b)):
+        assert np.allclose(x, y, rtol=1e-9, atol=0.0)
+    assert np.array_equal(a.serial_mask, b.serial_mask)
+    assert np.array_equal(a.queue_depths, b.queue_depths)
+    assert a.configs_trace == b.configs_trace
+    assert a.num_rebalances == b.num_rebalances
+    assert a.total_trials == b.total_trials
+    # rebalances landing mid-chunk: the runs above must actually explore
+    if scheduler == "odin":
+        assert a.num_rebalances > 0
+
+
+def test_chunk_cap_still_bit_identical(db):
+    """A tiny max_chunk splits every segment into many chunks; results
+    must not depend on where the chunk boundaries fall."""
+    kw = dict(num_queries=400, freq_period=50, duration=25, seed=5,
+              scheduler="odin", alpha=4)
+    a = simulate(db, 4, chunking=False, **kw)
+    b = simulate(db, 4, chunking=True, max_chunk=7, **kw)
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.queue_depths, b.queue_depths)
+    assert a.configs_trace == b.configs_trace
+
+
+# ---------------------------------------------------------------------------
+# satellite: the pruned completion ledger (bisect.insort replacement)
+# ---------------------------------------------------------------------------
+
+
+def test_queue_depth_matches_unpruned_bisect_reference(db):
+    """Regression for the pruned heap: depth accounting is unchanged
+    from the old never-pruned ``bisect.insort`` ledger."""
+    r = simulate(db, 4, scheduler="odin", alpha=4, num_queries=400,
+                 freq_period=20, duration=10, seed=1, workload="poisson",
+                 workload_kwargs=dict(rate=0.02, seed=7))
+    assert r.queue_depths.max() > 4     # overloaded: the queue does grow
+    pending = []                        # the old unpruned ledger, verbatim
+    for q in range(len(r.latencies)):
+        arrival = r.arrival_times[q]
+        depth = len(pending) - bisect.bisect_right(pending, arrival)
+        assert r.queue_depths[q] == depth, f"depth diverged at q={q}"
+        bisect.insort(pending, r.completion_times[q])
+
+
+def test_completion_ledger_prunes_to_in_system_depth():
+    led = _CompletionLedger()
+    for t in (5.0, 3.0, 9.0, 7.0):
+        led.push(t)
+    assert led.depth_at(0.0) == 4
+    assert led.depth_at(4.0) == 3       # 3.0 pruned
+    assert len(led._heap) == 3          # flat memory: pruned, not kept
+    assert led.depth_at(9.0) == 0       # <= arrival never counts
+    assert len(led._heap) == 0
+
+
+def test_completion_ledger_bulk_matches_scalar():
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.uniform(0.0, 2.0, 64))
+    completions = arrivals + 3.0        # monotone, overlapping
+    scalar = _CompletionLedger()
+    prior = [1.0, 2.5, 40.0, 41.0]
+    for t in prior:
+        scalar.push(t)
+    expect = []
+    for a, c in zip(arrivals, completions):
+        expect.append(scalar.depth_at(a))
+        scalar.push(c)
+    bulk = _CompletionLedger()
+    for t in prior:
+        bulk.push(t)
+    got = bulk.depths_bulk(arrivals, completions)
+    assert np.array_equal(got, np.asarray(expect))
+    # both ledgers answer the next arrival identically afterwards
+    assert bulk.depth_at(arrivals[-1] + 1.0) == \
+        scalar.depth_at(arrivals[-1] + 1.0)
+
+
+def test_completion_ledger_rejects_decreasing_completions():
+    led = _CompletionLedger()
+    with pytest.raises(ValueError, match="non-decreasing"):
+        led.depths_bulk(np.array([1.0, 2.0]), np.array([5.0, 3.0]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: vectorized MeasuredTimeSource / block-estimate updates
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("config", [
+    [4, 4, 4, 4], [0, 8, 0, 8], [16, 0, 0, 0], [1, 0, 15, 0],
+    [0, 0, 0, 16], [2, 5, 6, 3],
+])
+def test_measured_time_source_reduceat_matches_loop(config):
+    rng = np.random.default_rng(1)
+    block_times = rng.uniform(0.5, 2.0, 16)
+    slowdowns = np.array([1.0, 2.5, 1.0, 3.0])
+    got = MeasuredTimeSource(block_times, slowdowns).stage_times(config)
+    ref = np.zeros(len(config))
+    lo = 0
+    for i, c in enumerate(config):
+        ref[i] = block_times[lo:lo + c].sum() * slowdowns[i]
+        lo += c
+    assert np.allclose(got, ref, rtol=1e-12)
+    assert got[np.asarray(config) == 0].sum() == 0.0
+
+
+@pytest.mark.parametrize("config", [[4, 4, 4, 4], [7, 0, 8, 1],
+                                    [16, 0, 0, 0]])
+def test_update_block_estimates_matches_loop_reference(config):
+    rng = np.random.default_rng(2)
+    old = rng.uniform(1e-3, 2e-3, 16)
+    stage_times = rng.uniform(0.01, 0.05, 4)
+    slowdowns = np.array([1.0, 3.0, 1.0, 2.0])
+    eng = SimpleNamespace(_block_times=old.copy(), estimate_beta=0.5,
+                          cfg=SimpleNamespace(num_blocks=16))
+    ServingEngine._update_block_estimates(eng, config, stage_times,
+                                          slowdowns)
+    ref = old.copy()
+    lo = 0
+    for s, c in enumerate(config):       # the old scalar loop, verbatim
+        if c > 0:
+            per_block = stage_times[s] / max(slowdowns[s], 1e-9) / c
+            ref[lo:lo + c] = 0.5 * ref[lo:lo + c] + 0.5 * per_block
+        lo += c
+    assert np.array_equal(eng._block_times, ref)
+
+
+def test_update_block_estimates_first_measurement_seeds_directly():
+    eng = SimpleNamespace(_block_times=None, estimate_beta=0.5,
+                          cfg=SimpleNamespace(num_blocks=4))
+    ServingEngine._update_block_estimates(eng, [2, 2], [0.4, 0.8],
+                                          [1.0, 2.0])
+    assert np.allclose(eng._block_times, [0.2, 0.2, 0.2, 0.2])
+
+
+# ---------------------------------------------------------------------------
+# EventTimeline.next_change: the chunk boundary oracle
+# ---------------------------------------------------------------------------
+
+
+def test_event_timeline_next_change_brackets_constant_segments():
+    events = [InterferenceEvent(start=10, duration=5, ep=0, scenario=2),
+              InterferenceEvent(start=12, duration=10, ep=1, scenario=1),
+              InterferenceEvent(start=30, duration=3, ep=0, scenario=3)]
+    tl = EventTimeline(events, num_eps=2)
+    q = 0
+    while q < 40:
+        nxt = min(tl.next_change(q), 40)
+        scen = tl.scenarios_at(q)
+        for j in range(q, nxt):
+            assert tl.scenarios_at(j) == scen, (q, j)
+        q = nxt
+    assert tl.next_change(33) > 10 ** 12     # no further edges: sentinel
+
+
+def test_event_timeline_next_change_matches_generated_events(db):
+    events = generate_events(300, 4, db.num_scenarios, 10, 25, seed=9)
+    tl = EventTimeline(events, 4, severity=db.scenario_severities())
+    edges = sorted({b for ev in events for b in (ev.start, ev.end)})
+    for q in (0, 5, 10, 99, 150, 299):
+        expect = next((b for b in edges if b > q), None)
+        got = tl.next_change(q)
+        if expect is None:
+            assert got > 10 ** 12
+        else:
+            assert got == expect
+
+
+def test_database_executor_steady_horizon(db):
+    events = [InterferenceEvent(start=20, duration=10, ep=1, scenario=4)]
+    ex = DatabaseQueryExecutor(db, 4, events, lambda scen: ([4, 4, 4, 4],
+                                                            1.0))
+    assert ex.steady_horizon(0) == 20
+    assert ex.steady_horizon(19) == 1
+    assert ex.steady_horizon(20) == 10
+    assert ex.steady_horizon(25) == 5
+
+
+# ---------------------------------------------------------------------------
+# the executor protocol: custom executors + malformed batches
+# ---------------------------------------------------------------------------
+
+
+class _ConstExecutor:
+    """Minimal vector-mode executor: constant stage time everywhere."""
+
+    batch_mode = "vector"
+
+    def __init__(self, bad_length=False):
+        self.bad_length = bad_length
+        self.chunks = []
+
+    def begin_query(self, q):
+        return self                      # its own StageTimeSource
+
+    def stage_times(self, config):
+        return np.ones(len(config))
+
+    def steady_horizon(self, q):
+        return 10 ** 9
+
+    def execute(self, q, step):
+        from repro.workloads import QueryRecord
+        return QueryRecord(service_latency=2.0, throughput=1.0)
+
+    def execute_many(self, q0, steps):
+        n = len(steps)
+        self.chunks.append(n)
+        m = n - 1 if self.bad_length and n > 1 else n
+        return BatchRecord(service_latencies=np.full(m, 2.0),
+                           throughputs=np.ones(m))
+
+
+def test_custom_vector_executor_chunks_and_matches_scalar():
+    ex = _ConstExecutor()
+    rt = RebalanceRuntime(make_scheduler("none"), [2, 2])
+    r = run_pipeline(ex, rt, 50, workload="closed")
+    assert ex.chunks and max(ex.chunks) > 1      # the fast path engaged
+    rt2 = RebalanceRuntime(make_scheduler("none"), [2, 2])
+    r2 = run_pipeline(_ConstExecutor(), rt2, 50, workload="closed",
+                      chunking=False)
+    assert np.array_equal(r.latencies, r2.latencies)
+    assert np.array_equal(r.arrival_times, r2.arrival_times)
+
+
+def test_run_pipeline_rejects_wrong_length_batchrecord():
+    ex = _ConstExecutor(bad_length=True)
+    rt = RebalanceRuntime(make_scheduler("none"), [2, 2])
+    with pytest.raises(ValueError, match="records for a chunk"):
+        run_pipeline(ex, rt, 50, workload="closed")
+
+
+def test_batchrecord_rejects_misaligned_arrays():
+    with pytest.raises(ValueError, match="index-aligned"):
+        BatchRecord(service_latencies=np.ones(3), throughputs=np.ones(2))
+
+
+def test_stateful_detector_policies_keep_per_query_polling(db):
+    """A policy without ``steady_detect_stable`` (here: the engine's
+    EMA detector mode) must be polled every query — the vector fast
+    path still runs, via per-query-poll accumulation, and matches the
+    scalar path exactly (EMA state sees the same observations)."""
+    sched = make_scheduler("odin", alpha=4, detector="ema")
+    assert not sched.steady_detect_stable
+    kw = dict(num_queries=300, freq_period=25, duration=10, seed=2)
+    a = simulate(db, 4, scheduler=sched, chunking=False, **kw)
+    sched2 = make_scheduler("odin", alpha=4, detector="ema")
+    b = simulate(db, 4, scheduler=sched2, chunking=True, **kw)
+    assert np.array_equal(a.latencies, b.latencies)
+    assert a.configs_trace == b.configs_trace
+    assert a.num_rebalances == b.num_rebalances
+    assert a.total_trials == b.total_trials
