@@ -1,0 +1,85 @@
+"""CI cluster smoke: 4 replicas, bursty traffic, one interfered replica.
+
+Runs the acceptance scenario through every built-in router — a fleet of
+4 simulated pipeline replicas under a bursty (MMPP) arrival process
+with the paper's heaviest interference setting (freq=2, dur=100) scoped
+to replica 2 — writes the per-replica + fleet ClusterTrace rows to
+``results/benchmarks/cluster_smoke.csv``, and fails unless
+interference-aware routing pays off:
+
+* ``odin_aware`` fleet p99 <= ``round_robin`` fleet p99 (the gate), and
+* every row is finite and each run served every query exactly once.
+
+    REPRO_CLUSTER_QUERIES=2000 PYTHONPATH=src python -m benchmarks.cluster_smoke
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import math
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR, db_for
+from repro.cluster import available_routers, simulate_cluster
+from repro.core import generate_events, simulate
+
+NUM_QUERIES = int(os.environ.get("REPRO_CLUSTER_QUERIES", "2000"))
+NUM_REPLICAS = 4
+VICTIM = 2          # the replica the interference events are scoped to
+
+REQUIRED = ("p50_latency", "p99_latency", "mean_queue_delay",
+            "steady_throughput")
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    cap = simulate(db, NUM_REPLICAS, scheduler="none", events=[],
+                   num_queries=10).peak_throughput
+    events = [dataclasses.replace(ev, replica=VICTIM)
+              for ev in generate_events(NUM_QUERIES // NUM_REPLICAS,
+                                        NUM_REPLICAS, db.num_scenarios,
+                                        2, 100, seed=5)]
+    workload_kwargs = dict(burst_rate=4.0 * cap, base_rate=0.5 * cap,
+                           mean_burst=3000.0, mean_gap=5000.0, seed=7)
+
+    rows, p99 = [], {}
+    for router in available_routers():
+        ct = simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
+                              scheduler="odin", alpha=10,
+                              num_queries=NUM_QUERIES, events=events,
+                              router=router, workload="bursty",
+                              workload_kwargs=workload_kwargs)
+        assert ct.replica_counts.sum() == NUM_QUERIES
+        p99[router] = ct.summary()["p99_latency_s"]
+        for row in ct.rows():
+            rows.append({"num_queries": NUM_QUERIES, **row})
+        print(f"{router:18s} fleet p99 {p99[router]:10.2f}  "
+              f"victim share {ct.replica_counts[VICTIM] / NUM_QUERIES:.2f}  "
+              f"rebalances {sum(t.num_rebalances for t in ct.replicas)}")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "cluster_smoke.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+    failed = []
+    bad = [(r["scope"], col) for r in rows for col in REQUIRED
+           if col in r and isinstance(r[col], float)
+           and not math.isfinite(r[col]) and r["queries"] > 0]
+    if bad:
+        failed.append(f"non-finite columns: {bad}")
+    if p99["odin_aware"] > p99["round_robin"]:
+        failed.append(f"odin_aware p99 {p99['odin_aware']:.2f} > "
+                      f"round_robin p99 {p99['round_robin']:.2f}")
+    if failed:
+        print("cluster_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"cluster_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

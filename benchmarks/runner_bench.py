@@ -10,9 +10,18 @@ speedup falls below the gate (CI runs this next to the smoke benchmark).
     PYTHONPATH=src python -m benchmarks.runner_bench
 
 Environment:
-    REPRO_BENCH_QUERIES      queries per row          (default 2000)
-    REPRO_BENCH_REPEATS      best-of repeats per row  (default 3)
-    REPRO_BENCH_MIN_SPEEDUP  gate on the steady row   (default 5.0)
+    REPRO_BENCH_QUERIES        queries per row            (default 2000)
+    REPRO_BENCH_REPEATS        best-of repeats per row    (default 3)
+    REPRO_BENCH_MIN_SPEEDUP    gate on the steady row     (default 5.0)
+    REPRO_BENCH_SCALE_QUERIES  scalability-row size       (default 1000000;
+                               0 skips the row)
+
+Besides the scalar-vs-chunked comparison rows, the report carries one
+*scalability* row: a 1M-query open-loop run through the vectorized
+arrival/queue/completion ledger (chunked only — the scalar tick at
+this size is the thing the ledger exists to avoid), recording wall
+time, queries/s and peak RSS so the perf trajectory of the ledger
+itself is tracked across PRs.
 
 The gate row (``steady_none``) is the fast path's home turf: long
 environment-steady segments with no exploration phases, where the run
@@ -26,14 +35,17 @@ from __future__ import annotations
 import json
 import math
 import os
+import resource
 import sys
 import time
 
-from benchmarks.common import RESULTS_DIR, run_matrix
+from benchmarks.common import RESULTS_DIR, db_for, run_matrix
+from repro.core import simulate
 
 NUM_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "2000"))
 REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
 MIN_SPEEDUP = float(os.environ.get("REPRO_BENCH_MIN_SPEEDUP", "5.0"))
+SCALE_QUERIES = int(os.environ.get("REPRO_BENCH_SCALE_QUERIES", "1000000"))
 GATE_ROW = "steady_none"
 
 #: (row name, run_matrix scheduler spec, (freq, dur) paper setting)
@@ -90,8 +102,47 @@ def bench_row(name: str, spec: dict, setting) -> dict:
     }
 
 
+def _peak_rss_mb() -> float:
+    """Process peak resident set size, MB (ru_maxrss is KB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def bench_scale(num_queries: int) -> dict:
+    """One 1M-query open-loop run through the vectorized ledger.
+
+    No interference events and a static scheduler: the row isolates the
+    arrival/queue/completion ledger (cumsum admission, pruned-heap
+    depth accounting) — the pieces that must stay O(n log n) with flat
+    memory at fleet scale.  Offered load sits just under capacity so
+    the queue stays busy without diverging.
+    """
+    db = db_for("vgg16")
+    cap = simulate(db, 4, scheduler="none", events=[],
+                   num_queries=10).peak_throughput
+    t0 = time.perf_counter()
+    r = simulate(db, 4, scheduler="none", events=[],
+                 num_queries=num_queries, workload="poisson",
+                 workload_kwargs=dict(rate=0.9 * cap, seed=0))
+    wall = time.perf_counter() - t0
+    s = r.summary()
+    return {
+        "row": "scale_ledger",
+        "num_queries": num_queries,
+        "workload": "poisson",
+        "chunked_s": wall,
+        "chunked_qps": num_queries / wall,
+        "peak_rss_mb": _peak_rss_mb(),
+        "mean_queue_delay": s["mean_queue_delay_s"],
+        "achieved_load": s["achieved_load_qps"],
+        "finite": all(math.isfinite(float(s[k]))
+                      for k in ("p99_latency_s", "mean_queue_delay_s",
+                                "achieved_load_qps")),
+    }
+
+
 def main() -> int:
     results = [bench_row(*row) for row in ROWS]
+    scale = bench_scale(SCALE_QUERIES) if SCALE_QUERIES > 0 else None
     report = {
         "schema": 1,
         "benchmark": "runner_fast_path",
@@ -102,6 +153,7 @@ def main() -> int:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "gate": {"row": GATE_ROW, "min_speedup": MIN_SPEEDUP},
         "rows": results,
+        "scale": scale,
     }
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, "BENCH_runner.json")
@@ -121,6 +173,13 @@ def main() -> int:
     if gate["speedup"] < MIN_SPEEDUP:
         failed.append(f"{GATE_ROW}: speedup {gate['speedup']:.1f}x "
                       f"< gate {MIN_SPEEDUP:.1f}x")
+    if scale is not None:
+        print(f"{scale['row']:12s} {scale['num_queries']} queries "
+              f"({scale['workload']}): {scale['chunked_s']:6.2f}s  "
+              f"{scale['chunked_qps']:9.0f} q/s  "
+              f"peak RSS {scale['peak_rss_mb']:7.1f} MB")
+        if not scale["finite"]:
+            failed.append("scale_ledger: non-finite summary metrics")
     if failed:
         print("runner_bench FAILED: " + "; ".join(failed))
         return 1

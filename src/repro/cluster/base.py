@@ -1,0 +1,104 @@
+"""Router protocol + the per-replica view routers decide over.
+
+A :class:`Router` is the cluster's third pluggable axis, mirroring
+``repro.schedulers`` (mitigation policy) and ``repro.workloads``
+(arrival process): given the fleet's next arrival and a read-only
+:class:`ReplicaView` per replica, it picks the replica the query is
+dispatched to.  Routers must be **deterministic** — a pure function of
+their own state and the views — so a run is reproducible from
+``(workload, seed, router)`` alone, and so the ``cluster(n=1)``
+reduction is trace-identical to a plain :func:`~repro.workloads.run_pipeline`.
+
+The view exposes exactly the signals ODIN's per-pipeline machinery
+already maintains (PR 1-3): the admission ledger (outstanding work /
+backlog), the :class:`~repro.schedulers.runtime.RebalanceRuntime`'s
+exploration state, and the policy's
+:class:`~repro.schedulers.base.InterferenceDetector` probed
+side-effect-free (``detector.shift``) together with the runtime's
+stage-time estimates — which is what lets the ``odin_aware`` router
+route *away* from replicas whose detectors currently report
+interference without consuming any detector observations.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Protocol, Sequence, runtime_checkable
+
+if TYPE_CHECKING:  # annotation-only
+    from repro.workloads.runner import PipelineRunner
+
+
+class ReplicaView:
+    """Read-only snapshot of one replica at a routing decision.
+
+    ``outstanding`` (queries in-system at the decision time) is computed
+    by the cluster's ledger; every other signal is probed lazily from
+    the replica's runner/runtime, so routers that ignore a field
+    (``round_robin`` ignores all of them) never pay for it.
+    """
+
+    __slots__ = ("index", "outstanding", "now", "since_assign", "_runner")
+
+    def __init__(self, index: int, runner: "PipelineRunner",
+                 outstanding: int, now: float,
+                 since_assign: float = float("inf")):
+        self.index = index
+        self.outstanding = outstanding
+        self.now = now
+        #: Fleet queries since this replica last served one (``inf`` if
+        #: never).  Detector/estimate signals only advance when the
+        #: replica serves, so this is the *staleness* of every probed
+        #: field below — routers must not treat a long-starved
+        #: replica's last reading as current (docs/CLUSTER.md).
+        self.since_assign = since_assign
+        self._runner = runner
+
+    @property
+    def free_at(self) -> float:
+        """When this replica's admission head frees up."""
+        return self._runner.free_at
+
+    @property
+    def backlog(self) -> float:
+        """Admission-head wait a query dispatched now would see."""
+        return max(self._runner.free_at - self.now, 0.0)
+
+    @property
+    def exploring(self) -> bool:
+        """True while the replica is mid-rebalance (serial trials —
+        the pipeline is drained between queries)."""
+        return self._runner.runtime.exploring
+
+    @property
+    def interference_score(self) -> float:
+        """Positive relative bottleneck degradation the replica's
+        detector currently sees (0.0 when quiet / no detector)."""
+        return self._runner.runtime.interference_score()
+
+    @property
+    def interference_active(self) -> bool:
+        """True when the detector's shift exceeds its threshold."""
+        return self._runner.runtime.interference_active()
+
+    @property
+    def est_bottleneck(self) -> float:
+        """Estimated per-query service beat (bottleneck stage time) on
+        the replica's committed config; NaN before any poll."""
+        return self._runner.runtime.estimated_bottleneck()
+
+
+@runtime_checkable
+class Router(Protocol):
+    """Picks the replica each fleet arrival is dispatched to."""
+
+    def route(self, q: int, now: float,
+              views: Sequence[ReplicaView]) -> int:
+        """Replica index for fleet query ``q`` arriving at ``now``.
+
+        Must be deterministic given the router's state and the views,
+        and must return an index in ``range(len(views))``.
+        """
+        ...
+
+    def reset(self) -> None:
+        """Drop routing state (fresh serving window)."""
+        ...

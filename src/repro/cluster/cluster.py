@@ -1,0 +1,155 @@
+"""The fleet driver: N pipeline replicas behind one routed arrival queue.
+
+A :class:`Cluster` owns one :class:`Replica` per pipeline — each with
+its *own* :class:`~repro.schedulers.runtime.RebalanceRuntime` (detector
+state, exploration phases), its own executor (interference timeline /
+slowdown schedule) and its own admission ledger — plus one
+:class:`~repro.cluster.base.Router`.  :meth:`Cluster.run` (or the
+functional :func:`run_cluster`) drives the shared arrival queue: the
+workload generates *fleet* arrivals, the router picks a replica per
+arrival, and the query is served through that replica's
+:class:`~repro.workloads.runner.PipelineRunner` — the same event-loop
+code ``run_pipeline`` drives for a single pipeline, fed one query at a
+time so routing decisions always see up-to-date replica state.
+
+Closed-loop semantics generalize per replica: a query dispatched to
+replica ``r`` arrives the instant ``r`` can take it, and the router's
+notion of "now" is the earliest admission-head free time across the
+fleet — with ``n = 1`` this reduces *bit-identically* to the
+single-pipeline closed loop (tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.cluster.base import ReplicaView, Router
+from repro.cluster.registry import resolve_router
+from repro.cluster.trace import ClusterTrace
+from repro.schedulers.runtime import RebalanceRuntime
+from repro.workloads.base import QueryExecutor, Workload
+from repro.workloads.runner import PipelineRunner, resolve_arrivals
+
+
+@dataclasses.dataclass
+class Replica:
+    """One pipeline behind the router.
+
+    ``on_assign(fleet_q, local_q, arrival)`` — optional backend hook
+    invoked when a fleet query is routed here, *before* it executes:
+    the live backend appends the query's token array to the replica's
+    local stream, the time-indexed simulator backend appends the
+    arrival time to the replica's clock (``arrival`` is ``None`` for a
+    closed loop).  ``peak_throughput`` is the replica's
+    interference-free reference for SLO accounting (NaN = unknown; the
+    live backend stamps it post-run).
+    """
+
+    executor: QueryExecutor
+    runtime: RebalanceRuntime
+    name: str = ""
+    peak_throughput: float = float("nan")
+    on_assign: Optional[Callable[[int, int, Optional[float]], None]] = None
+
+
+class Cluster:
+    """N replicas + one router; reusable across serving windows."""
+
+    def __init__(self, replicas: Sequence[Replica],
+                 router: Union[str, Router, None] = "round_robin",
+                 router_kwargs: Optional[dict] = None):
+        if len(replicas) < 1:
+            raise ValueError("a cluster needs at least one replica")
+        self.replicas = list(replicas)
+        self.router = resolve_router(router, router_kwargs)
+        self.router_name = getattr(self.router, "name",
+                                   type(self.router).__name__)
+
+    def run(self, num_queries: int,
+            workload: Union[str, Workload, None] = "closed",
+            workload_kwargs: Optional[dict] = None,
+            scheduler_name: str = "") -> ClusterTrace:
+        """Serve ``num_queries`` fleet arrivals of ``workload`` through
+        the routed replicas; returns a :class:`ClusterTrace`.
+
+        Per arrival: pop completed work from each replica's
+        outstanding ledger, build the :class:`ReplicaView` snapshots,
+        ask the router, fire the backend's ``on_assign`` hook, and
+        serve the query through the chosen replica's runner (advancing
+        its environment, polling its scheduler runtime, accounting its
+        arrival queue — identical per-query semantics to
+        ``run_pipeline``).
+        """
+        wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
+                                             num_queries)
+
+        # Pre-size each runner at its balanced share; a skewed router
+        # just grows that replica's arrays (doubling) as it serves.
+        share = -(-num_queries // len(self.replicas))
+        runners = [PipelineRunner(rep.executor, rep.runtime, share)
+                   for rep in self.replicas]
+        # Outstanding completions per replica: popped against the
+        # (monotone) decision clock to count in-system queries.
+        outstanding: List[List[float]] = [[] for _ in self.replicas]
+        last_assign = [-1] * len(self.replicas)
+        assignments = np.empty(num_queries, dtype=int)
+        local_indices = np.empty(num_queries, dtype=int)
+
+        for i in range(num_queries):
+            if arrivals is not None:
+                arrival: Optional[float] = float(arrivals[i])
+                now = arrival
+            else:
+                arrival = None
+                now = min(r.free_at for r in runners)
+            views = []
+            for ridx, (runner, heap) in enumerate(zip(runners,
+                                                      outstanding)):
+                while heap and heap[0] <= now:
+                    heapq.heappop(heap)
+                since = (i - last_assign[ridx] if last_assign[ridx] >= 0
+                         else float("inf"))
+                views.append(ReplicaView(ridx, runner, len(heap), now,
+                                         since_assign=since))
+            r = int(self.router.route(i, now, views))
+            if not 0 <= r < len(runners):
+                raise ValueError(f"router {self.router_name!r} returned "
+                                 f"replica {r} for a fleet of "
+                                 f"{len(runners)}")
+            local = runners[r].num_served
+            hook = self.replicas[r].on_assign
+            if hook is not None:
+                hook(i, local, arrival)
+            completion = runners[r].step(arrival)
+            heapq.heappush(outstanding[r], completion)
+            last_assign[r] = i
+            assignments[i] = r
+            local_indices[i] = local
+
+        traces = [
+            runner.finish(
+                scheduler_name=(rep.name or scheduler_name),
+                workload_name=wl_name,
+                peak_throughput=rep.peak_throughput)
+            for rep, runner in zip(self.replicas, runners)]
+        return ClusterTrace(router=self.router_name, workload=wl_name,
+                            scheduler=scheduler_name, replicas=traces,
+                            assignments=assignments,
+                            local_indices=local_indices)
+
+
+def run_cluster(replicas: Sequence[Replica],
+                num_queries: int,
+                workload: Union[str, Workload, None] = "closed",
+                workload_kwargs: Optional[dict] = None,
+                router: Union[str, Router, None] = "round_robin",
+                router_kwargs: Optional[dict] = None,
+                scheduler_name: str = "") -> ClusterTrace:
+    """Functional driver: build a :class:`Cluster` and serve one window."""
+    cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs)
+    return cluster.run(num_queries, workload=workload,
+                       workload_kwargs=workload_kwargs,
+                       scheduler_name=scheduler_name)

@@ -1,0 +1,139 @@
+"""Built-in routers: round_robin, least_outstanding, odin_aware.
+
+All three are deterministic (ties break toward the lowest replica
+index) so per-replica assignment sequences are reproducible from
+``(workload, seed, router)`` — see ``tests/test_cluster.py``.
+
+* ``round_robin`` — classic stateful cycle; the fleet baseline every
+  serving system starts from.  Blind to replica state, so a degraded
+  replica keeps receiving its 1/N share.
+* ``least_outstanding`` — cluster-level least-loaded scheduling (the
+  LLS idea one level up): dispatch to the replica with the fewest
+  in-system queries.  Reactive — it only diverts once the degraded
+  replica has visibly queued up.
+* ``odin_aware`` — interference-aware routing (Strait's thesis applied
+  to ODIN's signals): cost each replica by the wait + service a query
+  dispatched now would see, inflating replicas whose
+  :class:`~repro.schedulers.base.InterferenceDetector` currently
+  reports an active bottleneck shift and replicas mid-exploration
+  (serial trials drain the pipeline).  Proactive — it diverts the
+  moment a detector fires, before a backlog forms.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+from repro.cluster.base import ReplicaView
+from repro.cluster.registry import register_router
+
+
+@register_router("round_robin")
+class RoundRobinRouter:
+    """Cycle through replicas in index order."""
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, q: int, now: float,
+              views: Sequence[ReplicaView]) -> int:
+        r = self._next % len(views)
+        self._next = r + 1
+        return r
+
+    def reset(self) -> None:
+        self._next = 0
+
+
+@register_router("least_outstanding")
+class LeastOutstandingRouter:
+    """Fewest in-system queries wins (cluster-level LLS)."""
+
+    def route(self, q: int, now: float,
+              views: Sequence[ReplicaView]) -> int:
+        best = views[0]
+        for v in views[1:]:
+            if v.outstanding < best.outstanding:
+                best = v
+        return best.index
+
+    def reset(self) -> None:
+        pass
+
+
+@register_router("odin_aware")
+class OdinAwareRouter:
+    """Route by expected completion, penalizing detected interference.
+
+    Per replica the cost is ``backlog + est_bottleneck`` — the
+    admission-head wait a query dispatched now would see plus one
+    service beat on the committed configuration (both from the
+    estimates ODIN's runtime already maintains; an interfered replica's
+    estimated beat is inflated by the interference itself, so the base
+    cost alone already steers away from degraded replicas).  Two
+    multiplicative penalties sharpen "route away":
+
+    * a replica whose detector currently sees a positive bottleneck
+      shift pays ``1 + interference_weight * shift`` — continuous in
+      the shift (measured-time jitter of a few percent perturbs the
+      cost a few percent instead of toggling a hard avoid/admit cliff),
+      yet decisive for real interference, where the shift is large;
+    * a replica mid-exploration pays ``explore_penalty`` — its queries
+      run serially on a drained pipeline until the phase commits.
+
+    **Freshness gating**: a replica's detector/exploration state only
+    advances while it serves queries, so both penalties apply only when
+    the signal is fresh (the replica served within the last
+    ``freshness_window`` fleet queries).  Without the gate a noisy
+    measurement on the live engine starves the replica: penalized →
+    never routed to → state never refreshed → penalized forever, and
+    the fleet collapses onto its neighbours.  The (stale) estimated
+    beat still carries the degradation signal after the gate closes.
+
+    ``probe_interval > 0`` additionally routes a query to any replica
+    idle that long, refreshing its estimates (how a recovered replica
+    re-enters rotation at light load, at the price of occasionally
+    sampling a still-degraded one).  Default off: the stale-estimate
+    cost ordering re-admits replicas as soon as the fleet backlog
+    exceeds their last-known beat.
+
+    Replicas with no estimate yet (live engine before its first
+    measurement) cost only their backlog, so cold replicas are seeded
+    in index order rather than starved.
+    """
+
+    def __init__(self, interference_weight: float = 4.0,
+                 explore_penalty: float = 2.0,
+                 freshness_window: int = 8,
+                 probe_interval: int = 0):
+        self.interference_weight = float(interference_weight)
+        self.explore_penalty = float(explore_penalty)
+        self.freshness_window = int(freshness_window)
+        self.probe_interval = int(probe_interval)
+
+    def route(self, q: int, now: float,
+              views: Sequence[ReplicaView]) -> int:
+        if self.probe_interval > 0:
+            stalest = max(views, key=lambda v: (v.since_assign, -v.index))
+            if stalest.since_assign > self.probe_interval:
+                return stalest.index
+        best, best_cost = views[0].index, self._cost(views[0])
+        for v in views[1:]:
+            c = self._cost(v)
+            if c < best_cost:
+                best, best_cost = v.index, c
+        return best
+
+    def _cost(self, v: ReplicaView) -> float:
+        service = v.est_bottleneck
+        if not math.isfinite(service):
+            service = 0.0
+        cost = v.backlog + service
+        if v.since_assign <= self.freshness_window:
+            cost *= 1.0 + self.interference_weight * v.interference_score
+            if v.exploring:
+                cost *= self.explore_penalty
+        return cost
+
+    def reset(self) -> None:
+        pass

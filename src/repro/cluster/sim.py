@@ -1,0 +1,124 @@
+"""Database-simulator fleet backend: ``simulate_cluster``.
+
+The cluster analogue of :func:`repro.core.simulator.simulate`: every
+replica gets its own :class:`DatabaseQueryExecutor` (its *own* view of
+the fleet event list — replica-scoped events via
+``InterferenceEvent.replica`` — and its own scenario state), its own
+scheduler policy + :class:`RebalanceRuntime`, and the shared DP-oracle
+cache for resource-constrained references.  Replica-scoped interference
+is therefore a first-class scenario: an event with ``replica=2`` hits
+replica 2's pipeline and nothing else, and the router's job is to see
+it (via replica 2's detector) and steer the fleet around it.
+
+Event anchoring: query-indexed events count each *replica's local*
+queries (natural for closed-loop fleets); ``events_time_indexed=True``
+anchors the windows on the fleet arrival clock instead — the stressor
+runs wall-clock intervals, replicas serving different query counts see
+the same episode — which requires an open-loop workload.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Union
+
+from repro.cluster.cluster import Replica, run_cluster
+from repro.cluster.trace import ClusterTrace
+from repro.core.database import LayerDatabase
+from repro.core.events import InterferenceEvent, events_for_replica
+from repro.core.exhaustive import optimal_partition
+from repro.core.pipeline_state import balanced_config, throughput
+from repro.core.simulator import DatabaseQueryExecutor, SimTimeSource
+from repro.schedulers.registry import make_scheduler
+from repro.schedulers.runtime import RebalanceRuntime
+from repro.workloads.base import Workload
+from repro.workloads.runner import resolve_workload
+
+
+def simulate_cluster(db: LayerDatabase,
+                     num_eps: int,
+                     num_replicas: int,
+                     scheduler: str = "odin",
+                     router: Union[str, object, None] = "round_robin",
+                     alpha: int = 10,
+                     num_queries: int = 4000,
+                     events: Optional[Sequence[InterferenceEvent]] = None,
+                     rel_threshold: Optional[float] = None,
+                     initial_config: Optional[List[int]] = None,
+                     workload: Union[str, Workload, None] = "closed",
+                     workload_kwargs: Optional[dict] = None,
+                     events_time_indexed: bool = False,
+                     router_kwargs: Optional[dict] = None) -> ClusterTrace:
+    """Run one (scheduler, router, workload, events) fleet simulation.
+
+    ``events`` is the *fleet* event list: each
+    :class:`InterferenceEvent` hits one replica
+    (``replica=<index>``) or all of them (``replica=None``); default —
+    no interference, the routing-baseline setting.  ``scheduler`` is a
+    registry name constructed *per replica* (each replica needs its own
+    detector/explorer state).  The DP-oracle cache is shared across
+    replicas (one database); the clean-optimum starting configuration
+    and its peak throughput are computed once and stamped on every
+    replica, exactly as :func:`~repro.core.simulator.simulate` does for
+    a single pipeline.
+    """
+    if num_replicas < 1:
+        raise ValueError("num_replicas must be >= 1")
+    fleet_events = list(events) if events is not None else []
+    if events_time_indexed:
+        # Resolve once so the misuse fails here with the same clear
+        # error the single-pipeline path gives, not deep in the
+        # timeline on the first routed query.
+        wl = resolve_workload(workload, workload_kwargs)
+        if not wl.open_loop:
+            raise ValueError(
+                "time-indexed interference events need an open-loop "
+                "workload: a closed loop has no arrival clock to anchor "
+                "the event windows on")
+        workload, workload_kwargs = wl, None
+
+    config0 = (list(initial_config) if initial_config is not None
+               else balanced_config(db.num_layers, num_eps))
+    clean = SimTimeSource(db, [0] * num_eps)
+    if initial_config is None:
+        opt_cfg, _ = optimal_partition(db, [0] * num_eps, num_eps)
+        config0 = opt_cfg
+    peak = throughput(clean.stage_times(config0))
+
+    # One oracle cache for the whole fleet: the optimum only depends on
+    # the scenario vector, and every replica reads the same database.
+    oracle_cache = {}
+
+    def _oracle(scen_key):
+        if scen_key not in oracle_cache:
+            oracle_cache[scen_key] = optimal_partition(db, list(scen_key),
+                                                       num_eps)
+        return oracle_cache[scen_key]
+
+    replicas = []
+    for r in range(num_replicas):
+        executor = DatabaseQueryExecutor(
+            db, num_eps, events_for_replica(fleet_events, r), _oracle,
+            time_indexed=events_time_indexed)
+
+        def solver(cfg, src, _ex=executor) -> List[int]:
+            return list(_oracle(tuple(_ex.scenarios))[0])
+
+        policy = make_scheduler(scheduler, alpha=alpha,
+                                rel_threshold=rel_threshold, solver=solver)
+        runtime = RebalanceRuntime(policy, config0)
+
+        on_assign = None
+        if events_time_indexed:
+            clock: List[Optional[float]] = []
+            executor.set_arrivals(clock)
+
+            def on_assign(fq, lq, arrival, _clock=clock):
+                _clock.append(arrival)
+
+        replicas.append(Replica(executor=executor, runtime=runtime,
+                                peak_throughput=peak,
+                                on_assign=on_assign))
+
+    return run_cluster(replicas, num_queries, workload=workload,
+                       workload_kwargs=workload_kwargs, router=router,
+                       router_kwargs=router_kwargs,
+                       scheduler_name=scheduler)

@@ -1,0 +1,183 @@
+"""Fleet-level result type, built on the per-replica PipelineTrace.
+
+A :class:`ClusterTrace` holds one
+:class:`~repro.workloads.trace.PipelineTrace` per replica plus the
+assignment ledger (which replica served each fleet arrival, in arrival
+order).  Fleet metrics come from the :attr:`fleet` trace — the
+per-replica arrays gathered back into fleet arrival order and run
+through the *same* PipelineTrace metric code — so p50/p99, queueing
+delay and offered/achieved load mean exactly what they mean for a
+single pipeline.  Only the SLO reference differs: each query's
+throughput is compared against *its own replica's* interference-free
+peak (fleets may be heterogeneous).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.workloads.trace import PipelineTrace
+
+
+@dataclasses.dataclass
+class ClusterTrace:
+    router: str
+    workload: str
+    scheduler: str
+    #: One finished trace per replica (local query order).
+    replicas: List[PipelineTrace]
+    #: Fleet arrival order -> replica index that served the query.
+    assignments: np.ndarray
+    #: Fleet arrival order -> index within that replica's trace.
+    local_indices: np.ndarray
+
+    def __post_init__(self):
+        self.assignments = np.asarray(self.assignments, dtype=int)
+        self.local_indices = np.asarray(self.local_indices, dtype=int)
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def num_replicas(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.assignments)
+
+    @property
+    def replica_counts(self) -> np.ndarray:
+        """Queries served per replica."""
+        return np.bincount(self.assignments, minlength=self.num_replicas)
+
+    # -- fleet-order gathers --------------------------------------------------
+    def gather(self, field: str) -> np.ndarray:
+        """Per-replica per-query array ``field`` in fleet arrival order."""
+        ref = getattr(self.replicas[0], field)
+        out = np.empty(self.num_queries, dtype=np.asarray(ref).dtype)
+        for r, t in enumerate(self.replicas):
+            out[self.assignments == r] = getattr(t, field)
+        return out
+
+    @property
+    def fleet(self) -> PipelineTrace:
+        """The fleet as one PipelineTrace (computed on access so
+        post-run stamping of replica peaks is picked up).
+
+        ``peak_throughput`` is only meaningful for ``n = 1`` (where the
+        fleet *is* the replica); multi-replica SLO accounting goes
+        through :meth:`slo_violations`, which compares each query
+        against its own replica's peak.
+        """
+        configs: List[Optional[list]] = [None] * self.num_queries
+        for r, t in enumerate(self.replicas):
+            for pos, cfg in zip(np.flatnonzero(self.assignments == r),
+                                t.configs_trace):
+                configs[pos] = cfg
+        rc = None
+        if all(t.rc_throughputs is not None for t in self.replicas):
+            rc = self.gather("rc_throughputs")
+        peak = (self.replicas[0].peak_throughput
+                if self.num_replicas == 1 else float("nan"))
+        return PipelineTrace(
+            scheduler=self.scheduler,
+            latencies=self.gather("latencies"),
+            throughputs=self.gather("throughputs"),
+            serial_mask=self.gather("serial_mask"),
+            configs_trace=configs,
+            num_rebalances=sum(t.num_rebalances for t in self.replicas),
+            total_trials=sum(t.total_trials for t in self.replicas),
+            mitigation_lengths=[m for t in self.replicas
+                                for m in t.mitigation_lengths],
+            workload=self.workload,
+            service_latencies=self.gather("service_latencies"),
+            queue_delays=self.gather("queue_delays"),
+            arrival_times=self.gather("arrival_times"),
+            completion_times=self.gather("completion_times"),
+            queue_depths=self.gather("queue_depths"),
+            peak_throughput=peak,
+            rc_throughputs=rc,
+        )
+
+    # -- fleet metrics (one metric implementation: PipelineTrace's) ----------
+    def tail_latency(self, pct: float = 99.0) -> float:
+        return self.fleet.tail_latency(pct)
+
+    @property
+    def mean_queue_delay(self) -> float:
+        return self.fleet.mean_queue_delay
+
+    @property
+    def offered_load(self) -> float:
+        """Fleet arrival rate over the run."""
+        return self.fleet.offered_load
+
+    @property
+    def achieved_load(self) -> float:
+        """Fleet completion rate over the run."""
+        return self.fleet.achieved_load
+
+    def slo_violations(self, slo_level: float) -> float:
+        """Fraction of queries with throughput below ``slo_level`` x
+        *their replica's* interference-free peak."""
+        peaks = np.array([t.peak_throughput
+                          for t in self.replicas])[self.assignments]
+        return float(np.mean(self.gather("throughputs")
+                             < slo_level * peaks))
+
+    # -- the one summary dict ------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        """Flat metric dict: the PipelineTrace surface computed at the
+        fleet level plus the cluster-only columns."""
+        fleet = self.fleet
+        s = fleet.summary()
+        peak_known = all(np.isfinite(t.peak_throughput)
+                         for t in self.replicas)
+        s["slo_violations"] = (
+            self.slo_violations(PipelineTrace.SUMMARY_SLO_LEVEL)
+            if peak_known else float("nan"))
+        s["num_replicas"] = self.num_replicas
+        s["router"] = self.router
+        s["min_replica_share"] = (float(self.replica_counts.min())
+                                  / max(self.num_queries, 1))
+        s["max_replica_share"] = (float(self.replica_counts.max())
+                                  / max(self.num_queries, 1))
+        return s
+
+    def rows(self) -> List[Dict]:
+        """Per-replica + fleet metric rows (CSV-ready, one schema)."""
+        out = []
+        for r, t in enumerate(self.replicas):
+            row = {"scope": f"replica{r}", "router": self.router,
+                   "workload": self.workload, "scheduler": t.scheduler,
+                   "queries": int(self.replica_counts[r])}
+            if len(t.latencies):
+                row.update(
+                    p50_latency=float(np.percentile(t.latencies, 50)),
+                    p99_latency=t.tail_latency(99),
+                    mean_queue_delay=t.mean_queue_delay,
+                    steady_throughput=t.steady_throughput,
+                    rebalances=t.num_rebalances,
+                    total_trials=t.total_trials,
+                )
+            else:   # a replica the router never picked
+                row.update(p50_latency=float("nan"),
+                           p99_latency=float("nan"),
+                           mean_queue_delay=float("nan"),
+                           steady_throughput=float("nan"),
+                           rebalances=t.num_rebalances,
+                           total_trials=t.total_trials)
+            out.append(row)
+        s = self.summary()
+        out.append({"scope": "fleet", "router": self.router,
+                    "workload": self.workload, "scheduler": self.scheduler,
+                    "queries": self.num_queries,
+                    "p50_latency": s["p50_latency_s"],
+                    "p99_latency": s["p99_latency_s"],
+                    "mean_queue_delay": s["mean_queue_delay_s"],
+                    "steady_throughput": s["steady_throughput_qps"],
+                    "rebalances": s["rebalances"],
+                    "total_trials": sum(t.total_trials
+                                        for t in self.replicas)})
+        return out

@@ -27,7 +27,10 @@ from repro.core.pipeline_state import (  # noqa: F401
     validate_config,
     waiting_times,
 )
-from repro.core.events import EventTimeline  # noqa: F401
+from repro.core.events import (  # noqa: F401
+    EventTimeline,
+    events_for_replica,
+)
 from repro.core.simulator import (  # noqa: F401
     PAPER_SETTINGS,
     DatabaseQueryExecutor,

@@ -15,6 +15,26 @@ worst one dominates the EP).  Severity defaults to the scenario index
 and can be supplied from the database's measured slowdowns
 (:meth:`~repro.core.database.LayerDatabase.scenario_severities`); exact
 severity ties break toward the higher scenario index.
+
+Two event axes (both served by the same timeline):
+
+* **query-indexed** (default) — ``start`` / ``duration`` count queries,
+  the paper's §4.2 methodology and the natural axis for closed-loop
+  runs, where query index *is* the clock.
+* **time-indexed** (``EventTimeline(..., time_indexed=True)``) —
+  ``start`` / ``duration`` are wall-clock times in the driver's time
+  unit, and ``scenarios_at`` / ``next_change`` take a *time*, not a
+  query index.  Open-loop runs advance the environment by each query's
+  arrival time, so an event means "the stressor ran from t0 for Δt"
+  regardless of how many queries happened to land inside — which is
+  what lets replica-scoped events in a cluster hit one replica on the
+  shared fleet clock (docs/CLUSTER.md).
+
+Replica scoping: ``InterferenceEvent.replica`` targets one replica of a
+:class:`~repro.cluster.Cluster` (``None`` — the default — applies to
+every replica, and is what single-pipeline runs use).  The
+:func:`events_for_replica` helper selects one replica's view of a
+fleet-level event list.
 """
 from __future__ import annotations
 
@@ -27,14 +47,28 @@ import numpy as np
 
 @dataclasses.dataclass
 class InterferenceEvent:
-    start: int      # query index at which the event begins
-    duration: int   # in queries
+    #: Query index at which the event begins — or a wall-clock time when
+    #: the owning timeline is ``time_indexed``.
+    start: float
+    #: Length in queries (or in time units when ``time_indexed``).
+    duration: float
     ep: int
     scenario: int   # column in the database (>= 1)
+    #: Cluster replica this event targets; ``None`` = every replica
+    #: (and is the only sensible value for single-pipeline runs).
+    replica: Optional[int] = None
 
     @property
-    def end(self) -> int:
+    def end(self) -> float:
         return self.start + self.duration
+
+
+def events_for_replica(events: Sequence[InterferenceEvent],
+                       replica: int) -> List[InterferenceEvent]:
+    """One replica's view of a fleet event list: events targeting it
+    plus fleet-wide (``replica=None``) events."""
+    return [ev for ev in events
+            if ev.replica is None or ev.replica == replica]
 
 
 def generate_events(num_queries: int, num_eps: int, num_scenarios: int,
@@ -63,12 +97,20 @@ class EventTimeline:
     callable is ``severity(scenario)``.  The winner is the max of
     ``(severity, scenario)`` — the tuple's second element makes exact
     severity ties deterministic.
+
+    ``time_indexed=True`` reinterprets every event's ``start`` /
+    ``duration`` as wall-clock values: ``scenarios_at`` and
+    ``next_change`` then take a time (the driver passes each query's
+    arrival time) instead of a query index, and ``next_change`` returns
+    ``float('inf')`` past the last edge.
     """
 
     def __init__(self, events: Sequence[InterferenceEvent], num_eps: int,
-                 severity: SeveritySpec = None):
+                 severity: SeveritySpec = None,
+                 time_indexed: bool = False):
         self.events = list(events)
         self.num_eps = num_eps
+        self.time_indexed = bool(time_indexed)
         if severity is None:
             self._rank = lambda scenario: float(scenario)
         elif callable(severity):
@@ -83,18 +125,22 @@ class EventTimeline:
         self._edges = sorted({b for ev in self.events
                               for b in (ev.start, ev.end)})
 
-    def next_change(self, q: int) -> int:
-        """First query index ``> q`` where the scenario vector can
-        change (an event starts or ends); a large sentinel when no
-        further edge exists.  ``scenarios_at`` is constant over
+    def next_change(self, q: float) -> float:
+        """First query index (or time, when ``time_indexed``) ``> q``
+        where the scenario vector can change (an event starts or ends);
+        a large sentinel (``inf`` on the time axis) when no further edge
+        exists.  ``scenarios_at`` is constant over
         ``[q, next_change(q))``."""
         i = bisect.bisect_right(self._edges, q)
         if i < len(self._edges):
             return self._edges[i]
+        if self.time_indexed:
+            return float("inf")
         return int(np.iinfo(np.int64).max)
 
-    def scenarios_at(self, q: int) -> List[int]:
-        """Per-EP scenario vector for query ``q`` (0 = no interference)."""
+    def scenarios_at(self, q: float) -> List[int]:
+        """Per-EP scenario vector at query index — or time, when
+        ``time_indexed`` — ``q`` (0 = no interference)."""
         best: List[Optional[tuple]] = [None] * self.num_eps
         for ev in self.events:
             if ev.start <= q < ev.end:

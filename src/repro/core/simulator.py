@@ -83,29 +83,74 @@ class DatabaseQueryExecutor:
     ``execute_many`` broadcasts it; ``steady_horizon`` is the distance
     to the next event edge.  ``batch_mode = "vector"``: chunking is a
     pure computational speedup, per-query semantics unchanged.
+
+    ``time_indexed=True`` anchors the event windows on the arrival
+    clock instead of the query index (open-loop runs only): the run
+    loop announces the arrival times via :meth:`set_arrivals` before
+    serving, and each query's environment is the scenario vector at its
+    *arrival time* — how replica-scoped cluster events stay wall-clock
+    aligned across replicas serving different query counts
+    (docs/CLUSTER.md).
     """
 
     batch_mode = "vector"
 
     def __init__(self, db: LayerDatabase, num_eps: int,
-                 events: List[InterferenceEvent], oracle):
+                 events: List[InterferenceEvent], oracle,
+                 time_indexed: bool = False):
         self.db = db
         self.num_eps = num_eps
         self.timeline = EventTimeline(events, num_eps,
-                                      severity=db.scenario_severities())
+                                      severity=db.scenario_severities(),
+                                      time_indexed=time_indexed)
         self.scenarios = [0] * num_eps
         self.source = SimTimeSource(db, self.scenarios)
         self._oracle = oracle    # tuple(scenarios) -> (config, throughput)
+        self._arrivals = None    # set by the run loop (time-indexed only)
+
+    def set_arrivals(self, arrivals) -> None:
+        """Run-loop hook: the per-query arrival times (``None`` for a
+        closed loop).  Only consulted when the timeline is
+        time-indexed, which requires an open-loop workload."""
+        if self.timeline.time_indexed and arrivals is None:
+            raise ValueError(
+                "time-indexed interference events need an open-loop "
+                "workload: a closed loop has no arrival clock to anchor "
+                "the event windows on")
+        self._arrivals = arrivals
+
+    def _clock(self, q: int):
+        """The timeline key for query ``q``: its arrival time on a
+        time-indexed timeline, its index otherwise."""
+        if not self.timeline.time_indexed:
+            return q
+        if self._arrivals is None:
+            raise ValueError("time-indexed events: set_arrivals() was "
+                             "never called with the arrival times")
+        t = self._arrivals[q]
+        if t is None:      # a closed-loop driver fed a clock of Nones
+            raise ValueError(
+                "time-indexed interference events need an open-loop "
+                "workload: a closed loop has no arrival clock to anchor "
+                "the event windows on")
+        return t
 
     def begin_query(self, q: int) -> SimTimeSource:
-        new_scen = self.timeline.scenarios_at(q)
+        new_scen = self.timeline.scenarios_at(self._clock(q))
         if new_scen != self.scenarios:
             self.scenarios[:] = new_scen
             self.source.scenarios[:] = new_scen
         return self.source
 
     def steady_horizon(self, q: int) -> int:
-        return self.timeline.next_change(q) - q
+        if not self.timeline.time_indexed:
+            return self.timeline.next_change(q) - q
+        # Queries arriving before the next event edge share q's
+        # environment; the horizon is how many of them there are.
+        edge = self.timeline.next_change(self._arrivals[q])
+        if edge == float("inf"):
+            return len(self._arrivals) - q
+        return int(np.searchsorted(self._arrivals, edge, side="left")) - q
 
     def reference_throughput(self, q: int) -> float:
         return self._oracle(tuple(self.scenarios))[1]
@@ -142,7 +187,8 @@ def simulate(db: LayerDatabase,
              workload: Union[str, Workload, None] = "closed",
              workload_kwargs: Optional[dict] = None,
              chunking: bool = True,
-             max_chunk: Optional[int] = None) -> PipelineTrace:
+             max_chunk: Optional[int] = None,
+             events_time_indexed: bool = False) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -157,8 +203,17 @@ def simulate(db: LayerDatabase,
     ``chunking=False`` forces the scalar per-query tick (the fast path
     is the default; closed-loop traces are bit-identical either way —
     see docs/WORKLOADS.md "Batching & the fast path").
+
+    ``events_time_indexed=True`` interprets ``events`` on the arrival
+    clock instead of the query index (open-loop workloads only; events
+    must then be supplied explicitly — ``generate_events`` produces
+    query-indexed starts).
     """
     if events is None:
+        if events_time_indexed:
+            raise ValueError("events_time_indexed=True needs explicit "
+                             "events: generate_events() produces "
+                             "query-indexed windows")
         events = generate_events(num_queries, num_eps, db.num_scenarios,
                                  freq_period, duration, seed)
     config = (list(initial_config) if initial_config is not None
@@ -183,7 +238,8 @@ def simulate(db: LayerDatabase,
                                                        num_eps)
         return oracle_cache[scen_key]
 
-    executor = DatabaseQueryExecutor(db, num_eps, events, _oracle)
+    executor = DatabaseQueryExecutor(db, num_eps, events, _oracle,
+                                     time_indexed=events_time_indexed)
 
     def oracle_solver(cfg, src) -> List[int]:
         return list(_oracle(tuple(executor.scenarios))[0])

@@ -132,6 +132,27 @@ class InterferenceDetector:
         it must see each query."""
         return self.mode == "rel"
 
+    @property
+    def armed(self) -> bool:
+        """Whether a reference bottleneck has been recorded yet."""
+        return self._ref is not None
+
+    def shift(self, config: Sequence[int],
+              source: StageTimeSource) -> float:
+        """Signed relative bottleneck shift vs. the armed reference,
+        **without touching detector state** — ``> 0`` means the current
+        bottleneck is slower than the post-rebalance reference.
+
+        This is the read-only probe the cluster's interference-aware
+        router uses to ask "does this replica's detector currently see
+        interference?" between rebalances (docs/CLUSTER.md); ``0.0``
+        before the first observation arms the reference.
+        """
+        if self._ref is None:
+            return 0.0
+        b = bottleneck_time(config, source)
+        return (b - self._ref) / max(self._ref, 1e-12)
+
     def observe(self, config: Sequence[int],
                 source: StageTimeSource) -> bool:
         """One monitoring observation; True if rebalancing should start."""

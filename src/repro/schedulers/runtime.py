@@ -60,6 +60,10 @@ class RebalanceRuntime:
         self.total_trials = 0
         self.mitigation_lengths: List[int] = []
         self._phase_steps = 0     # serial queries consumed by this phase
+        #: Most recent StageTimeSource this runtime was polled/armed
+        #: with; what read-only observers (the cluster's routers) probe
+        #: for the replica's current estimated stage times.
+        self.last_source: Optional[StageTimeSource] = None
 
     @property
     def exploring(self) -> bool:
@@ -90,8 +94,40 @@ class RebalanceRuntime:
         """
         return RuntimeStep(list(self.config), serial=False)
 
+    # -- read-only state exposure (cluster routing; docs/CLUSTER.md) ---------
+    def interference_score(self) -> float:
+        """Positive relative bottleneck degradation the policy's
+        detector currently sees vs. its armed reference — ``0.0`` when
+        quiet, when the policy has no detector (static / oracle), or
+        before any poll.  Side-effect-free: probing never advances
+        detector state.
+        """
+        det = getattr(self.policy, "detector", None)
+        if det is None or self.last_source is None:
+            return 0.0
+        return max(0.0, det.shift(self.config, self.last_source))
+
+    def interference_active(self) -> bool:
+        """True when the detector's current shift exceeds its trigger
+        threshold — the replica-level "interference present" signal the
+        ``odin_aware`` router keys on."""
+        det = getattr(self.policy, "detector", None)
+        if det is None or self.last_source is None:
+            return False
+        return self.interference_score() > det.rel_threshold
+
+    def estimated_bottleneck(self) -> float:
+        """Estimated bottleneck stage time of the committed config from
+        the most recent polled time source (NaN before any poll) — the
+        per-query service-time estimate routers cost replicas with."""
+        if self.last_source is None:
+            return float("nan")
+        from repro.schedulers.base import bottleneck_time
+        return bottleneck_time(self.config, self.last_source)
+
     def poll(self, source: StageTimeSource) -> RuntimeStep:
         """Advance the state machine by one query."""
+        self.last_source = source
         if self.explorer is None:
             if not self.policy.detect(self.config, source):
                 return RuntimeStep(list(self.config), serial=False)
@@ -132,12 +168,14 @@ class RebalanceRuntime:
         baseline — the same thing the first ``poll``'s ``detect`` call
         does in the simulator.  Any trigger is discarded.
         """
+        self.last_source = source
         self.policy.detect(self.config, source)
 
     def reset(self, config: Optional[Sequence[int]] = None) -> None:
         """Abandon any in-flight phase and re-arm the policy."""
         self.explorer = None
         self._phase_steps = 0
+        self.last_source = None
         if config is not None:
             self.config = list(config)
         self.policy.reset()

@@ -180,9 +180,15 @@ class ServingEngine:
                  scheduler: Union[str, SchedulerPolicy] = "odin",
                  alpha: int = DEFAULT_ALPHA,
                  rel_threshold: Optional[float] = None,
-                 estimate_beta: float = 0.5):
+                 estimate_beta: float = 0.5,
+                 executor: Optional[LocalPipelineExecutor] = None):
         self.cfg = cfg
-        self.executor = LocalPipelineExecutor(cfg, params)
+        # ``executor`` lets N engines share one jitted pipeline (the
+        # multi-replica cluster pattern: replicas serve the same model,
+        # so one compile + warmup serves the fleet, while every engine
+        # keeps its own runtime/detector/estimate state).
+        self.executor = (executor if executor is not None
+                         else LocalPipelineExecutor(cfg, params))
         self.num_eps = num_eps
         # Weight of the newest measurement in the per-block clean-time
         # EMA.  0.5 (default) tracks fast; smaller values smooth
@@ -252,6 +258,17 @@ class ServingEngine:
         b = self.estimate_beta
         self._block_times[:] = (1.0 - b) * self._block_times + b * per_block
 
+    def query_executor(self, queries: Sequence[jnp.ndarray],
+                       slowdown_schedule,
+                       max_batch: int = 1) -> "_LiveQueryExecutor":
+        """This engine's :class:`~repro.workloads.QueryExecutor` half,
+        for external drivers (``repro.cluster`` builds one per replica
+        and feeds it through the shared run loop).  ``queries`` may be
+        a *growing* sequence: the cluster appends each routed query
+        before it executes."""
+        return _LiveQueryExecutor(self, queries, slowdown_schedule,
+                                  max_batch=max_batch)
+
     def serve(self, queries: Sequence[jnp.ndarray],
               slowdown_schedule,
               workload: Union[str, Workload, None] = "closed",
@@ -274,8 +291,8 @@ class ServingEngine:
         rebalance, and only queries that have already arrived join
         (a closed loop therefore still serves one at a time).
         """
-        live = _LiveQueryExecutor(self, queries, slowdown_schedule,
-                                  max_batch=max_batch)
+        live = self.query_executor(queries, slowdown_schedule,
+                                   max_batch=max_batch)
         trace = run_pipeline(live, self.runtime, len(queries),
                              workload=workload,
                              workload_kwargs=workload_kwargs,

@@ -15,7 +15,9 @@ from repro.workloads.base import (  # noqa: F401
 from repro.workloads.generators import (  # noqa: F401
     BurstyWorkload,
     ClosedLoopWorkload,
+    DiurnalWorkload,
     PoissonWorkload,
+    RampWorkload,
     TraceWorkload,
 )
 from repro.workloads.registry import (  # noqa: F401
@@ -27,6 +29,7 @@ from repro.workloads.registry import (  # noqa: F401
 )
 from repro.workloads.runner import (  # noqa: F401
     DEFAULT_MAX_CHUNK,
+    PipelineRunner,
     resolve_workload,
     run_pipeline,
 )

@@ -1,4 +1,4 @@
-"""Built-in arrival processes: closed, poisson, bursty, trace.
+"""Built-in arrival processes: closed, poisson, bursty, diurnal, ramp, trace.
 
 All open-loop generators are seeded and deterministic — calling
 ``inter_arrivals`` twice returns the identical array, so a run can be
@@ -14,16 +14,59 @@ engine, database units for the simulator).
 * ``bursty`` — a 2-state Markov-modulated Poisson process (MMPP):
   exponentially-distributed ON phases at ``burst_rate`` alternate with
   OFF phases at ``base_rate`` (MArk-style flash crowds).
+* ``diurnal`` — inhomogeneous Poisson with a sinusoidal rate (the
+  day/night swing production traces show); the traffic to demo a
+  cluster router riding load swings (docs/CLUSTER.md).
+* ``ramp`` — inhomogeneous Poisson whose rate climbs linearly from
+  ``start_rate`` to ``end_rate`` over ``ramp_time`` then holds (load
+  tests / launch ramps; finds the latency knee as load approaches
+  capacity).
 * ``trace`` — replays a recorded inter-arrival array (cycled if the run
   is longer than the trace).
+
+The inhomogeneous generators (``diurnal``, ``ramp``) sample by
+*thinning* (Lewis & Shedler): candidates arrive at the envelope rate
+``rate_max`` and survive with probability ``rate(t) / rate_max`` —
+exact for any bounded rate function, and vectorized in candidate
+batches.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+import math
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from repro.workloads.registry import register_workload
+
+
+def _thinned_arrivals(num_queries: int, rate_fn: Callable[[np.ndarray],
+                                                          np.ndarray],
+                      rate_max: float, rng: np.random.Generator
+                      ) -> np.ndarray:
+    """Inter-arrival gaps of an inhomogeneous Poisson process.
+
+    ``rate_fn`` maps an array of times to instantaneous rates in
+    ``[0, rate_max]``.  Candidates are drawn in batches at ``rate_max``
+    and thinned; draws happen in a fixed order, so the output is a
+    pure function of the rng seed.
+    """
+    out = np.empty(num_queries)
+    count = 0
+    t = 0.0
+    batch = max(256, num_queries)
+    while count < num_queries:
+        gaps = rng.exponential(1.0 / rate_max, size=batch)
+        times = t + np.cumsum(gaps)
+        keep = rng.random(batch) * rate_max < rate_fn(times)
+        accepted = times[keep]
+        take = min(len(accepted), num_queries - count)
+        out[count:count + take] = accepted[:take]
+        count += take
+        # Resume after the last *candidate*, accepted or not — unless
+        # the run is already full, in which case the tail is unused.
+        t = float(times[-1])
+    return np.diff(out, prepend=0.0)
 
 
 @register_workload("closed")
@@ -104,6 +147,81 @@ class BurstyWorkload:
             t = phase_end
             on = not on
         return np.diff(arrivals, prepend=0.0)
+
+
+@register_workload("diurnal")
+class DiurnalWorkload:
+    """Sinusoidal-rate inhomogeneous Poisson: ``rate(t) = mean_rate *
+    (1 + amplitude * sin(2π t / period + phase))``.
+
+    ``amplitude`` in ``[0, 1)`` keeps the rate strictly positive
+    (``amplitude=0`` degenerates to plain Poisson); ``period`` is the
+    full day/night cycle in the driver's time unit; ``phase`` (radians)
+    picks where in the cycle the run starts (default 0 = mid-climb
+    toward the peak).
+    """
+
+    open_loop = True
+
+    def __init__(self, mean_rate: float, period: float,
+                 amplitude: float = 0.5, phase: float = 0.0,
+                 seed: int = 0):
+        if mean_rate <= 0:
+            raise ValueError(f"mean_rate must be > 0, got {mean_rate}")
+        if period <= 0:
+            raise ValueError(f"period must be > 0, got {period}")
+        if not 0.0 <= amplitude < 1.0:
+            raise ValueError(f"amplitude must be in [0, 1), "
+                             f"got {amplitude}")
+        self.mean_rate = float(mean_rate)
+        self.period = float(period)
+        self.amplitude = float(amplitude)
+        self.phase = float(phase)
+        self.seed = int(seed)
+
+    def rate_at(self, t):
+        """Instantaneous arrival rate at time(s) ``t``."""
+        return self.mean_rate * (
+            1.0 + self.amplitude * np.sin(
+                2.0 * math.pi * np.asarray(t) / self.period + self.phase))
+
+    def inter_arrivals(self, num_queries: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        rate_max = self.mean_rate * (1.0 + self.amplitude)
+        return _thinned_arrivals(num_queries, self.rate_at, rate_max, rng)
+
+
+@register_workload("ramp")
+class RampWorkload:
+    """Linear-ramp inhomogeneous Poisson: the rate climbs from
+    ``start_rate`` to ``end_rate`` over ``ramp_time`` and holds there
+    (ramp-down works too — ``end_rate < start_rate``)."""
+
+    open_loop = True
+
+    def __init__(self, start_rate: float, end_rate: float,
+                 ramp_time: float, seed: int = 0):
+        if start_rate < 0 or end_rate < 0:
+            raise ValueError("rates must be >= 0")
+        if max(start_rate, end_rate) <= 0:
+            raise ValueError("at least one of start_rate/end_rate must "
+                             "be > 0")
+        if ramp_time <= 0:
+            raise ValueError(f"ramp_time must be > 0, got {ramp_time}")
+        self.start_rate = float(start_rate)
+        self.end_rate = float(end_rate)
+        self.ramp_time = float(ramp_time)
+        self.seed = int(seed)
+
+    def rate_at(self, t):
+        """Instantaneous arrival rate at time(s) ``t``."""
+        frac = np.clip(np.asarray(t) / self.ramp_time, 0.0, 1.0)
+        return self.start_rate + (self.end_rate - self.start_rate) * frac
+
+    def inter_arrivals(self, num_queries: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        rate_max = max(self.start_rate, self.end_rate)
+        return _thinned_arrivals(num_queries, self.rate_at, rate_max, rng)
 
 
 @register_workload("trace")

@@ -36,6 +36,14 @@ change, or the chunk cap.  Two flavors share the code:
   engine): the scheduler is still polled per query, but queries that
   have already arrived are stacked and executed together, so a burst
   pays one set of stage dispatches instead of one per query.
+
+Incremental driving (``repro.cluster``): the loop's state — admission
+ledger, per-query arrays, rebalance-counter snapshots — lives in
+:class:`PipelineRunner`, which also supports being fed one query at a
+time via :meth:`PipelineRunner.step`.  A multi-replica
+:class:`~repro.cluster.Cluster` owns one runner per replica and routes
+each fleet arrival to one of them; ``run_pipeline`` itself is the
+single-pipeline driver over the same runner.
 """
 from __future__ import annotations
 
@@ -67,6 +75,24 @@ def resolve_workload(workload: Union[str, Workload, None],
         raise ValueError("workload_kwargs only apply to a workload name, "
                          "not an already-constructed instance")
     return workload
+
+
+def resolve_arrivals(workload: Union[str, Workload, None],
+                     workload_kwargs: Optional[dict],
+                     num_queries: int) -> Tuple[str, Optional[np.ndarray]]:
+    """Resolve a workload and materialize its arrival times.
+
+    The shared prologue of every driver (``run_pipeline``, the
+    cluster's fleet loop): returns ``(workload_name, arrival_times)``
+    with ``arrival_times = None`` for a closed loop.
+    """
+    wl = resolve_workload(workload, workload_kwargs)
+    wl_name = getattr(wl, "name", type(wl).__name__)
+    gaps = wl.inter_arrivals(num_queries) if wl.open_loop else None
+    if gaps is not None and len(gaps) != num_queries:
+        raise ValueError(f"workload {wl_name!r} produced {len(gaps)} "
+                         f"inter-arrivals for {num_queries} queries")
+    return wl_name, (np.cumsum(gaps) if gaps is not None else None)
 
 
 class _CompletionLedger:
@@ -161,6 +187,311 @@ def _chunk_ledger(arrivals_chunk: Optional[np.ndarray],
     return arrivals_chunk, start, float(start[-1] + occupancy[-1])
 
 
+class PipelineRunner:
+    """The event loop's state machine, driveable all-at-once or per query.
+
+    One runner = one pipeline's serving window: it owns the admission
+    ledger (``free_at`` / ``drain_at`` / in-system completions), the
+    per-query result arrays, and the runtime-counter snapshots that make
+    the finished :class:`PipelineTrace` report *this run's* rebalance
+    accounting.
+
+    Two driving modes share every line of tick code:
+
+    * :meth:`run` — the single-pipeline driver behind
+      :func:`run_pipeline`: consumes a whole arrival array, using the
+      batch-granular fast path where the executor supports it.
+    * :meth:`step` — feed exactly one query (the next one) with an
+      explicit arrival time; used by :class:`repro.cluster.Cluster`,
+      which interleaves routing decisions between queries and therefore
+      cannot hand the loop the whole arrival stream upfront.
+
+    ``capacity`` sizes the initial result arrays; serving past it grows
+    them by doubling (a cluster pre-sizes each replica's runner at its
+    *expected* share, not the whole fleet), and :meth:`finish` trims to
+    the number actually served.
+    """
+
+    def __init__(self, executor: QueryExecutor,
+                 runtime: RebalanceRuntime,
+                 capacity: int,
+                 chunking: bool = True,
+                 max_chunk: Optional[int] = None):
+        self.executor = executor
+        self.runtime = runtime
+        self.capacity = max(1, int(capacity))
+
+        self._rebalances0 = runtime.num_rebalances
+        self._trials0 = runtime.total_trials
+        self._mitigations0 = len(runtime.mitigation_lengths)
+        self._has_reference = hasattr(executor, "reference_throughput")
+
+        mode = getattr(executor, "batch_mode", None) if chunking else None
+        if mode is not None and not callable(getattr(executor,
+                                                     "execute_many", None)):
+            mode = None
+        if mode not in (None, "vector", "batch"):
+            raise ValueError(f"unknown executor batch_mode {mode!r}; "
+                             f"expected 'vector', 'batch' or None")
+        if mode is not None and not callable(getattr(executor,
+                                                     "steady_horizon", None)):
+            raise ValueError("a batching executor must provide "
+                             "steady_horizon(q); chunks must not cross an "
+                             "interference edge")
+        self._mode = mode
+        cap = (max_chunk if max_chunk is not None
+               else getattr(executor, "max_chunk", DEFAULT_MAX_CHUNK))
+        self._chunk_cap = max(1, int(cap))
+        # "vector" chunks poll the scheduler once per environment-steady
+        # segment, which is only equivalent to per-query polling when the
+        # policy's steady detect is stable (pure under unchanged
+        # conditions).
+        self._poll_once = mode == "vector" and runtime.steady_poll_stable()
+
+        n = self.capacity
+        self.latencies = np.zeros(n)
+        self.service_lat = np.zeros(n)
+        self.queue_delay = np.zeros(n)
+        self.throughputs = np.zeros(n)
+        self.serial_mask = np.zeros(n, dtype=bool)
+        self.arrival_t = np.zeros(n)
+        self.completion_t = np.zeros(n)
+        self.queue_depth = np.zeros(n, dtype=int)
+        self.rc_thr = np.zeros(n) if self._has_reference else None
+        self.configs_trace: List[List[int]] = []
+
+        self.free_at = 0.0             # when the admission head frees up
+        self.drain_at = 0.0            # when every admitted query completed
+        self._pending = _CompletionLedger()  # in-system completions
+        self.num_served = 0            # queries executed so far
+
+    #: Result arrays grown together when the run outlives ``capacity``.
+    _ARRAYS = ("latencies", "service_lat", "queue_delay", "throughputs",
+               "serial_mask", "arrival_t", "completion_t", "queue_depth",
+               "rc_thr")
+
+    def _ensure_capacity(self, n: int) -> None:
+        """Grow the result arrays (doubling) to hold ``n`` queries."""
+        if n <= self.capacity:
+            return
+        new = max(n, 2 * self.capacity)
+        for name in self._ARRAYS:
+            arr = getattr(self, name)
+            if arr is None:
+                continue
+            grown = np.zeros(new, dtype=arr.dtype)
+            grown[:len(arr)] = arr
+            setattr(self, name, grown)
+        self.capacity = new
+
+    # -- ticks (shared by both driving modes) -------------------------------
+    def _scalar_tick(self, q: int, step, arrival: Optional[float]) -> float:
+        """One query through the per-query (compatibility) path.
+
+        ``arrival = None`` means closed-loop: the query arrives exactly
+        when the pipeline can take it.  Returns the completion time.
+        """
+        rec = self.executor.execute(q, step)
+        self.throughputs[q] = rec.throughput
+        self.serial_mask[q] = step.serial
+        self.configs_trace.append(list(step.config))
+        # A serial trial runs on the drained pipeline, so it cannot
+        # start until every in-flight pipelined query has completed.
+        ready = (max(self.free_at, self.drain_at) if step.serial
+                 else self.free_at)
+        if arrival is None:
+            arrival = ready
+        self.queue_depth[q] = self._pending.depth_at(arrival)
+        start = max(arrival, ready)
+        occupancy = (rec.service_latency if step.serial
+                     else (1.0 / rec.throughput if rec.throughput > 0
+                           else 0.0))
+        self.free_at = start + occupancy
+        completion = start + rec.service_latency
+        self.drain_at = max(self.drain_at, completion)
+        self._pending.push(completion)
+        self.arrival_t[q] = arrival
+        self.completion_t[q] = completion
+        self.queue_delay[q] = start - arrival
+        self.service_lat[q] = rec.service_latency
+        self.latencies[q] = self.queue_delay[q] + rec.service_latency
+        return completion
+
+    def _chunk_tick(self, q0: int, steps,
+                    arrivals: Optional[np.ndarray]) -> None:
+        """``len(steps)`` steady queries through ``execute_many``."""
+        n = len(steps)
+        sl = slice(q0, q0 + n)
+        rec = self.executor.execute_many(q0, steps)
+        if len(rec.throughputs) != n:
+            raise ValueError(f"execute_many returned {len(rec.throughputs)} "
+                             f"records for a chunk of {n}")
+        self.throughputs[sl] = rec.throughputs
+        if steps[0] is steps[-1]:
+            # poll-once chunks replicate one step: share one row object
+            # instead of materializing n copies (entries are read-only
+            # by convention; the scalar path appends fresh lists).
+            self.configs_trace.extend([list(steps[0].config)] * n)
+        else:
+            self.configs_trace.extend(list(s.config) for s in steps)
+        occ = np.where(rec.throughputs > 0, 1.0 / rec.throughputs, 0.0)
+        arr_chunk = arrivals[sl] if arrivals is not None else None
+        arrival, start, self.free_at = _chunk_ledger(arr_chunk, occ,
+                                                     self.free_at)
+        completion = start + rec.service_latencies
+        self.queue_depth[sl] = self._pending.depths_bulk(arrival, completion)
+        self.drain_at = max(self.drain_at, float(completion[-1]))
+        self.arrival_t[sl] = arrival
+        self.completion_t[sl] = completion
+        self.queue_delay[sl] = start - arrival
+        self.service_lat[sl] = rec.service_latencies
+        self.latencies[sl] = self.queue_delay[sl] + rec.service_latencies
+
+    # -- incremental driving (one query at a time) --------------------------
+    def step(self, arrival: Optional[float] = None) -> float:
+        """Serve the next query, arriving at ``arrival`` (None = the
+        instant this pipeline can take it — closed loop).
+
+        The per-query semantics are identical to :meth:`run`'s scalar
+        path: advance the environment, poll the scheduler runtime,
+        execute, account the arrival ledger.  Returns the query's
+        completion time, which callers (the cluster's routers) use for
+        outstanding-work accounting.
+        """
+        q = self.num_served
+        self._ensure_capacity(q + 1)
+        source = self.executor.begin_query(q)
+        if self.rc_thr is not None:
+            self.rc_thr[q] = self.executor.reference_throughput(q)
+        step = (self.runtime.poll(source) if source is not None
+                else self.runtime.steady_step())
+        completion = self._scalar_tick(q, step, arrival)
+        self.num_served = q + 1
+        return completion
+
+    # -- full-run driving (the run_pipeline path) ---------------------------
+    def run(self, num_queries: int,
+            arrivals: Optional[np.ndarray]) -> None:
+        """Serve ``num_queries`` queries with the given arrival times
+        (``None`` = closed loop), using the batch-granular fast path
+        where the executor supports it."""
+        self._ensure_capacity(self.num_served + num_queries)
+        executor, runtime = self.executor, self.runtime
+        mode, cap = self._mode, self._chunk_cap
+        rc_thr = self.rc_thr
+        end = self.num_served + num_queries
+
+        q = self.num_served
+        while q < end:
+            # -- advance the environment; poll the scheduler runtime ------
+            source = executor.begin_query(q)
+            if rc_thr is not None:
+                rc_thr[q] = executor.reference_throughput(q)
+            step = runtime.poll(source) if source is not None \
+                else runtime.steady_step()
+
+            if mode is None or step.serial:
+                self._scalar_tick(
+                    q, step,
+                    arrivals[q] if arrivals is not None else None)
+                q += 1
+                continue
+
+            if mode == "batch":
+                # A real batch only forms from queries already queued at
+                # dispatch time; don't pay the steady-horizon scan (up to
+                # max_chunk schedule evaluations) when there is no
+                # backlog.
+                dispatch_t = (max(self.free_at, arrivals[q])
+                              if arrivals is not None else self.free_at)
+                if (arrivals is None or q + 1 >= end
+                        or arrivals[q + 1] > dispatch_t):
+                    self._chunk_tick(q, [step], arrivals)
+                    q += 1
+                    continue
+
+            limit = min(end - q,
+                        cap,
+                        max(1, int(executor.steady_horizon(q))))
+
+            if self._poll_once:
+                # One poll covers the whole environment-steady segment:
+                # the policy's detect is pure under unchanged (config,
+                # stage times), so queries q+1 .. q+limit-1 would poll
+                # identically.
+                n = limit
+                if rc_thr is not None:
+                    rc_thr[q:q + n] = rc_thr[q]
+                self._chunk_tick(q, [step] * n, arrivals)
+                q += n
+                continue
+
+            # Per-query polling ("batch" mode, or "vector" with a
+            # stateful detector): accumulate steady same-config queries,
+            # stopping at the steady horizon, the chunk cap, a detector
+            # trigger, a config change, or — for real batches — the
+            # arrival backlog (a query that has not arrived by dispatch
+            # time cannot join).
+            steps = [step]
+            leftover = None          # (q, step) polled but not chunk-able
+            dispatch_t = (max(self.free_at, arrivals[q])
+                          if arrivals is not None else self.free_at)
+            j = q + 1
+            while j < q + limit:
+                if mode == "batch" and (arrivals is None
+                                        or arrivals[j] > dispatch_t):
+                    break
+                src_j = executor.begin_query(j)
+                if rc_thr is not None:
+                    rc_thr[j] = executor.reference_throughput(j)
+                step_j = runtime.poll(src_j) if src_j is not None \
+                    else runtime.steady_step()
+                if step_j.serial or step_j.config != step.config:
+                    leftover = (j, step_j)
+                    break
+                steps.append(step_j)
+                j += 1
+            self._chunk_tick(q, steps, arrivals)
+            q += len(steps)
+            if leftover is not None:
+                # Already polled (the trial/commit is charged to this
+                # query); execute it without re-advancing the runtime.
+                jq, jstep = leftover
+                self._scalar_tick(
+                    jq, jstep,
+                    arrivals[jq] if arrivals is not None else None)
+                q += 1
+        self.num_served = q
+
+    # -- result --------------------------------------------------------------
+    def finish(self, scheduler_name: str = "",
+               workload_name: str = "closed",
+               peak_throughput: float = float("nan")) -> PipelineTrace:
+        """Freeze the run into a :class:`PipelineTrace` (arrays trimmed
+        to the number of queries actually served)."""
+        n = self.num_served
+        return PipelineTrace(
+            scheduler=scheduler_name,
+            latencies=self.latencies[:n],
+            throughputs=self.throughputs[:n],
+            serial_mask=self.serial_mask[:n],
+            configs_trace=self.configs_trace,
+            num_rebalances=self.runtime.num_rebalances - self._rebalances0,
+            total_trials=self.runtime.total_trials - self._trials0,
+            mitigation_lengths=list(
+                self.runtime.mitigation_lengths[self._mitigations0:]),
+            workload=workload_name,
+            service_latencies=self.service_lat[:n],
+            queue_delays=self.queue_delay[:n],
+            arrival_times=self.arrival_t[:n],
+            completion_times=self.completion_t[:n],
+            queue_depths=self.queue_depth[:n],
+            peak_throughput=peak_throughput,
+            rc_throughputs=(self.rc_thr[:n] if self.rc_thr is not None
+                            else None),
+        )
+
+
 def run_pipeline(executor: QueryExecutor,
                  runtime: RebalanceRuntime,
                  num_queries: int,
@@ -181,197 +512,18 @@ def run_pipeline(executor: QueryExecutor,
     executor supports ``execute_many`` (benchmark baseline / debugging);
     ``max_chunk`` overrides the executor's preferred chunk cap.
     """
-    wl = resolve_workload(workload, workload_kwargs)
-    wl_name = getattr(wl, "name", type(wl).__name__)
-    gaps = wl.inter_arrivals(num_queries) if wl.open_loop else None
-    if gaps is not None and len(gaps) != num_queries:
-        raise ValueError(f"workload {wl_name!r} produced {len(gaps)} "
-                         f"inter-arrivals for {num_queries} queries")
-    arrivals = np.cumsum(gaps) if gaps is not None else None
+    wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
+                                         num_queries)
+    # Executors whose interference timeline is wall-clock anchored
+    # (time-indexed events, docs/CLUSTER.md) need each query's arrival
+    # time to advance the environment.
+    announce = getattr(executor, "set_arrivals", None)
+    if callable(announce):
+        announce(arrivals)
 
-    rebalances0 = runtime.num_rebalances
-    trials0 = runtime.total_trials
-    mitigations0 = len(runtime.mitigation_lengths)
-    has_reference = hasattr(executor, "reference_throughput")
-
-    mode = getattr(executor, "batch_mode", None) if chunking else None
-    if mode is not None and not callable(getattr(executor, "execute_many",
-                                                 None)):
-        mode = None
-    if mode not in (None, "vector", "batch"):
-        raise ValueError(f"unknown executor batch_mode {mode!r}; "
-                         f"expected 'vector', 'batch' or None")
-    if mode is not None and not callable(getattr(executor, "steady_horizon",
-                                                 None)):
-        raise ValueError("a batching executor must provide "
-                         "steady_horizon(q); chunks must not cross an "
-                         "interference edge")
-    cap = (max_chunk if max_chunk is not None
-           else getattr(executor, "max_chunk", DEFAULT_MAX_CHUNK))
-    cap = max(1, int(cap))
-    # "vector" chunks poll the scheduler once per environment-steady
-    # segment, which is only equivalent to per-query polling when the
-    # policy's steady detect is stable (pure under unchanged conditions).
-    poll_once = mode == "vector" and runtime.steady_poll_stable()
-
-    latencies = np.zeros(num_queries)
-    service_lat = np.zeros(num_queries)
-    queue_delay = np.zeros(num_queries)
-    throughputs = np.zeros(num_queries)
-    serial_mask = np.zeros(num_queries, dtype=bool)
-    arrival_t = np.zeros(num_queries)
-    completion_t = np.zeros(num_queries)
-    queue_depth = np.zeros(num_queries, dtype=int)
-    rc_thr = np.zeros(num_queries) if has_reference else None
-    configs_trace: List[List[int]] = []
-
-    free_at = 0.0                  # when the admission head frees up
-    drain_at = 0.0                 # when every admitted query has completed
-    pending = _CompletionLedger()  # completions of in-system queries
-
-    def scalar_tick(q, step):
-        """One query through the per-query (compatibility) path."""
-        nonlocal free_at, drain_at
-        rec = executor.execute(q, step)
-        throughputs[q] = rec.throughput
-        serial_mask[q] = step.serial
-        configs_trace.append(list(step.config))
-        # A serial trial runs on the drained pipeline, so it cannot
-        # start until every in-flight pipelined query has completed.
-        ready = max(free_at, drain_at) if step.serial else free_at
-        arrival = arrivals[q] if arrivals is not None else ready
-        queue_depth[q] = pending.depth_at(arrival)
-        start = max(arrival, ready)
-        occupancy = (rec.service_latency if step.serial
-                     else (1.0 / rec.throughput if rec.throughput > 0
-                           else 0.0))
-        free_at = start + occupancy
-        completion = start + rec.service_latency
-        drain_at = max(drain_at, completion)
-        pending.push(completion)
-        arrival_t[q] = arrival
-        completion_t[q] = completion
-        queue_delay[q] = start - arrival
-        service_lat[q] = rec.service_latency
-        latencies[q] = queue_delay[q] + rec.service_latency
-
-    def chunk_tick(q0, steps):
-        """``len(steps)`` steady queries through ``execute_many``."""
-        nonlocal free_at, drain_at
-        n = len(steps)
-        sl = slice(q0, q0 + n)
-        rec = executor.execute_many(q0, steps)
-        if len(rec.throughputs) != n:
-            raise ValueError(f"execute_many returned {len(rec.throughputs)} "
-                             f"records for a chunk of {n}")
-        throughputs[sl] = rec.throughputs
-        if steps[0] is steps[-1]:
-            # poll-once chunks replicate one step: share one row object
-            # instead of materializing n copies (entries are read-only
-            # by convention; the scalar path appends fresh lists).
-            configs_trace.extend([list(steps[0].config)] * n)
-        else:
-            configs_trace.extend(list(s.config) for s in steps)
-        occ = np.where(rec.throughputs > 0, 1.0 / rec.throughputs, 0.0)
-        arr_chunk = arrivals[sl] if arrivals is not None else None
-        arrival, start, free_at = _chunk_ledger(arr_chunk, occ, free_at)
-        completion = start + rec.service_latencies
-        queue_depth[sl] = pending.depths_bulk(arrival, completion)
-        drain_at = max(drain_at, float(completion[-1]))
-        arrival_t[sl] = arrival
-        completion_t[sl] = completion
-        queue_delay[sl] = start - arrival
-        service_lat[sl] = rec.service_latencies
-        latencies[sl] = queue_delay[sl] + rec.service_latencies
-
-    q = 0
-    while q < num_queries:
-        # -- advance the environment; poll the scheduler runtime ----------
-        source = executor.begin_query(q)
-        if rc_thr is not None:
-            rc_thr[q] = executor.reference_throughput(q)
-        step = runtime.poll(source) if source is not None \
-            else runtime.steady_step()
-
-        if mode is None or step.serial:
-            scalar_tick(q, step)
-            q += 1
-            continue
-
-        if mode == "batch":
-            # A real batch only forms from queries already queued at
-            # dispatch time; don't pay the steady-horizon scan (up to
-            # max_chunk schedule evaluations) when there is no backlog.
-            dispatch_t = (max(free_at, arrivals[q]) if arrivals is not None
-                          else free_at)
-            if (arrivals is None or q + 1 >= num_queries
-                    or arrivals[q + 1] > dispatch_t):
-                chunk_tick(q, [step])
-                q += 1
-                continue
-
-        limit = min(num_queries - q,
-                    cap,
-                    max(1, int(executor.steady_horizon(q))))
-
-        if poll_once:
-            # One poll covers the whole environment-steady segment: the
-            # policy's detect is pure under unchanged (config, stage
-            # times), so queries q+1 .. q+limit-1 would poll identically.
-            n = limit
-            if rc_thr is not None:
-                rc_thr[q:q + n] = rc_thr[q]
-            chunk_tick(q, [step] * n)
-            q += n
-            continue
-
-        # Per-query polling ("batch" mode, or "vector" with a stateful
-        # detector): accumulate steady same-config queries, stopping at
-        # the steady horizon, the chunk cap, a detector trigger, a
-        # config change, or — for real batches — the arrival backlog
-        # (a query that has not arrived by dispatch time cannot join).
-        steps = [step]
-        leftover = None              # (q, step) polled but not chunk-able
-        dispatch_t = (max(free_at, arrivals[q]) if arrivals is not None
-                      else free_at)
-        j = q + 1
-        while j < q + limit:
-            if mode == "batch" and (arrivals is None
-                                    or arrivals[j] > dispatch_t):
-                break
-            src_j = executor.begin_query(j)
-            if rc_thr is not None:
-                rc_thr[j] = executor.reference_throughput(j)
-            step_j = runtime.poll(src_j) if src_j is not None \
-                else runtime.steady_step()
-            if step_j.serial or step_j.config != step.config:
-                leftover = (j, step_j)
-                break
-            steps.append(step_j)
-            j += 1
-        chunk_tick(q, steps)
-        q += len(steps)
-        if leftover is not None:
-            # Already polled (the trial/commit is charged to this
-            # query); execute it without re-advancing the runtime.
-            scalar_tick(*leftover)
-            q += 1
-
-    return PipelineTrace(
-        scheduler=scheduler_name,
-        latencies=latencies,
-        throughputs=throughputs,
-        serial_mask=serial_mask,
-        configs_trace=configs_trace,
-        num_rebalances=runtime.num_rebalances - rebalances0,
-        total_trials=runtime.total_trials - trials0,
-        mitigation_lengths=list(runtime.mitigation_lengths[mitigations0:]),
-        workload=wl_name,
-        service_latencies=service_lat,
-        queue_delays=queue_delay,
-        arrival_times=arrival_t,
-        completion_times=completion_t,
-        queue_depths=queue_depth,
-        peak_throughput=peak_throughput,
-        rc_throughputs=rc_thr,
-    )
+    runner = PipelineRunner(executor, runtime, num_queries,
+                            chunking=chunking, max_chunk=max_chunk)
+    runner.run(num_queries, arrivals)
+    return runner.finish(scheduler_name=scheduler_name,
+                         workload_name=wl_name,
+                         peak_throughput=peak_throughput)

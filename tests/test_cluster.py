@@ -1,0 +1,388 @@
+"""repro.cluster: router registry, determinism, the n=1 reduction, and
+interference-aware routing beating the baselines in both backends."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    Cluster,
+    ClusterTrace,
+    Replica,
+    ReplicaView,
+    Router,
+    available_routers,
+    make_router,
+    register_router,
+    router_class,
+    run_cluster,
+    simulate_cluster,
+    unregister_router,
+)
+from repro.core import (
+    InterferenceEvent,
+    generate_events,
+    simulate,
+    synthetic_database,
+)
+
+BUILTIN_ROUTERS = ("round_robin", "least_outstanding", "odin_aware")
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+@pytest.fixture(scope="module")
+def cap(db):
+    """Per-replica interference-free peak throughput."""
+    return simulate(db, 4, scheduler="none", events=[],
+                    num_queries=10).peak_throughput
+
+
+def replica2_events(num_local_queries=500, freq=2, dur=100, seed=5,
+                    num_scenarios=12):
+    """The acceptance scenario: the paper's heaviest setting
+    (freq=2, dur=100) scoped to replica 2 of 4."""
+    return [dataclasses.replace(ev, replica=2)
+            for ev in generate_events(num_local_queries, 4, num_scenarios,
+                                      freq, dur, seed)]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtin_routers():
+    names = available_routers()
+    for name in BUILTIN_ROUTERS:
+        assert name in names
+
+
+def test_registry_kwargs_filtered_per_router():
+    """One kwargs superset constructs any router (round_robin ignores
+    the odin_aware knobs)."""
+    for name in BUILTIN_ROUTERS:
+        r = make_router(name, interference_weight=2.0, explore_penalty=3.0)
+        assert isinstance(r, Router)
+    assert make_router("odin_aware",
+                       interference_weight=2.0).interference_weight == 2.0
+
+
+def test_registry_unknown_and_custom():
+    with pytest.raises(ValueError, match="unknown router"):
+        make_router("does-not-exist")
+
+    @register_router("_test_sticky")
+    class StickyRouter:
+        def route(self, q, now, views):
+            return 0
+
+        def reset(self):
+            pass
+
+    try:
+        assert router_class("_test_sticky") is StickyRouter
+        assert make_router("_test_sticky").name == "_test_sticky"
+    finally:
+        unregister_router("_test_sticky")
+    with pytest.raises(ValueError):
+        make_router("_test_sticky")
+
+
+def test_cluster_validates_replicas_and_router_output(db):
+    with pytest.raises(ValueError, match="at least one replica"):
+        Cluster([], router="round_robin")
+
+    class BadRouter:
+        name = "bad"
+
+        def route(self, q, now, views):
+            return 7
+
+        def reset(self):
+            pass
+
+    with pytest.raises(ValueError, match="replica 7"):
+        simulate_cluster(db, 4, 2, scheduler="none", router=BadRouter(),
+                         num_queries=4)
+
+
+# ---------------------------------------------------------------------------
+# determinism: same (workload, seed, router) => identical assignments
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", BUILTIN_ROUTERS)
+def test_router_assignments_deterministic(db, cap, router):
+    evs = replica2_events(num_local_queries=200)
+    kw = dict(scheduler="odin", alpha=4, num_queries=400, events=evs,
+              router=router, workload="poisson",
+              workload_kwargs=dict(rate=2.5 * cap, seed=7))
+    a = simulate_cluster(db, 4, 4, **kw)
+    b = simulate_cluster(db, 4, 4, **kw)
+    assert np.array_equal(a.assignments, b.assignments)
+    assert np.array_equal(a.local_indices, b.local_indices)
+    assert np.array_equal(a.fleet.latencies, b.fleet.latencies)
+    # every replica's per-query trace replays identically too
+    for ta, tb in zip(a.replicas, b.replicas):
+        assert np.array_equal(ta.latencies, tb.latencies)
+        assert ta.configs_trace == tb.configs_trace
+
+
+def test_routers_actually_differ(db, cap):
+    """Sanity: the three routers are not secretly the same policy."""
+    evs = replica2_events(num_local_queries=200)
+    kw = dict(scheduler="odin", alpha=4, num_queries=400, events=evs,
+              workload="poisson",
+              workload_kwargs=dict(rate=2.5 * cap, seed=7))
+    rr = simulate_cluster(db, 4, 4, router="round_robin", **kw)
+    lo = simulate_cluster(db, 4, 4, router="least_outstanding", **kw)
+    oa = simulate_cluster(db, 4, 4, router="odin_aware", **kw)
+    assert not np.array_equal(rr.assignments, lo.assignments)
+    assert not np.array_equal(rr.assignments, oa.assignments)
+    # round robin splits exactly evenly
+    assert np.array_equal(rr.replica_counts, [100, 100, 100, 100])
+
+
+# ---------------------------------------------------------------------------
+# the n=1 reduction: a one-replica cluster IS run_pipeline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", BUILTIN_ROUTERS)
+def test_cluster_n1_closed_loop_bit_identical_to_simulate(db, router):
+    """cluster(n=1, router=*) closed loop == plain simulate(), bit for
+    bit: same arrays, same rebalance accounting, same references."""
+    events = generate_events(400, 4, db.num_scenarios, 20, 10, seed=3)
+    ref = simulate(db, 4, scheduler="odin", alpha=4, num_queries=400,
+                   events=list(events))
+    ct = simulate_cluster(db, 4, 1, scheduler="odin", alpha=4,
+                          num_queries=400, events=list(events),
+                          router=router)
+    assert np.array_equal(ct.assignments, np.zeros(400, dtype=int))
+    f = ct.fleet
+    assert np.array_equal(f.latencies, ref.latencies)
+    assert np.array_equal(f.throughputs, ref.throughputs)
+    assert np.array_equal(f.serial_mask, ref.serial_mask)
+    assert f.configs_trace == ref.configs_trace
+    assert np.array_equal(f.service_latencies, ref.service_latencies)
+    assert np.array_equal(f.queue_delays, ref.queue_delays)
+    assert np.array_equal(f.queue_depths, ref.queue_depths)
+    assert np.array_equal(f.arrival_times, ref.arrival_times)
+    assert np.array_equal(f.completion_times, ref.completion_times)
+    assert np.array_equal(f.rc_throughputs, ref.rc_throughputs)
+    assert f.num_rebalances == ref.num_rebalances
+    assert f.total_trials == ref.total_trials
+    assert f.mitigation_lengths == ref.mitigation_lengths
+    assert f.peak_throughput == ref.peak_throughput
+    assert f.summary() == ref.summary()
+
+
+def test_cluster_n1_open_loop_matches_simulate(db, cap):
+    """Open loop: the cluster's scalar tick vs simulate()'s chunked
+    fast path — equal to float re-association (<= 1e-9 rel)."""
+    events = generate_events(300, 4, db.num_scenarios, 20, 10, seed=3)
+    kw = dict(num_queries=300, workload="poisson",
+              workload_kwargs=dict(rate=0.8 * cap, seed=11))
+    ref = simulate(db, 4, scheduler="odin", alpha=4, events=list(events),
+                   **kw)
+    ct = simulate_cluster(db, 4, 1, scheduler="odin", alpha=4,
+                          events=list(events), **kw)
+    f = ct.fleet
+    assert np.allclose(f.latencies, ref.latencies, rtol=1e-9)
+    assert np.allclose(f.queue_delays, ref.queue_delays, rtol=1e-9,
+                       atol=1e-9)
+    assert f.configs_trace == ref.configs_trace
+    assert f.num_rebalances == ref.num_rebalances
+
+
+# ---------------------------------------------------------------------------
+# replica-scoped interference + routing: the acceptance scenario (sim)
+# ---------------------------------------------------------------------------
+
+
+def test_odin_aware_beats_baselines_under_replica_scoped_interference(
+        db, cap):
+    """freq=2, dur=100 hammering replica 2 of 4: interference-aware
+    routing must sustain fleet p99 latency and throughput strictly
+    better than round_robin and no worse than least_outstanding.
+    The simulator is deterministic, so the comparisons are strict."""
+    evs = replica2_events()
+    res = {}
+    for router in BUILTIN_ROUTERS:
+        res[router] = simulate_cluster(
+            db, 4, 4, scheduler="odin", alpha=4, num_queries=2000,
+            events=evs, router=router, workload="poisson",
+            workload_kwargs=dict(rate=2.5 * cap, seed=7))
+    rr, lo, oa = (res["round_robin"], res["least_outstanding"],
+                  res["odin_aware"])
+    # p99 latency: strictly better than RR, no worse than cluster-LLS
+    assert oa.tail_latency(99) < rr.tail_latency(99)
+    assert oa.tail_latency(99) <= lo.tail_latency(99)
+    # throughput: strictly better than RR, no worse than cluster-LLS
+    assert oa.achieved_load > rr.achieved_load
+    assert oa.achieved_load >= lo.achieved_load
+    # SLO violations follow the same ordering
+    assert oa.slo_violations(0.9) < rr.slo_violations(0.9)
+    assert oa.slo_violations(0.9) <= lo.slo_violations(0.9)
+    # and the mechanism is visible: odin_aware starves the interfered
+    # replica while RR keeps feeding it its full 1/4 share
+    assert oa.replica_counts[2] < lo.replica_counts[2]
+    assert lo.replica_counts[2] < rr.replica_counts[2]
+
+
+def test_replica_scoped_event_hits_only_its_replica(db, cap):
+    """With a fixed (round_robin) assignment, adding a replica-2-scoped
+    event changes replica 2's trace and nothing else."""
+    kw = dict(scheduler="none", num_queries=400, router="round_robin",
+              workload="poisson",
+              workload_kwargs=dict(rate=2.0 * cap, seed=3))
+    base = simulate_cluster(db, 4, 4, events=[], **kw)
+    evs = [InterferenceEvent(start=10, duration=60, ep=1, scenario=12,
+                             replica=2)]
+    hit = simulate_cluster(db, 4, 4, events=evs, **kw)
+    assert np.array_equal(base.assignments, hit.assignments)
+    for r in (0, 1, 3):
+        assert np.array_equal(base.replicas[r].service_latencies,
+                              hit.replicas[r].service_latencies)
+    assert not np.array_equal(base.replicas[2].service_latencies,
+                              hit.replicas[2].service_latencies)
+    # local query-indexed window: exactly local queries [10, 70) differ
+    diff = np.flatnonzero(base.replicas[2].service_latencies
+                          != hit.replicas[2].service_latencies)
+    assert diff.min() >= 10 and diff.max() < 70
+
+
+def test_time_indexed_cluster_events_reject_closed_loop(db):
+    evs = [InterferenceEvent(start=0.0, duration=10.0, ep=0, scenario=1,
+                             replica=0)]
+    with pytest.raises(ValueError, match="open-loop"):
+        simulate_cluster(db, 4, 2, scheduler="none", events=evs,
+                         events_time_indexed=True, num_queries=4)
+
+
+def test_time_indexed_replica_event_anchors_on_fleet_clock(db, cap):
+    """A wall-clock event window on replica 2: the affected local
+    queries are exactly those whose *fleet arrival times* fall inside
+    the window, however many the router happened to send."""
+    kw = dict(scheduler="none", num_queries=400, router="round_robin",
+              workload="poisson",
+              workload_kwargs=dict(rate=2.0 * cap, seed=3))
+    base = simulate_cluster(db, 4, 4, events=[], **kw)
+    t0, t1 = 20000.0, 60000.0
+    evs = [InterferenceEvent(start=t0, duration=t1 - t0, ep=1,
+                             scenario=12, replica=2)]
+    hit = simulate_cluster(db, 4, 4, events=evs,
+                           events_time_indexed=True, **kw)
+    assert np.array_equal(base.assignments, hit.assignments)
+    for r in (0, 1, 3):
+        assert np.array_equal(base.replicas[r].service_latencies,
+                              hit.replicas[r].service_latencies)
+    arr = hit.replicas[2].arrival_times
+    in_win = (arr >= t0) & (arr < t1)
+    assert 0 < in_win.sum() < len(in_win)
+    slower = (hit.replicas[2].service_latencies
+              > base.replicas[2].service_latencies)
+    assert np.array_equal(slower, in_win)
+
+
+# ---------------------------------------------------------------------------
+# ClusterTrace surface
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_trace_surface(db, cap):
+    ct = simulate_cluster(db, 4, 3, scheduler="odin", alpha=4,
+                          num_queries=300,
+                          events=replica2_events(num_local_queries=150),
+                          router="odin_aware", workload="bursty",
+                          workload_kwargs=dict(burst_rate=4.0 * cap,
+                                               base_rate=0.2 * cap,
+                                               mean_burst=3000,
+                                               mean_gap=5000, seed=2))
+    assert isinstance(ct, ClusterTrace)
+    assert ct.num_replicas == 3 and ct.num_queries == 300
+    assert ct.replica_counts.sum() == 300
+    # the fleet trace is a permutation of the replica traces
+    fleet = ct.fleet
+    concat = np.sort(np.concatenate([t.latencies for t in ct.replicas]))
+    assert np.array_equal(np.sort(fleet.latencies), concat)
+    # fleet arrival order really is arrival order
+    assert np.all(np.diff(fleet.arrival_times) >= 0)
+    s = ct.summary()
+    for key in ("p50_latency_s", "p99_latency_s", "mean_queue_delay_s",
+                "offered_load_qps", "achieved_load_qps", "slo_violations",
+                "rebalances", "num_replicas", "router",
+                "min_replica_share", "max_replica_share"):
+        assert key in s
+    assert s["num_replicas"] == 3 and s["router"] == "odin_aware"
+    assert 0.0 <= s["slo_violations"] <= 1.0
+    assert 0.0 <= s["min_replica_share"] <= s["max_replica_share"] <= 1.0
+    # per-replica + fleet rows share one schema
+    rows = ct.rows()
+    assert len(rows) == 4
+    assert [r["scope"] for r in rows] == ["replica0", "replica1",
+                                          "replica2", "fleet"]
+    keys = set(rows[0])
+    assert all(set(r) == keys for r in rows)
+    # rebalance accounting aggregates
+    assert fleet.num_rebalances == sum(t.num_rebalances
+                                       for t in ct.replicas)
+
+
+def test_replica_view_signals(db, cap):
+    """The view's detector/estimate probes reflect replica state and
+    are side-effect-free (probing twice changes nothing)."""
+    from repro.workloads.runner import PipelineRunner
+    from repro.cluster.sim import simulate_cluster  # noqa: F401
+
+    # build one interfered replica by hand via the sim backend pieces
+    evs = [InterferenceEvent(start=5, duration=100, ep=1, scenario=12)]
+    ct = simulate_cluster(db, 4, 1, scheduler="odin", alpha=4,
+                          num_queries=3, events=evs, router="round_robin")
+    assert ct.num_queries == 3  # smoke: the machinery above ran
+
+    # direct probe: a runner served past the event edge reports a
+    # positive interference score on a quiet detector reference
+    from repro.core.simulator import DatabaseQueryExecutor
+    from repro.core.exhaustive import optimal_partition
+    from repro.schedulers.registry import make_scheduler
+    from repro.schedulers.runtime import RebalanceRuntime
+
+    def oracle(scen_key):
+        return optimal_partition(db, list(scen_key), 4)
+
+    ex = DatabaseQueryExecutor(db, 4, evs, oracle)
+    policy = make_scheduler("none")      # no mitigation: shift persists
+    rt = RebalanceRuntime(policy, [4, 4, 4, 4])
+    runner = PipelineRunner(ex, rt, 20)
+    assert rt.interference_score() == 0.0        # nothing polled yet
+    assert np.isnan(rt.estimated_bottleneck())
+    for _ in range(4):
+        runner.step(None)
+    view = ReplicaView(0, runner, outstanding=2, now=0.0,
+                       since_assign=1.0)
+    assert view.interference_score == 0.0        # static policy: no det
+    assert np.isfinite(view.est_bottleneck)
+    assert view.backlog == runner.free_at        # now=0, free_at ahead
+
+    # with a detector-bearing policy the shift becomes visible
+    policy = make_scheduler("lls")
+    rt = RebalanceRuntime(policy, [4, 4, 4, 4])
+    ex = DatabaseQueryExecutor(db, 4, evs, oracle)
+    runner = PipelineRunner(ex, rt, 20)
+    runner.step(None)                    # q=0: arms the clean reference
+    for _ in range(5):                   # cross the event edge at q=5
+        runner.step(None)
+    # the detector triggered and the runtime is mid-exploration (LLS
+    # trials); the probe sees the phase without advancing it
+    view = ReplicaView(0, runner, 0, now=0.0, since_assign=1.0)
+    assert view.exploring
+    before = (rt.num_rebalances, rt.total_trials)
+    _ = (view.interference_score, view.est_bottleneck,
+         view.interference_active)
+    _ = (view.interference_score, view.est_bottleneck)
+    assert (rt.num_rebalances, rt.total_trials) == before

@@ -19,8 +19,10 @@ from repro.core import (
 from repro.schedulers import RebalanceRuntime, make_scheduler
 from repro.workloads import (
     BurstyWorkload,
+    DiurnalWorkload,
     PipelineTrace,
     PoissonWorkload,
+    RampWorkload,
     TraceWorkload,
     Workload,
     available_workloads,
@@ -29,7 +31,7 @@ from repro.workloads import (
     unregister_workload,
 )
 
-BUILTINS = ("closed", "poisson", "bursty", "trace")
+BUILTINS = ("closed", "poisson", "bursty", "diurnal", "ramp", "trace")
 
 
 @pytest.fixture(scope="module")
@@ -95,6 +97,10 @@ def test_register_custom_workload():
     lambda seed: PoissonWorkload(rate=3.0, seed=seed),
     lambda seed: BurstyWorkload(burst_rate=8.0, base_rate=1.0,
                                 mean_burst=2.0, mean_gap=3.0, seed=seed),
+    lambda seed: DiurnalWorkload(mean_rate=4.0, period=50.0,
+                                 amplitude=0.7, seed=seed),
+    lambda seed: RampWorkload(start_rate=1.0, end_rate=8.0,
+                              ramp_time=30.0, seed=seed),
 ])
 def test_open_loop_generators_seeded_deterministic(wl_factory):
     a = wl_factory(7).inter_arrivals(500)
@@ -139,6 +145,81 @@ def test_bursty_pure_onoff_has_silent_gaps():
     # in-burst mean (0.02)
     assert gaps.max() > 1.0
     assert np.median(gaps) < 0.1
+
+
+@given(st.floats(1.0, 20.0), st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_diurnal_long_run_mean_rate(mean_rate, seed):
+    """Over whole cycles the sinusoid integrates out: the long-run rate
+    is ``mean_rate`` regardless of amplitude/phase."""
+    wl = DiurnalWorkload(mean_rate=mean_rate, period=20.0 / mean_rate,
+                         amplitude=0.8, phase=1.3, seed=seed)
+    gaps = wl.inter_arrivals(5000)
+    assert np.all(gaps >= 0)
+    assert 1.0 / gaps.mean() == pytest.approx(mean_rate, rel=0.12)
+
+
+def test_diurnal_peak_vs_trough_density():
+    """Arrivals crowd the sinusoid's peak quarter-cycle and thin out in
+    the trough — the day/night swing routers must ride."""
+    period = 100.0
+    wl = DiurnalWorkload(mean_rate=5.0, period=period, amplitude=0.8,
+                         seed=3)
+    t = np.cumsum(wl.inter_arrivals(6000))
+    phase = t % period
+    peak = np.sum((phase > 15) & (phase < 35))      # sin max at t=25
+    trough = np.sum((phase > 65) & (phase < 85))    # sin min at t=75
+    # rate ratio at amplitude 0.8 is (1.8 / 0.2) = 9; demand a wide gap
+    assert peak > 3 * trough
+
+
+def test_diurnal_validation():
+    with pytest.raises(ValueError, match="amplitude"):
+        DiurnalWorkload(mean_rate=1.0, period=10.0, amplitude=1.0)
+    with pytest.raises(ValueError, match="mean_rate"):
+        DiurnalWorkload(mean_rate=0.0, period=10.0)
+    with pytest.raises(ValueError, match="period"):
+        DiurnalWorkload(mean_rate=1.0, period=0.0)
+
+
+@given(st.floats(2.0, 20.0), st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_ramp_settles_at_end_rate(end_rate, seed):
+    wl = RampWorkload(start_rate=end_rate / 4, end_rate=end_rate,
+                      ramp_time=10.0, seed=seed)
+    t = np.cumsum(wl.inter_arrivals(4000))
+    tail = t[t > 10.0]          # post-ramp: homogeneous at end_rate
+    assert len(tail) > 100
+    observed = (len(tail) - 1) / (tail[-1] - tail[0])
+    assert observed == pytest.approx(end_rate, rel=0.15)
+
+
+def test_ramp_density_increases_during_ramp_up():
+    wl = RampWorkload(start_rate=1.0, end_rate=10.0, ramp_time=60.0,
+                      seed=5)
+    t = np.cumsum(wl.inter_arrivals(4000))
+    early = np.sum(t < 15.0)                  # mean rate ~2.1
+    late = np.sum((t > 45.0) & (t < 60.0))    # mean rate ~8.9
+    assert late > 2 * early
+    with pytest.raises(ValueError, match="ramp_time"):
+        RampWorkload(start_rate=1.0, end_rate=2.0, ramp_time=0.0)
+    with pytest.raises(ValueError, match="at least one"):
+        RampWorkload(start_rate=0.0, end_rate=0.0, ramp_time=1.0)
+
+
+def test_diurnal_and_ramp_drive_the_simulator(db):
+    """The new generators plug into the same run loop: queueing
+    decomposition holds and the workload name lands on the trace."""
+    for name, kw in (("diurnal", dict(mean_rate=0.02, period=5000.0,
+                                      amplitude=0.6, seed=1)),
+                     ("ramp", dict(start_rate=0.002, end_rate=0.02,
+                                   ramp_time=5000.0, seed=1))):
+        r = simulate(db, 4, scheduler="odin", num_queries=300,
+                     freq_period=50, duration=25, seed=1,
+                     workload=name, workload_kwargs=kw)
+        assert r.workload == name
+        assert np.allclose(r.latencies,
+                           r.queue_delays + r.service_latencies)
 
 
 def test_trace_workload_replays_and_cycles():
@@ -278,6 +359,74 @@ def test_paper_heavy_overlap_setting_is_deterministic(db):
                 assert scen[ep] == best
             else:
                 assert scen[ep] == 0
+
+
+# ---------------------------------------------------------------------------
+# time-indexed (wall-clock anchored) interference windows
+# ---------------------------------------------------------------------------
+
+
+def test_event_timeline_time_indexed_edges():
+    evs = [InterferenceEvent(start=2.5, duration=5.0, ep=0, scenario=3)]
+    tl = EventTimeline(evs, num_eps=2, time_indexed=True)
+    assert tl.scenarios_at(0.0) == [0, 0]
+    assert tl.scenarios_at(2.5) == [3, 0]
+    assert tl.scenarios_at(7.4999) == [3, 0]
+    assert tl.scenarios_at(7.5) == [0, 0]
+    assert tl.next_change(0.0) == 2.5
+    assert tl.next_change(2.5) == 7.5
+    assert tl.next_change(7.5) == float("inf")
+
+
+def test_events_for_replica_selects_scoped_and_fleet_wide():
+    from repro.core import events_for_replica
+    evs = [InterferenceEvent(start=0, duration=10, ep=0, scenario=1,
+                             replica=2),
+           InterferenceEvent(start=5, duration=10, ep=1, scenario=2),
+           InterferenceEvent(start=8, duration=10, ep=2, scenario=3,
+                             replica=0)]
+    assert events_for_replica(evs, 2) == [evs[0], evs[1]]
+    assert events_for_replica(evs, 0) == [evs[1], evs[2]]
+    assert events_for_replica(evs, 1) == [evs[1]]
+
+
+def test_time_indexed_events_anchor_on_arrival_clock(db):
+    """A wall-clock event window hits exactly the queries whose
+    arrivals fall inside it — however many that happens to be."""
+    cap = simulate(db, 4, scheduler="none", events=[],
+                   num_queries=10).peak_throughput
+    wl = dict(rate=0.5 * cap, seed=3)
+    kw = dict(num_queries=300, workload="poisson", workload_kwargs=wl)
+    base = simulate(db, 4, scheduler="none", events=[], **kw)
+    t0, t1 = 10000.0, 25000.0
+    evs = [InterferenceEvent(start=t0, duration=t1 - t0, ep=1,
+                             scenario=12)]
+    r = simulate(db, 4, scheduler="none", events=evs,
+                 events_time_indexed=True, **kw)
+    # exogenous arrivals: identical clocks in both runs
+    assert np.array_equal(r.arrival_times, base.arrival_times)
+    in_win = (r.arrival_times >= t0) & (r.arrival_times < t1)
+    assert 0 < in_win.sum() < len(in_win)
+    # scenario 12 (max membw stressor) slows EP1's stage past the
+    # bottleneck: every in-window query is served slower, no other is
+    assert np.all(r.service_latencies[in_win]
+                  > base.service_latencies[in_win])
+    assert np.array_equal(r.service_latencies[~in_win],
+                          base.service_latencies[~in_win])
+    # the chunked fast path takes the same time-indexed segments
+    r_scalar = simulate(db, 4, scheduler="none", events=evs,
+                        events_time_indexed=True, chunking=False, **kw)
+    assert np.allclose(r.latencies, r_scalar.latencies, rtol=1e-9)
+
+
+def test_time_indexed_events_reject_closed_loop_and_default_events(db):
+    evs = [InterferenceEvent(start=0.0, duration=10.0, ep=0, scenario=1)]
+    with pytest.raises(ValueError, match="open-loop"):
+        simulate(db, 4, scheduler="none", events=evs,
+                 events_time_indexed=True, num_queries=10)
+    with pytest.raises(ValueError, match="explicit"):
+        simulate(db, 4, scheduler="none", events=None,
+                 events_time_indexed=True, num_queries=10)
 
 
 # ---------------------------------------------------------------------------
