@@ -1,0 +1,149 @@
+"""Bench-regression gate: diff BENCH_runner.json against the baseline.
+
+``benchmarks/runner_bench.py`` measures the batch-granular fast path
+(scalar-vs-chunked speedup per row, plus the 1M-query vectorized-ledger
+scale row) and writes ``results/benchmarks/BENCH_runner.json``.  This
+script compares that fresh report against the committed baseline under
+``benchmarks/baselines/`` and fails when the perf trajectory regresses:
+
+* the gate row's (``steady_none``) chunked speedup — a ratio of two
+  wall times on the *same* machine, so it transfers across hosts — may
+  not drop more than ``REPRO_BENCH_TOLERANCE`` (default 30%) below the
+  baseline's;
+* the scale row's *relative throughput* — its queries/s divided by the
+  same run's steady-row chunked queries/s, so host speed cancels and
+  the number survives the dev-machine -> CI-runner hop — may not drop
+  more than the same tolerance.  Raw qps for both runs is carried in
+  the diff for eyeballing but never gated (two different hosts differ
+  by far more than any real regression).
+
+The full diff is always written to ``results/benchmarks/bench_diff.json``
+so CI uploads it with the other artifacts.
+
+    PYTHONPATH=src python -m benchmarks.compare_bench
+
+Environment:
+    REPRO_BENCH_BASELINE     baseline report path
+                             (default benchmarks/baselines/BENCH_runner.json)
+    REPRO_BENCH_CURRENT      fresh report path
+                             (default results/benchmarks/BENCH_runner.json)
+    REPRO_BENCH_TOLERANCE    allowed fractional regression (default 0.30)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR
+
+BASELINE = os.environ.get(
+    "REPRO_BENCH_BASELINE", "benchmarks/baselines/BENCH_runner.json"
+)
+CURRENT = os.environ.get(
+    "REPRO_BENCH_CURRENT", os.path.join(RESULTS_DIR, "BENCH_runner.json")
+)
+TOLERANCE = float(os.environ.get("REPRO_BENCH_TOLERANCE", "0.30"))
+
+
+def _row(report: dict, name: str) -> dict:
+    for row in report.get("rows", []):
+        if row.get("row") == name:
+            return row
+    raise KeyError(f"report has no row {name!r}")
+
+
+def compare(baseline: dict, current: dict, tolerance: float) -> list:
+    """One diff entry per gated metric; ``ok=False`` marks a regression."""
+    gate_row = baseline.get("gate", {}).get("row", "steady_none")
+    diffs = []
+
+    base_speedup = float(_row(baseline, gate_row)["speedup"])
+    cur_speedup = float(_row(current, gate_row)["speedup"])
+    diffs.append(
+        {
+            "metric": f"{gate_row}.speedup",
+            "baseline": base_speedup,
+            "current": cur_speedup,
+            "ratio": cur_speedup / base_speedup,
+            "ok": cur_speedup >= (1.0 - tolerance) * base_speedup,
+        }
+    )
+
+    base_scale = baseline.get("scale")
+    cur_scale = current.get("scale")
+    if base_scale and cur_scale:
+        # Normalize by each run's own steady-row throughput: the ratio
+        # measures the ledger's per-query cost relative to the chunked
+        # simulator on the same host, so it transfers across machines.
+        base_rel = float(base_scale["chunked_qps"]) / float(
+            _row(baseline, gate_row)["chunked_qps"]
+        )
+        cur_rel = float(cur_scale["chunked_qps"]) / float(
+            _row(current, gate_row)["chunked_qps"]
+        )
+        diffs.append(
+            {
+                "metric": "scale_ledger.relative_qps",
+                "baseline": base_rel,
+                "current": cur_rel,
+                "ratio": cur_rel / base_rel,
+                "ok": cur_rel >= (1.0 - tolerance) * base_rel,
+                "baseline_raw_qps": float(base_scale["chunked_qps"]),
+                "current_raw_qps": float(cur_scale["chunked_qps"]),
+            }
+        )
+    elif base_scale and not cur_scale:
+        diffs.append(
+            {
+                "metric": "scale_ledger.relative_qps",
+                "baseline": float(base_scale["chunked_qps"]),
+                "current": None,
+                "ratio": None,
+                "ok": False,
+            }
+        )
+    return diffs
+
+
+def main() -> int:
+    with open(BASELINE) as f:
+        baseline = json.load(f)
+    with open(CURRENT) as f:
+        current = json.load(f)
+
+    diffs = compare(baseline, current, TOLERANCE)
+    report = {
+        "schema": 1,
+        "baseline_path": BASELINE,
+        "current_path": CURRENT,
+        "tolerance": TOLERANCE,
+        "diffs": diffs,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out = os.path.join(RESULTS_DIR, "bench_diff.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    failed = []
+    for d in diffs:
+        cur = "missing" if d["current"] is None else f"{d['current']:.2f}"
+        ratio = "" if d["ratio"] is None else f"  ({d['ratio']:.2f}x baseline)"
+        print(
+            f"{d['metric']:26s} baseline {d['baseline']:9.2f}  "
+            f"current {cur:>9s}{ratio}  {'OK' if d['ok'] else 'REGRESSED'}"
+        )
+        if not d["ok"]:
+            failed.append(d["metric"])
+    if failed:
+        print(
+            f"compare_bench FAILED (>{TOLERANCE:.0%} regression): "
+            + ", ".join(failed)
+        )
+        return 1
+    print(f"compare_bench OK -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

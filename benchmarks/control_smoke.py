@@ -1,0 +1,205 @@
+"""CI control-plane smoke: overload survives only with the control plane.
+
+Drives a bursty overload (offered load well above capacity during
+bursts) through the admission-control registry on two surfaces and
+gates that SLO-aware shedding does what docs/CONTROL.md promises:
+
+* **single pipeline** (``simulate``): admission ``none`` lets the
+  arrival queue grow without bound and p99 blows through the SLO;
+  ``slo_shed`` must hold p99-of-admitted within the SLO; ``queue_cap``
+  is reported for comparison (bounded queue, but SLO-blind).
+* **4-replica fleet** (``simulate_cluster``): the same overload with
+  the paper's heaviest interference setting (freq=2, dur=100) scoped
+  to replica 2, ``odin`` rebalancing per replica, and ``load_profile``
+  autoscaling sizing the active set.  ``slo_shed`` must again hold
+  p99-of-admitted within the (small-margin) SLO where ``none``
+  violates it, and the autoscaler must actually move the active set.
+
+All rows land in ``results/benchmarks/control_smoke.csv`` for the CI
+artifact upload.
+
+    REPRO_CONTROL_QUERIES=4000 PYTHONPATH=src python -m benchmarks.control_smoke
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import math
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR, db_for
+from repro.cluster import simulate_cluster
+from repro.core import generate_events, simulate
+
+NUM_QUERIES = int(os.environ.get("REPRO_CONTROL_QUERIES", "4000"))
+NUM_EPS = 4
+NUM_REPLICAS = 4
+VICTIM = 2
+#: Latency objective, in multiples of the steady pipelined service
+#: latency: one service plus a two-service queueing budget.
+SLO_SERVICES = 3.0
+#: Fleet gate headroom: replica-scoped interference can begin between
+#: an admission decision and the query's execution, so a small tail of
+#: admitted queries may land past the SLO (docs/CONTROL.md).
+FLEET_P99_MARGIN = 1.05
+
+
+def trace_row(scope: str, admission: str, autoscaler: str, trace) -> dict:
+    s = trace.summary()
+    row = {
+        "scope": scope,
+        "admission": admission,
+        "autoscaler": autoscaler,
+        "num_queries": NUM_QUERIES,
+        "slo": s["slo_latency_s"],
+        "p99_latency": s["p99_latency_s"],
+        "mean_queue_delay": s["mean_queue_delay_s"],
+        "shed_rate": s["shed_rate"],
+        "slo_attainment": s["slo_attainment"],
+        "goodput_qps": s["goodput_qps"],
+        "offered_load": s["offered_load_qps"],
+        "achieved_load": s["achieved_load_qps"],
+        "mean_active_replicas": s.get("mean_active_replicas", 1.0),
+    }
+    return row
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    probe = simulate(db, NUM_EPS, scheduler="none", events=[], num_queries=10)
+    cap = probe.peak_throughput
+    service = float(probe.service_latencies[-1])
+    slo = SLO_SERVICES * service
+    workload_kwargs = dict(
+        burst_rate=3.0 * cap,
+        base_rate=0.5 * cap,
+        mean_burst=2000.0 / cap,
+        mean_gap=1000.0 / cap,
+        seed=7,
+    )
+
+    rows, p99, attain = [], {}, {}
+    # -- single pipeline: none vs queue_cap vs slo_shed -------------------
+    for admission, admission_kwargs in (
+        ("none", {}),
+        ("queue_cap", dict(cap=8)),
+        ("slo_shed", dict(slo=slo)),
+    ):
+        t = simulate(
+            db,
+            NUM_EPS,
+            scheduler="none",
+            events=[],
+            num_queries=NUM_QUERIES,
+            workload="bursty",
+            workload_kwargs=workload_kwargs,
+            admission=admission,
+            admission_kwargs=admission_kwargs,
+        )
+        p99[admission] = t.tail_latency(99)
+        attain[admission] = t.slo_attainment
+        rows.append(trace_row("pipeline", admission, "static", t))
+        print(
+            f"pipeline {admission:10s} p99 {p99[admission]:10.2f}  "
+            f"shed {t.shed_rate:5.1%}  "
+            f"attainment(slo={slo:.0f}) "
+            f"{float((t.latencies <= slo).mean()):.3f}"
+        )
+
+    # -- 4-replica fleet: interference + autoscaling -----------------------
+    fleet_events = [
+        dataclasses.replace(ev, replica=VICTIM)
+        for ev in generate_events(
+            NUM_QUERIES // NUM_REPLICAS, NUM_EPS, db.num_scenarios, 2, 100, 5
+        )
+    ]
+    # Burst/gap lengths give the run several ON/OFF cycles, so the
+    # autoscaler sees both regimes: overload bursts that need the whole
+    # fleet and quiet phases where ~half of it suffices.
+    fleet_wl = dict(
+        burst_rate=2.0 * NUM_REPLICAS * cap,
+        base_rate=0.375 * NUM_REPLICAS * cap,
+        mean_burst=80.0 / cap,
+        mean_gap=250.0 / cap,
+        seed=6,
+    )
+    fleet_p99, fleet_active = {}, {}
+    for admission, admission_kwargs, autoscaler in (
+        ("none", {}, None),
+        ("slo_shed", dict(slo=slo), "load_profile"),
+    ):
+        ct = simulate_cluster(
+            db,
+            NUM_EPS,
+            NUM_REPLICAS,
+            scheduler="odin",
+            alpha=10,
+            num_queries=NUM_QUERIES,
+            events=fleet_events,
+            router="odin_aware",
+            workload="bursty",
+            workload_kwargs=fleet_wl,
+            admission=admission,
+            admission_kwargs=admission_kwargs,
+            autoscaler=autoscaler,
+        )
+        fleet = ct.fleet
+        fleet_p99[admission] = fleet.tail_latency(99)
+        fleet_active[admission] = ct.summary()["mean_active_replicas"]
+        rows.append(trace_row("fleet", admission, autoscaler or "static", fleet))
+        rows[-1]["mean_active_replicas"] = fleet_active[admission]
+        print(
+            f"fleet    {admission:10s} p99 {fleet_p99[admission]:10.2f}  "
+            f"shed {ct.shed_rate:5.1%}  "
+            f"mean active {fleet_active[admission]:.2f}  "
+            f"attainment(slo={slo:.0f}) "
+            f"{float((fleet.latencies <= slo).mean()):.3f}"
+        )
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "control_smoke.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+    failed = []
+    if not all(
+        math.isfinite(r["p99_latency"]) and math.isfinite(r["goodput_qps"])
+        for r in rows
+    ):
+        failed.append("non-finite metrics in rows")
+    if p99["none"] <= slo:
+        failed.append(
+            f"pipeline none p99 {p99['none']:.2f} <= slo {slo:.2f} "
+            f"(overload too light to gate on)"
+        )
+    if p99["slo_shed"] > slo:
+        failed.append(
+            f"pipeline slo_shed p99-of-admitted {p99['slo_shed']:.2f} "
+            f"> slo {slo:.2f}"
+        )
+    if attain["slo_shed"] < 0.999:
+        failed.append(f"pipeline slo_shed attainment {attain['slo_shed']:.4f} < 0.999")
+    if fleet_p99["none"] <= slo:
+        failed.append(f"fleet none p99 {fleet_p99['none']:.2f} <= slo {slo:.2f}")
+    if fleet_p99["slo_shed"] > FLEET_P99_MARGIN * slo:
+        failed.append(
+            f"fleet slo_shed p99-of-admitted {fleet_p99['slo_shed']:.2f} "
+            f"> {FLEET_P99_MARGIN} * slo {slo:.2f}"
+        )
+    if not fleet_active["slo_shed"] < NUM_REPLICAS:
+        failed.append(
+            f"load_profile autoscaler never drained a replica "
+            f"(mean active {fleet_active['slo_shed']:.2f})"
+        )
+    if failed:
+        print("control_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"control_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

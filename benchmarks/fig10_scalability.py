@@ -1,7 +1,6 @@
 """Fig. 10: scalability — ResNet152 (52 residual-block units), 4..52 EPs."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import simulate, synthetic_database
 from benchmarks.common import write_csv

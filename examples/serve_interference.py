@@ -61,13 +61,15 @@ for sched in ("odin", "lls", "hybrid", "none"):
     print(f"\n{sched.upper():5s}  wall={wall:.1f}s")
     print(f"  mean latency  : {s['mean_latency_s'] * 1e3:7.2f} ms")
     print(f"  p99 latency   : {s['p99_latency_s'] * 1e3:7.2f} ms")
-    print(f"  throughput    : {s['mean_throughput_qps']:7.1f} q/s (pipeline capability)")
+    print(f"  throughput    : {s['mean_throughput_qps']:7.1f} q/s "
+          "(pipeline capability)")
     print(f"  rebalances    : {s['rebalances']}  "
           f"(serial fraction {100 * s['serial_frac']:.0f}%)")
     print(f"  final config  : {m.configs[-1]}")
 
 odin, lls = results["odin"], results["lls"]
-print(f"\nODIN vs LLS: {100 * (1 - odin['mean_latency_s'] / lls['mean_latency_s']):+.1f}% "
+odin_vs_lls = 100 * (1 - odin['mean_latency_s'] / lls['mean_latency_s'])
+print(f"\nODIN vs LLS: {odin_vs_lls:+.1f}% "
       f"mean latency, "
       f"{100 * (odin['mean_throughput_qps'] / lls['mean_throughput_qps'] - 1):+.1f}% "
       f"throughput")
@@ -121,7 +123,7 @@ m1, m8 = batched[1], batched[8]
 acct_match = (m8.num_rebalances == m1.num_rebalances
               and m8.total_trials == m1.total_trials
               and m8.configs_trace == m1.configs_trace)
-print(f"\nBatching (max_batch=8 vs 1) at the same offered load:")
+print("\nBatching (max_batch=8 vs 1) at the same offered load:")
 print(f"  mean queue delay: {m1.mean_queue_delay * 1e3:.2f} -> "
       f"{m8.mean_queue_delay * 1e3:.2f} ms "
       f"({m1.mean_queue_delay / max(m8.mean_queue_delay, 1e-12):.1f}x lower)")

@@ -85,6 +85,14 @@ class ReplicaView:
         the replica's committed config; NaN before any poll."""
         return self._runner.runtime.estimated_bottleneck()
 
+    @property
+    def est_latency(self) -> float:
+        """Estimated end-to-end (pipelined) latency of one query on
+        the replica's committed config; NaN before any poll.  What
+        fleet-level admission policies compare against an SLO
+        (docs/CONTROL.md)."""
+        return self._runner.runtime.estimated_service_latency()
+
 
 @runtime_checkable
 class Router(Protocol):
@@ -92,10 +100,13 @@ class Router(Protocol):
 
     def route(self, q: int, now: float,
               views: Sequence[ReplicaView]) -> int:
-        """Replica index for fleet query ``q`` arriving at ``now``.
+        """Position into ``views`` for fleet query ``q`` at ``now``.
 
         Must be deterministic given the router's state and the views,
-        and must return an index in ``range(len(views))``.
+        and must return a position in ``range(len(views))``.  The
+        views may cover only the fleet's *active* subset (autoscaling,
+        docs/CONTROL.md); the cluster resolves the position to a fleet
+        replica via ``views[pos].index``.
         """
         ...
 

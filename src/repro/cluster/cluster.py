@@ -22,13 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.cluster.base import ReplicaView, Router
 from repro.cluster.registry import resolve_router
 from repro.cluster.trace import ClusterTrace
+from repro.control.base import AdmissionView
+from repro.control.registry import resolve_admission, resolve_autoscaler
 from repro.schedulers.runtime import RebalanceRuntime
 from repro.workloads.base import QueryExecutor, Workload
 from repro.workloads.runner import PipelineRunner, resolve_arrivals
@@ -56,17 +58,53 @@ class Replica:
 
 
 class Cluster:
-    """N replicas + one router; reusable across serving windows."""
+    """N replicas + one router; reusable across serving windows.
+
+    The SLO control plane (``repro.control``, docs/CONTROL.md) hooks in
+    at the fleet level: an ``admission`` policy may shed an arrival
+    *after* routing (the decision sees the chosen replica's predicted
+    wait and service estimate — if the best replica cannot meet the
+    SLO, nobody can), and an ``autoscaler`` decides per arrival which
+    replicas are active — the router only ever sees the active subset,
+    so a drained replica simply stops receiving work and finishes its
+    backlog.  Defaults (no admission policy, no autoscaler) leave the
+    fleet loop bit-identical to the pre-control-plane cluster.
+
+    Note: ``adaptive_batch`` has no effect at the fleet level — cluster
+    replicas are driven one query per routing decision (the scalar
+    tick), so there is no batch bound to steer; per-replica adaptive
+    batching inside cluster runs is a ROADMAP follow-up.
+    """
 
     def __init__(self, replicas: Sequence[Replica],
                  router: Union[str, Router, None] = "round_robin",
-                 router_kwargs: Optional[dict] = None):
+                 router_kwargs: Optional[dict] = None,
+                 admission: Union[str, object, None] = None,
+                 admission_kwargs: Optional[dict] = None,
+                 autoscaler: Union[str, object, None] = None,
+                 autoscaler_kwargs: Optional[dict] = None):
         if len(replicas) < 1:
             raise ValueError("a cluster needs at least one replica")
         self.replicas = list(replicas)
         self.router = resolve_router(router, router_kwargs)
         self.router_name = getattr(self.router, "name",
                                    type(self.router).__name__)
+        self.admission = resolve_admission(admission, admission_kwargs)
+        self.admission_name = ("none" if self.admission is None
+                               else getattr(self.admission, "name",
+                                            type(self.admission).__name__))
+        # None = autoscaling disabled (all replicas always active) —
+        # same behaviour as the "static" built-in, without threading a
+        # policy object through the fleet loop at all.
+        if autoscaler is None and autoscaler_kwargs:
+            raise ValueError("autoscaler_kwargs given but no autoscaler "
+                             "selected")
+        self.autoscaler = (None if autoscaler is None
+                           else resolve_autoscaler(autoscaler,
+                                                   autoscaler_kwargs))
+        self.autoscaler_name = ("static" if self.autoscaler is None
+                                else getattr(self.autoscaler, "name",
+                                             type(self.autoscaler).__name__))
 
     def run(self, num_queries: int,
             workload: Union[str, Workload, None] = "closed",
@@ -95,8 +133,22 @@ class Cluster:
         # (monotone) decision clock to count in-system queries.
         outstanding: List[List[float]] = [[] for _ in self.replicas]
         last_assign = [-1] * len(self.replicas)
-        assignments = np.empty(num_queries, dtype=int)
-        local_indices = np.empty(num_queries, dtype=int)
+        # Shed queries keep the sentinel -1 (admission control).
+        assignments = np.full(num_queries, -1, dtype=int)
+        local_indices = np.full(num_queries, -1, dtype=int)
+
+        adm = self.admission
+        shed_check = (adm is not None
+                      and not getattr(adm, "admits_all", False))
+        observe = getattr(adm, "observe", None) if adm is not None else None
+        if adm is not None:
+            adm.reset()
+        scaler = self.autoscaler
+        if scaler is not None:
+            scaler.reset()
+        shed_arrivals: List[float] = []
+        active_timeline: List[Tuple[int, Tuple[int, ...]]] = []
+        cur_active: Optional[List[int]] = None
 
         for i in range(num_queries):
             if arrivals is not None:
@@ -104,7 +156,13 @@ class Cluster:
                 now = arrival
             else:
                 arrival = None
-                now = min(r.free_at for r in runners)
+                # The closed-loop decision clock advances with the
+                # serving fleet: drained replicas (autoscaling) sit at
+                # a stale free_at and must not hold it back.
+                now = min(runners[r].free_at
+                          for r in (cur_active
+                                    if cur_active is not None
+                                    else range(len(runners))))
             views = []
             for ridx, (runner, heap) in enumerate(zip(runners,
                                                       outstanding)):
@@ -114,11 +172,40 @@ class Cluster:
                          else float("inf"))
                 views.append(ReplicaView(ridx, runner, len(heap), now,
                                          since_assign=since))
-            r = int(self.router.route(i, now, views))
-            if not 0 <= r < len(runners):
+            if scaler is not None:
+                active = sorted(set(int(r) for r in
+                                    scaler.active(i, now, views)))
+                if not active or not all(0 <= r < len(runners)
+                                         for r in active):
+                    raise ValueError(
+                        f"autoscaler {self.autoscaler_name!r} returned "
+                        f"active set {active} for a fleet of "
+                        f"{len(runners)}")
+                if active != cur_active:
+                    cur_active = active
+                    active_timeline.append((i, tuple(active)))
+                routed_views = [views[r] for r in active]
+            else:
+                routed_views = views
+            pos = int(self.router.route(i, now, routed_views))
+            if not 0 <= pos < len(routed_views):
                 raise ValueError(f"router {self.router_name!r} returned "
-                                 f"replica {r} for a fleet of "
-                                 f"{len(runners)}")
+                                 f"position {pos} for "
+                                 f"{len(routed_views)} active replicas")
+            r = routed_views[pos].index
+            if shed_check:
+                # Fleet-level shedding sees the *routed* replica: the
+                # router already picked the cheapest dispatch, so if
+                # that one cannot meet the SLO, nobody can.
+                v = views[r]
+                view = AdmissionView(
+                    query=i, arrival=arrival,
+                    wait=0.0 if arrival is None else v.backlog,
+                    est_service=v.est_bottleneck,
+                    est_latency=v.est_latency)
+                if not adm.admit(view):
+                    shed_arrivals.append(now)
+                    continue
             local = runners[r].num_served
             hook = self.replicas[r].on_assign
             if hook is not None:
@@ -128,6 +215,9 @@ class Cluster:
             last_assign[r] = i
             assignments[i] = r
             local_indices[i] = local
+            if observe is not None:
+                observe(float(runners[r].queue_delay[local]),
+                        float(runners[r].service_lat[local]))
 
         traces = [
             runner.finish(
@@ -138,7 +228,16 @@ class Cluster:
         return ClusterTrace(router=self.router_name, workload=wl_name,
                             scheduler=scheduler_name, replicas=traces,
                             assignments=assignments,
-                            local_indices=local_indices)
+                            local_indices=local_indices,
+                            admission=self.admission_name,
+                            autoscaler=self.autoscaler_name,
+                            slo_latency=float(getattr(adm, "slo",
+                                                      float("inf"))
+                                              if adm is not None
+                                              else float("inf")),
+                            shed_arrivals=np.asarray(shed_arrivals,
+                                                     dtype=float),
+                            active_timeline=active_timeline)
 
 
 def run_cluster(replicas: Sequence[Replica],
@@ -147,9 +246,17 @@ def run_cluster(replicas: Sequence[Replica],
                 workload_kwargs: Optional[dict] = None,
                 router: Union[str, Router, None] = "round_robin",
                 router_kwargs: Optional[dict] = None,
-                scheduler_name: str = "") -> ClusterTrace:
+                scheduler_name: str = "",
+                admission: Union[str, object, None] = None,
+                admission_kwargs: Optional[dict] = None,
+                autoscaler: Union[str, object, None] = None,
+                autoscaler_kwargs: Optional[dict] = None) -> ClusterTrace:
     """Functional driver: build a :class:`Cluster` and serve one window."""
-    cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs)
+    cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs,
+                      admission=admission,
+                      admission_kwargs=admission_kwargs,
+                      autoscaler=autoscaler,
+                      autoscaler_kwargs=autoscaler_kwargs)
     return cluster.run(num_queries, workload=workload,
                        workload_kwargs=workload_kwargs,
                        scheduler_name=scheduler_name)

@@ -36,7 +36,11 @@ def serve_cluster(engines: Sequence,
                   workload: Union[str, Workload, None] = "closed",
                   workload_kwargs: Optional[dict] = None,
                   router: Union[str, object, None] = "round_robin",
-                  router_kwargs: Optional[dict] = None) -> ClusterTrace:
+                  router_kwargs: Optional[dict] = None,
+                  admission: Union[str, object, None] = None,
+                  admission_kwargs: Optional[dict] = None,
+                  autoscaler: Union[str, object, None] = None,
+                  autoscaler_kwargs: Optional[dict] = None) -> ClusterTrace:
     """Serve fleet ``queries`` through N live engines behind a router.
 
     ``engines`` — one :class:`~repro.serving.ServingEngine` per
@@ -46,6 +50,11 @@ def serve_cluster(engines: Sequence,
     per-replica peak references are stamped from each engine's online
     clean estimates after the run (NaN for replicas that never served
     a query).
+
+    ``admission`` / ``autoscaler`` select the SLO control plane
+    (:mod:`repro.control`, docs/CONTROL.md), identically to
+    :func:`~repro.cluster.simulate_cluster` — SLOs are in wall-clock
+    seconds here.  Shed queries never touch an engine.
     """
     if len(engines) < 1:
         raise ValueError("serve_cluster needs at least one engine")
@@ -69,7 +78,11 @@ def serve_cluster(engines: Sequence,
     trace = run_cluster(replicas, len(queries), workload=workload,
                         workload_kwargs=workload_kwargs, router=router,
                         router_kwargs=router_kwargs,
-                        scheduler_name=getattr(engines[0], "scheduler", ""))
+                        scheduler_name=getattr(engines[0], "scheduler", ""),
+                        admission=admission,
+                        admission_kwargs=admission_kwargs,
+                        autoscaler=autoscaler,
+                        autoscaler_kwargs=autoscaler_kwargs)
     # Peak references only exist after measurement — stamp post-hoc,
     # exactly like ServingEngine.serve does for a single pipeline.
     for rep_trace, eng in zip(trace.replicas, engines):

@@ -4,6 +4,13 @@ All three are deterministic (ties break toward the lowest replica
 index) so per-replica assignment sequences are reproducible from
 ``(workload, seed, router)`` — see ``tests/test_cluster.py``.
 
+Routers return a *position* into the views they were handed, not a
+fleet replica index: with an :class:`~repro.control.Autoscaler` active
+the views cover only the active subset of the fleet (docs/CONTROL.md),
+and the cluster maps the position back through ``views[pos].index``.
+Without an autoscaler the views span the whole fleet in index order,
+so position and index coincide.
+
 * ``round_robin`` — classic stateful cycle; the fleet baseline every
   serving system starts from.  Blind to replica state, so a degraded
   replica keeps receiving its 1/N share.
@@ -51,11 +58,11 @@ class LeastOutstandingRouter:
 
     def route(self, q: int, now: float,
               views: Sequence[ReplicaView]) -> int:
-        best = views[0]
-        for v in views[1:]:
-            if v.outstanding < best.outstanding:
-                best = v
-        return best.index
+        best = 0
+        for p in range(1, len(views)):
+            if views[p].outstanding < views[best].outstanding:
+                best = p
+        return best
 
     def reset(self) -> None:
         pass
@@ -114,14 +121,16 @@ class OdinAwareRouter:
     def route(self, q: int, now: float,
               views: Sequence[ReplicaView]) -> int:
         if self.probe_interval > 0:
-            stalest = max(views, key=lambda v: (v.since_assign, -v.index))
-            if stalest.since_assign > self.probe_interval:
-                return stalest.index
-        best, best_cost = views[0].index, self._cost(views[0])
-        for v in views[1:]:
-            c = self._cost(v)
+            stalest = max(range(len(views)),
+                          key=lambda p: (views[p].since_assign,
+                                         -views[p].index))
+            if views[stalest].since_assign > self.probe_interval:
+                return stalest
+        best, best_cost = 0, self._cost(views[0])
+        for p in range(1, len(views)):
+            c = self._cost(views[p])
             if c < best_cost:
-                best, best_cost = v.index, c
+                best, best_cost = p, c
         return best
 
     def _cost(self, v: ReplicaView) -> float:

@@ -46,7 +46,12 @@ def simulate_cluster(db: LayerDatabase,
                      workload: Union[str, Workload, None] = "closed",
                      workload_kwargs: Optional[dict] = None,
                      events_time_indexed: bool = False,
-                     router_kwargs: Optional[dict] = None) -> ClusterTrace:
+                     router_kwargs: Optional[dict] = None,
+                     admission: Union[str, object, None] = None,
+                     admission_kwargs: Optional[dict] = None,
+                     autoscaler: Union[str, object, None] = None,
+                     autoscaler_kwargs: Optional[dict] = None
+                     ) -> ClusterTrace:
     """Run one (scheduler, router, workload, events) fleet simulation.
 
     ``events`` is the *fleet* event list: each
@@ -59,6 +64,14 @@ def simulate_cluster(db: LayerDatabase,
     and its peak throughput are computed once and stamped on every
     replica, exactly as :func:`~repro.core.simulator.simulate` does for
     a single pipeline.
+
+    ``admission`` / ``autoscaler`` select the fleet's SLO control plane
+    (:mod:`repro.control`, docs/CONTROL.md): e.g.
+    ``admission="slo_shed", admission_kwargs={"slo": ...}`` sheds
+    arrivals no replica could serve within the SLO, and
+    ``autoscaler="load_profile"`` activates/drains replicas off the
+    rolling offered load.  Defaults leave both off (bit-identical to
+    the pre-control-plane fleet).
     """
     if num_replicas < 1:
         raise ValueError("num_replicas must be >= 1")
@@ -121,4 +134,8 @@ def simulate_cluster(db: LayerDatabase,
     return run_cluster(replicas, num_queries, workload=workload,
                        workload_kwargs=workload_kwargs, router=router,
                        router_kwargs=router_kwargs,
-                       scheduler_name=scheduler)
+                       scheduler_name=scheduler,
+                       admission=admission,
+                       admission_kwargs=admission_kwargs,
+                       autoscaler=autoscaler,
+                       autoscaler_kwargs=autoscaler_kwargs)

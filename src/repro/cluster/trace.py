@@ -14,7 +14,7 @@ peak (fleets may be heterogeneous).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,14 +28,34 @@ class ClusterTrace:
     scheduler: str
     #: One finished trace per replica (local query order).
     replicas: List[PipelineTrace]
-    #: Fleet arrival order -> replica index that served the query.
+    #: Fleet arrival order -> replica index that served the query
+    #: (``-1`` = shed by the admission policy; docs/CONTROL.md).
     assignments: np.ndarray
-    #: Fleet arrival order -> index within that replica's trace.
+    #: Fleet arrival order -> index within that replica's trace
+    #: (``-1`` for shed queries).
     local_indices: np.ndarray
+    # -- control plane (repro.control) ---------------------------------------
+    #: Admission policy the fleet was served under.
+    admission: str = "none"
+    #: Autoscaler sizing the active replica set.
+    autoscaler: str = "static"
+    #: Latency objective the admission policy enforced (+inf = none).
+    slo_latency: float = float("inf")
+    #: Fleet arrival times of shed queries.
+    shed_arrivals: Optional[np.ndarray] = None
+    #: Change points of the active replica set: ``(fleet query index,
+    #: active indices)`` — empty when no autoscaler ran (all active).
+    active_timeline: Optional[List[Tuple[int, Tuple[int, ...]]]] = None
 
     def __post_init__(self):
         self.assignments = np.asarray(self.assignments, dtype=int)
         self.local_indices = np.asarray(self.local_indices, dtype=int)
+        if self.shed_arrivals is None:
+            self.shed_arrivals = np.empty(0)
+        else:
+            self.shed_arrivals = np.asarray(self.shed_arrivals, dtype=float)
+        if self.active_timeline is None:
+            self.active_timeline = []
 
     # -- shape ---------------------------------------------------------------
     @property
@@ -44,21 +64,51 @@ class ClusterTrace:
 
     @property
     def num_queries(self) -> int:
+        """All offered fleet arrivals, admitted plus shed."""
         return len(self.assignments)
+
+    @property
+    def admitted_mask(self) -> np.ndarray:
+        """True where the fleet arrival was admitted (served)."""
+        return self.assignments >= 0
+
+    @property
+    def num_admitted(self) -> int:
+        return int(np.count_nonzero(self.admitted_mask))
+
+    @property
+    def num_shed(self) -> int:
+        return len(self.shed_arrivals)
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of offered fleet arrivals that were shed."""
+        return self.num_shed / self.num_queries if self.num_queries else 0.0
+
+    @property
+    def active_counts(self) -> np.ndarray:
+        """Active replicas at each fleet arrival (all, without an
+        autoscaler) — the active-replica timeline as a dense array."""
+        counts = np.full(self.num_queries, self.num_replicas, dtype=int)
+        for start, active in self.active_timeline:
+            counts[start:] = len(active)
+        return counts
 
     @property
     def replica_counts(self) -> np.ndarray:
         """Queries served per replica."""
-        return np.bincount(self.assignments, minlength=self.num_replicas)
+        return np.bincount(self.assignments[self.admitted_mask],
+                           minlength=self.num_replicas)
 
     # -- fleet-order gathers --------------------------------------------------
     def gather(self, field: str) -> np.ndarray:
-        """Per-replica per-query array ``field`` in fleet arrival order."""
+        """Per-replica per-query array ``field`` gathered into fleet
+        arrival order over the *admitted* queries."""
         ref = getattr(self.replicas[0], field)
         out = np.empty(self.num_queries, dtype=np.asarray(ref).dtype)
         for r, t in enumerate(self.replicas):
             out[self.assignments == r] = getattr(t, field)
-        return out
+        return out[self.admitted_mask]
 
     @property
     def fleet(self) -> PipelineTrace:
@@ -75,6 +125,7 @@ class ClusterTrace:
             for pos, cfg in zip(np.flatnonzero(self.assignments == r),
                                 t.configs_trace):
                 configs[pos] = cfg
+        configs = [c for c, ok in zip(configs, self.admitted_mask) if ok]
         rc = None
         if all(t.rc_throughputs is not None for t in self.replicas):
             rc = self.gather("rc_throughputs")
@@ -98,6 +149,9 @@ class ClusterTrace:
             queue_depths=self.gather("queue_depths"),
             peak_throughput=peak,
             rc_throughputs=rc,
+            admission=self.admission,
+            slo_latency=self.slo_latency,
+            shed_arrivals=self.shed_arrivals,
         )
 
     # -- fleet metrics (one metric implementation: PipelineTrace's) ----------
@@ -119,10 +173,10 @@ class ClusterTrace:
         return self.fleet.achieved_load
 
     def slo_violations(self, slo_level: float) -> float:
-        """Fraction of queries with throughput below ``slo_level`` x
-        *their replica's* interference-free peak."""
-        peaks = np.array([t.peak_throughput
-                          for t in self.replicas])[self.assignments]
+        """Fraction of admitted queries with throughput below
+        ``slo_level`` x *their replica's* interference-free peak."""
+        peaks = np.array([t.peak_throughput for t in self.replicas])[
+            self.assignments[self.admitted_mask]]
         return float(np.mean(self.gather("throughputs")
                              < slo_level * peaks))
 
@@ -140,9 +194,17 @@ class ClusterTrace:
         s["num_replicas"] = self.num_replicas
         s["router"] = self.router
         s["min_replica_share"] = (float(self.replica_counts.min())
-                                  / max(self.num_queries, 1))
+                                  / max(self.num_admitted, 1))
         s["max_replica_share"] = (float(self.replica_counts.max())
-                                  / max(self.num_queries, 1))
+                                  / max(self.num_admitted, 1))
+        # -- control plane (docs/CONTROL.md) -----------------------------
+        s["admission"] = self.admission
+        s["autoscaler"] = self.autoscaler
+        s["num_shed"] = float(self.num_shed)
+        s["shed_rate"] = self.shed_rate
+        s["mean_active_replicas"] = (float(self.active_counts.mean())
+                                     if self.num_queries
+                                     else float(self.num_replicas))
         return s
 
     def rows(self) -> List[Dict]:

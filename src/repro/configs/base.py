@@ -203,7 +203,8 @@ def get_config(arch: str) -> ModelConfig:
 
 
 def get_smoke_config(arch: str) -> ModelConfig:
-    """Reduced variant of the same family: ≤2 blocks, d_model ≤ 512, ≤4 experts."""
+    """Reduced variant of the same family: ≤2 blocks, d_model ≤ 512,
+    ≤4 experts."""
     if arch not in _ARCH_MODULES:
         raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
     mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")

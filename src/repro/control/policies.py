@@ -1,0 +1,187 @@
+"""Built-in admission policies: none, queue_cap, slo_shed, adaptive_batch.
+
+All decisions are pure functions of the :class:`AdmissionView` and the
+policy's own (deterministic) state, so a run is reproducible from
+``(workload, seed, scheduler, admission)`` alone.
+
+* ``none`` — admit everything; declared ``admits_all`` so the run loop
+  skips the admission checks entirely and closed-loop traces stay
+  bit-identical to a run with no control plane at all.
+* ``queue_cap`` — classic bounded-queue shedding: shed when the
+  predicted backlog (in queries) has reached ``cap``.  The blunt
+  baseline every serving system ships first.
+* ``slo_shed`` — SLO-aware shedding (InferLine-style): shed when the
+  predicted queueing delay plus the runtime's estimated end-to-end
+  service latency would already breach the latency objective.  A query
+  that cannot meet its SLO only delays the ones behind it.
+* ``adaptive_batch`` — never sheds; instead shrinks the run loop's
+  batch/chunk bound as the observed p99 queueing delay approaches the
+  SLO and grows it back while the tail is comfortable (batching
+  amortizes dispatch overhead but adds head-of-line wait under load).
+
+Closed loops never shed under ``queue_cap`` / ``slo_shed``: the
+predicted wait is zero by construction, so every decision reduces to
+"is one service beat within the objective" — true for any feasible SLO
+(tests/test_control.py pins the bit-identity with ``none``).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+
+import numpy as np
+
+from repro.control.base import AdmissionView
+from repro.control.registry import register_admission
+
+
+@register_admission("none")
+class AdmitAll:
+    """Admit every arrival (the default; control plane disabled)."""
+
+    admits_all = True
+
+    def admit(self, view: AdmissionView) -> bool:
+        return True
+
+    def reset(self) -> None:
+        pass
+
+
+@register_admission("queue_cap")
+class QueueCapAdmission:
+    """Shed when the predicted backlog reaches ``cap`` queries.
+
+    The backlog is estimated as predicted wait / estimated service
+    beat (:attr:`AdmissionView.queue_length`), so the same decision is
+    computable in the scalar tick and in the vectorized ledger's
+    chunk admission pre-pass.  While the beat is still unknown (live
+    engine before its first measurement) everything is admitted.
+    """
+
+    admits_all = False
+
+    def __init__(self, cap: int = 64):
+        if cap < 1:
+            raise ValueError(f"queue_cap needs cap >= 1, got {cap}")
+        self.cap = int(cap)
+
+    def admit(self, view: AdmissionView) -> bool:
+        return view.queue_length < self.cap
+
+    def reset(self) -> None:
+        pass
+
+
+@register_admission("slo_shed")
+class SloShedAdmission:
+    """Shed when the predicted latency would breach the SLO.
+
+    Admits iff ``wait + margin * est_latency <= slo``: the query's
+    predicted queueing delay plus (a safety multiple of) the estimated
+    end-to-end service latency must fit inside the latency objective.
+    ``margin > 1`` sheds earlier, buying headroom against estimate
+    noise on the live engine (measured times jitter query to query);
+    it is a multiple of the service estimate, so the knob is
+    model-independent.
+
+    With exact estimates (the simulator's steady chunks) every
+    admitted query's latency is ``<= slo`` by construction, which is
+    what the control-smoke CI gate pins: p99-of-admitted meets the SLO
+    under an overload where ``none`` blows through it.
+    """
+
+    admits_all = False
+
+    def __init__(self, slo: float, margin: float = 1.0):
+        if not slo > 0.0:
+            raise ValueError(f"slo_shed needs slo > 0, got {slo}")
+        if margin < 0.0:
+            raise ValueError(f"margin must be >= 0, got {margin}")
+        self.slo = float(slo)
+        self.margin = float(margin)
+
+    def admit(self, view: AdmissionView) -> bool:
+        est = view.est_latency
+        if not math.isfinite(est):
+            est = view.est_service
+        if not math.isfinite(est):
+            est = 0.0
+        return view.wait + self.margin * est <= self.slo
+
+    def reset(self) -> None:
+        pass
+
+
+@register_admission("adaptive_batch")
+class AdaptiveBatchAdmission:
+    """SLO-aware ``max_batch`` control: admit everything, steer batching.
+
+    Maintains a rolling window of observed queueing delays; every
+    ``interval`` observations the window's p99 is compared against the
+    SLO: above ``high * slo`` the batch bound halves (head-of-line
+    wait inside big batches is eating the budget), below ``low * slo``
+    it doubles (amortization is free).  The bound always stays within
+    ``[min_batch, max_batch]`` (property-tested across bursty seeds).
+
+    Declared ``admits_all``: the run loop skips shed checks and only
+    consults :meth:`max_chunk_bound` / :meth:`observe`, so closed-loop
+    results stay bit-identical (closed loops have zero queue delay and
+    the bound is a pure computational cap for the simulator's chunks).
+    """
+
+    admits_all = True
+
+    def __init__(
+        self,
+        slo: float,
+        min_batch: int = 1,
+        max_batch: int = 32,
+        window: int = 64,
+        interval: int = 16,
+        low: float = 0.5,
+        high: float = 0.9,
+    ):
+        if not slo > 0.0:
+            raise ValueError(f"adaptive_batch needs slo > 0, got {slo}")
+        if not 1 <= min_batch <= max_batch:
+            raise ValueError(
+                f"need 1 <= min_batch <= max_batch, got "
+                f"[{min_batch}, {max_batch}]"
+            )
+        if not 0.0 <= low < high:
+            raise ValueError(f"need 0 <= low < high, got [{low}, {high}]")
+        self.slo = float(slo)
+        self.min_batch = int(min_batch)
+        self.max_batch = int(max_batch)
+        self.window = max(1, int(window))
+        self.interval = max(1, int(interval))
+        self.low = float(low)
+        self.high = float(high)
+        self._delays: deque = deque(maxlen=self.window)
+        self._since_update = 0
+        self._bound = self.max_batch
+
+    def admit(self, view: AdmissionView) -> bool:
+        return True
+
+    def max_chunk_bound(self) -> int:
+        """Current batch/chunk bound, in ``[min_batch, max_batch]``."""
+        return self._bound
+
+    def observe(self, queue_delay: float, service_latency: float) -> None:
+        self._delays.append(queue_delay)
+        self._since_update += 1
+        if self._since_update < self.interval:
+            return
+        self._since_update = 0
+        p99 = float(np.percentile(np.asarray(self._delays), 99))
+        if p99 > self.high * self.slo:
+            self._bound = max(self.min_batch, self._bound // 2)
+        elif p99 < self.low * self.slo:
+            self._bound = min(self.max_batch, self._bound * 2)
+
+    def reset(self) -> None:
+        self._delays.clear()
+        self._since_update = 0
+        self._bound = self.max_batch

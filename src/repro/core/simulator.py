@@ -188,7 +188,9 @@ def simulate(db: LayerDatabase,
              workload_kwargs: Optional[dict] = None,
              chunking: bool = True,
              max_chunk: Optional[int] = None,
-             events_time_indexed: bool = False) -> PipelineTrace:
+             events_time_indexed: bool = False,
+             admission: Union[str, object, None] = None,
+             admission_kwargs: Optional[dict] = None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -208,6 +210,11 @@ def simulate(db: LayerDatabase,
     clock instead of the query index (open-loop workloads only; events
     must then be supplied explicitly — ``generate_events`` produces
     query-indexed starts).
+
+    ``admission`` selects a :mod:`repro.control` admission policy
+    (e.g. ``admission="slo_shed", admission_kwargs={"slo": ...}``);
+    shed queries are reported through the trace's shed/goodput
+    surface.  The default (no policy) admits everything.
     """
     if events is None:
         if events_time_indexed:
@@ -257,7 +264,9 @@ def simulate(db: LayerDatabase,
     return run_pipeline(executor, runtime, num_queries,
                         workload=workload, workload_kwargs=workload_kwargs,
                         scheduler_name=sched_name, peak_throughput=peak,
-                        chunking=chunking, max_chunk=max_chunk)
+                        chunking=chunking, max_chunk=max_chunk,
+                        admission=admission,
+                        admission_kwargs=admission_kwargs)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

@@ -13,7 +13,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as ref_lib
 from repro.kernels.decode_attention import decode_attention as _decode_pallas

@@ -63,7 +63,7 @@ def main() -> None:
           f"{mesh.size // n_stages} chips, cap={cap}, "
           f"compiled in {dt:.1f}s")
     print(f"  args/device: {mem.argument_size_in_bytes / 2**30:.2f} GiB")
-    print(f"  collectives: " + ", ".join(
+    print("  collectives: " + ", ".join(
         f"{k}={v / 2**20:.1f}MiB" for k, v in coll.items() if v))
     print("  memory_analysis:", mem)
 

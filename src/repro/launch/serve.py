@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.control import available_admission_policies
 from repro.core.database import paper_scenarios
 from repro.models import Model
 from repro.schedulers import available_schedulers
@@ -55,6 +56,13 @@ def main() -> None:
                     help="batched serving: stack up to N queued arrivals "
                          "per dispatch (docs/WORKLOADS.md; >1 only pays "
                          "off for open-loop workloads with bursts)")
+    ap.add_argument("--admission", default="none",
+                    choices=tuple(available_admission_policies()),
+                    help="admission policy (docs/CONTROL.md); slo_shed / "
+                         "adaptive_batch need --slo")
+    ap.add_argument("--slo", type=float, default=0.0,
+                    help="latency objective in seconds for --admission "
+                         "slo_shed / adaptive_batch (0 = unset)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -96,9 +104,14 @@ def main() -> None:
                          mean_burst=5.0 / args.rate * args.eps,
                          mean_gap=10.0 / args.rate * args.eps,
                          seed=args.seed)
+    if args.admission in ("slo_shed", "adaptive_batch") and args.slo <= 0:
+        ap.error(f"--admission {args.admission} requires --slo > 0")
+    adm_kwargs = {"slo": args.slo} if args.slo > 0 else None
     metrics = eng.serve(queries, schedule, workload=args.workload,
                         workload_kwargs=wl_kwargs,
-                        max_batch=args.max_batch)
+                        max_batch=args.max_batch,
+                        admission=args.admission,
+                        admission_kwargs=adm_kwargs)
     s = metrics.summary()
     s["final_config"] = metrics.configs[-1]
     if args.json:

@@ -16,7 +16,7 @@ replication, so every (arch × mesh) combination lowers.
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np

@@ -12,8 +12,7 @@ inputs arrive precomputed with shape [B, S, d_model].
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ The remaining mesh axes (e.g. ``model``) shard each stage's computation
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Sequence
 
 import jax

@@ -125,6 +125,17 @@ class RebalanceRuntime:
         from repro.schedulers.base import bottleneck_time
         return bottleneck_time(self.config, self.last_source)
 
+    def estimated_service_latency(self) -> float:
+        """Estimated end-to-end (pipelined) latency of one query on the
+        committed config from the most recent polled time source (NaN
+        before any poll) — occupied stages × bottleneck beat, the
+        latency estimate admission policies compare against an SLO
+        (docs/CONTROL.md)."""
+        if self.last_source is None:
+            return float("nan")
+        from repro.core.pipeline_state import pipelined_latency
+        return pipelined_latency(self.last_source.stage_times(self.config))
+
     def poll(self, source: StageTimeSource) -> RuntimeStep:
         """Advance the state machine by one query."""
         self.last_source = source

@@ -273,7 +273,9 @@ class ServingEngine:
               slowdown_schedule,
               workload: Union[str, Workload, None] = "closed",
               workload_kwargs: Optional[dict] = None,
-              max_batch: int = 1) -> PipelineTrace:
+              max_batch: int = 1,
+              admission: Union[str, object, None] = None,
+              admission_kwargs: Optional[dict] = None) -> PipelineTrace:
         """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
         slowdown factors (>= 1.0)``.
 
@@ -290,13 +292,21 @@ class ServingEngine:
         one-by-one.  Batches never span an interference edge or a
         rebalance, and only queries that have already arrived join
         (a closed loop therefore still serves one at a time).
+
+        ``admission`` selects a :mod:`repro.control` admission policy
+        (e.g. ``admission="slo_shed", admission_kwargs={"slo":
+        0.25}`` — SLO in wall-clock seconds); shed queries are turned
+        away before touching the executor and reported through the
+        trace's shed/goodput surface (docs/CONTROL.md).
         """
         live = self.query_executor(queries, slowdown_schedule,
                                    max_batch=max_batch)
         trace = run_pipeline(live, self.runtime, len(queries),
                              workload=workload,
                              workload_kwargs=workload_kwargs,
-                             scheduler_name=self.scheduler)
+                             scheduler_name=self.scheduler,
+                             admission=admission,
+                             admission_kwargs=admission_kwargs)
         # The peak reference only exists after measurement: stamp it
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()

@@ -8,7 +8,7 @@ extra sharding over the data axis is applied by launch/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -44,6 +44,19 @@ time via :meth:`PipelineRunner.step`.  A multi-replica
 :class:`~repro.cluster.Cluster` owns one runner per replica and routes
 each fleet arrival to one of them; ``run_pipeline`` itself is the
 single-pipeline driver over the same runner.
+
+Admission control (``repro.control``, docs/CONTROL.md): an
+:class:`~repro.control.AdmissionPolicy` may shed arrivals the pipeline
+cannot serve within its SLO.  A shed query never executes, never polls
+the scheduler, and never advances the admission ledger; its arrival
+time is recorded so the finished trace reports offered load, shed rate
+and SLO attainment on *admitted* goodput.  Decisions are made at the
+head of the loop with the actual ledger; inside a steady chunk a
+predicted ledger (the runtime's estimated beat) decides where to cut —
+exact for the simulator, whose steady chunks have constant beats.
+Policies declaring ``admits_all`` (the ``none`` built-in) skip every
+check, keeping closed-loop traces bit-identical to running without a
+control plane.
 """
 from __future__ import annotations
 
@@ -52,11 +65,13 @@ from typing import TYPE_CHECKING, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.control.base import AdmissionView
 from repro.workloads.base import QueryExecutor, Workload
 from repro.workloads.registry import make_workload
 from repro.workloads.trace import PipelineTrace
 
 if TYPE_CHECKING:  # annotation-only: keeps workloads <-> schedulers acyclic
+    from repro.control.base import AdmissionPolicy
     from repro.schedulers.runtime import RebalanceRuntime
 
 #: Fallback chunk cap when the executor does not prefer one.  Bounds the
@@ -210,16 +225,38 @@ class PipelineRunner:
     them by doubling (a cluster pre-sizes each replica's runner at its
     *expected* share, not the whole fleet), and :meth:`finish` trims to
     the number actually served.
+
+    ``admission`` is an optional :class:`~repro.control.AdmissionPolicy`
+    instance; shed queries are recorded in :attr:`shed_arrivals` and
+    the result arrays only ever hold *admitted* queries, so the dense
+    array index and the global query index diverge once anything is
+    shed (:attr:`num_served` vs. :attr:`num_offered`).
     """
 
     def __init__(self, executor: QueryExecutor,
                  runtime: RebalanceRuntime,
                  capacity: int,
                  chunking: bool = True,
-                 max_chunk: Optional[int] = None):
+                 max_chunk: Optional[int] = None,
+                 admission: Optional[AdmissionPolicy] = None):
         self.executor = executor
         self.runtime = runtime
         self.capacity = max(1, int(capacity))
+
+        self.admission = admission
+        if admission is not None:
+            admission.reset()
+        # Hot-loop guards, resolved once: policies declaring admits_all
+        # skip the shed checks entirely (bit-identity with no policy);
+        # observe/bound hooks are optional protocol extensions.
+        self._shed_check = (admission is not None
+                            and not getattr(admission, "admits_all", False))
+        self._observe = (getattr(admission, "observe", None)
+                         if admission is not None else None)
+        self._chunk_bound = (getattr(admission, "max_chunk_bound", None)
+                             if admission is not None else None)
+        self.shed_arrivals: List[float] = []
+        self.shed_indices: List[int] = []
 
         self._rebalances0 = runtime.num_rebalances
         self._trials0 = runtime.total_trials
@@ -263,7 +300,8 @@ class PipelineRunner:
         self.free_at = 0.0             # when the admission head frees up
         self.drain_at = 0.0            # when every admitted query completed
         self._pending = _CompletionLedger()  # in-system completions
-        self.num_served = 0            # queries executed so far
+        self.num_served = 0            # queries executed (admitted) so far
+        self.num_offered = 0           # queries offered (incl. shed) so far
 
     #: Result arrays grown together when the run outlives ``capacity``.
     _ARRAYS = ("latencies", "service_lat", "queue_delay", "throughputs",
@@ -285,15 +323,19 @@ class PipelineRunner:
         self.capacity = new
 
     # -- ticks (shared by both driving modes) -------------------------------
-    def _scalar_tick(self, q: int, step, arrival: Optional[float]) -> float:
+    def _scalar_tick(self, gq: int, step, arrival: Optional[float]) -> float:
         """One query through the per-query (compatibility) path.
 
-        ``arrival = None`` means closed-loop: the query arrives exactly
-        when the pipeline can take it.  Returns the completion time.
+        ``gq`` is the global query index (what the executor sees);
+        results land at the dense index :attr:`num_served`, which the
+        tick advances.  ``arrival = None`` means closed-loop: the query
+        arrives exactly when the pipeline can take it.  Returns the
+        completion time.
         """
-        rec = self.executor.execute(q, step)
-        self.throughputs[q] = rec.throughput
-        self.serial_mask[q] = step.serial
+        s = self.num_served
+        rec = self.executor.execute(gq, step)
+        self.throughputs[s] = rec.throughput
+        self.serial_mask[s] = step.serial
         self.configs_trace.append(list(step.config))
         # A serial trial runs on the drained pipeline, so it cannot
         # start until every in-flight pipelined query has completed.
@@ -301,7 +343,7 @@ class PipelineRunner:
                  else self.free_at)
         if arrival is None:
             arrival = ready
-        self.queue_depth[q] = self._pending.depth_at(arrival)
+        self.queue_depth[s] = self._pending.depth_at(arrival)
         start = max(arrival, ready)
         occupancy = (rec.service_latency if step.serial
                      else (1.0 / rec.throughput if rec.throughput > 0
@@ -310,19 +352,27 @@ class PipelineRunner:
         completion = start + rec.service_latency
         self.drain_at = max(self.drain_at, completion)
         self._pending.push(completion)
-        self.arrival_t[q] = arrival
-        self.completion_t[q] = completion
-        self.queue_delay[q] = start - arrival
-        self.service_lat[q] = rec.service_latency
-        self.latencies[q] = self.queue_delay[q] + rec.service_latency
+        self.arrival_t[s] = arrival
+        self.completion_t[s] = completion
+        self.queue_delay[s] = start - arrival
+        self.service_lat[s] = rec.service_latency
+        self.latencies[s] = self.queue_delay[s] + rec.service_latency
+        self.num_served = s + 1
         return completion
 
-    def _chunk_tick(self, q0: int, steps,
-                    arrivals: Optional[np.ndarray]) -> None:
-        """``len(steps)`` steady queries through ``execute_many``."""
+    def _chunk_tick(self, gq0: int, steps,
+                    arr_chunk: Optional[np.ndarray]) -> None:
+        """``len(steps)`` steady queries through ``execute_many``.
+
+        ``gq0`` is the chunk's first global query index; ``arr_chunk``
+        holds the chunk members' arrival times (``None`` = closed
+        loop).  Results land at dense indices ``num_served ..
+        num_served + len(steps) - 1``.
+        """
         n = len(steps)
-        sl = slice(q0, q0 + n)
-        rec = self.executor.execute_many(q0, steps)
+        s0 = self.num_served
+        sl = slice(s0, s0 + n)
+        rec = self.executor.execute_many(gq0, steps)
         if len(rec.throughputs) != n:
             raise ValueError(f"execute_many returned {len(rec.throughputs)} "
                              f"records for a chunk of {n}")
@@ -335,7 +385,6 @@ class PipelineRunner:
         else:
             self.configs_trace.extend(list(s.config) for s in steps)
         occ = np.where(rec.throughputs > 0, 1.0 / rec.throughputs, 0.0)
-        arr_chunk = arrivals[sl] if arrivals is not None else None
         arrival, start, self.free_at = _chunk_ledger(arr_chunk, occ,
                                                      self.free_at)
         completion = start + rec.service_latencies
@@ -346,6 +395,71 @@ class PipelineRunner:
         self.queue_delay[sl] = start - arrival
         self.service_lat[sl] = rec.service_latencies
         self.latencies[sl] = self.queue_delay[sl] + rec.service_latencies
+        self.num_served = s0 + n
+
+    # -- admission control (repro.control; docs/CONTROL.md) ------------------
+    def _admit(self, gq: int, arrival: Optional[float]) -> bool:
+        """Admit-or-shed decision for global query ``gq``, made with
+        the *actual* ledger.  A shed is recorded and never executes."""
+        wait = (0.0 if arrival is None
+                else max(self.free_at - arrival, 0.0))
+        view = AdmissionView(
+            query=gq, arrival=arrival, wait=wait,
+            est_service=self.runtime.estimated_bottleneck(),
+            est_latency=self.runtime.estimated_service_latency())
+        if self.admission.admit(view):
+            return True
+        self.shed_indices.append(gq)
+        self.shed_arrivals.append(self.free_at if arrival is None
+                                  else float(arrival))
+        return False
+
+    def _admit_horizon(self, gq0: int, limit: int,
+                       arrivals: Optional[np.ndarray]) -> int:
+        """Largest ``n <= limit`` such that queries ``gq0+1 ..
+        gq0+n-1`` are all predicted to be admitted (``gq0`` itself was
+        already admitted with the actual ledger).
+
+        The prediction advances a shadow of the admission head by the
+        runtime's estimated beat per member — exact for the
+        simulator's steady chunks, where the estimate *is* the actual
+        occupancy.  The first predicted shed cuts the chunk; that
+        query is then re-decided (and recorded) by the outer loop
+        against the post-chunk actual ledger.
+        """
+        est = self.runtime.estimated_bottleneck()
+        est_lat = self.runtime.estimated_service_latency()
+        occ_est = est if np.isfinite(est) and est > 0 else 0.0
+        a0 = arrivals[gq0] if arrivals is not None else None
+        free_pred = (max(float(a0), self.free_at) + occ_est
+                     if a0 is not None else self.free_at + occ_est)
+        for j in range(gq0 + 1, gq0 + limit):
+            if arrivals is None:
+                arrival, wait = None, 0.0
+            else:
+                arrival = float(arrivals[j])
+                wait = max(free_pred - arrival, 0.0)
+            view = AdmissionView(query=j, arrival=arrival, wait=wait,
+                                 est_service=est, est_latency=est_lat)
+            if not self.admission.admit(view):
+                return j - gq0
+            free_pred = (free_pred + occ_est if arrival is None
+                         else max(arrival, free_pred) + occ_est)
+        return limit
+
+    def _chunk_cap_now(self) -> int:
+        """Chunk cap, shrunk by the policy's live bound when present
+        (``adaptive_batch``'s SLO-aware ``max_batch`` control)."""
+        if self._chunk_bound is None:
+            return self._chunk_cap
+        return max(1, min(self._chunk_cap, int(self._chunk_bound())))
+
+    def _observe_span(self, s0: int) -> None:
+        """Feed the policy's observe hook every query executed since
+        dense index ``s0`` (its measured queue delay + service time)."""
+        for s in range(s0, self.num_served):
+            self._observe(float(self.queue_delay[s]),
+                          float(self.service_lat[s]))
 
     # -- incremental driving (one query at a time) --------------------------
     def step(self, arrival: Optional[float] = None) -> float:
@@ -358,42 +472,52 @@ class PipelineRunner:
         completion time, which callers (the cluster's routers) use for
         outstanding-work accounting.
         """
-        q = self.num_served
-        self._ensure_capacity(q + 1)
-        source = self.executor.begin_query(q)
+        gq = self.num_offered          # global index (= dense when no sheds)
+        s = self.num_served
+        self._ensure_capacity(s + 1)
+        source = self.executor.begin_query(gq)
         if self.rc_thr is not None:
-            self.rc_thr[q] = self.executor.reference_throughput(q)
+            self.rc_thr[s] = self.executor.reference_throughput(gq)
         step = (self.runtime.poll(source) if source is not None
                 else self.runtime.steady_step())
-        completion = self._scalar_tick(q, step, arrival)
-        self.num_served = q + 1
+        completion = self._scalar_tick(gq, step, arrival)
+        self.num_offered = gq + 1
         return completion
 
     # -- full-run driving (the run_pipeline path) ---------------------------
     def run(self, num_queries: int,
             arrivals: Optional[np.ndarray]) -> None:
-        """Serve ``num_queries`` queries with the given arrival times
-        (``None`` = closed loop), using the batch-granular fast path
-        where the executor supports it."""
+        """Serve ``num_queries`` offered queries with the given arrival
+        times (``None`` = closed loop), using the batch-granular fast
+        path where the executor supports it.  ``arrivals`` is indexed
+        by the *global* query index; shed queries (admission control)
+        consume an index without executing."""
         self._ensure_capacity(self.num_served + num_queries)
         executor, runtime = self.executor, self.runtime
-        mode, cap = self._mode, self._chunk_cap
+        mode = self._mode
         rc_thr = self.rc_thr
-        end = self.num_served + num_queries
+        shed_check, observe = self._shed_check, self._observe
 
-        q = self.num_served
+        q = self.num_offered
+        end = q + num_queries
         while q < end:
+            arrival = arrivals[q] if arrivals is not None else None
+            # -- admit or shed, with the actual ledger --------------------
+            if shed_check and not self._admit(q, arrival):
+                q += 1
+                continue
             # -- advance the environment; poll the scheduler runtime ------
             source = executor.begin_query(q)
+            s0 = self.num_served
             if rc_thr is not None:
-                rc_thr[q] = executor.reference_throughput(q)
+                rc_thr[s0] = executor.reference_throughput(q)
             step = runtime.poll(source) if source is not None \
                 else runtime.steady_step()
 
             if mode is None or step.serial:
-                self._scalar_tick(
-                    q, step,
-                    arrivals[q] if arrivals is not None else None)
+                self._scalar_tick(q, step, arrival)
+                if observe is not None:
+                    self._observe_span(s0)
                 q += 1
                 continue
 
@@ -406,13 +530,21 @@ class PipelineRunner:
                               if arrivals is not None else self.free_at)
                 if (arrivals is None or q + 1 >= end
                         or arrivals[q + 1] > dispatch_t):
-                    self._chunk_tick(q, [step], arrivals)
+                    self._chunk_tick(q, [step],
+                                     arrivals[q:q + 1]
+                                     if arrivals is not None else None)
+                    if observe is not None:
+                        self._observe_span(s0)
                     q += 1
                     continue
 
             limit = min(end - q,
-                        cap,
+                        self._chunk_cap_now(),
                         max(1, int(executor.steady_horizon(q))))
+            if shed_check and limit > 1:
+                # Cut the chunk at the first *predicted* shed; the cut
+                # query is re-decided by the loop head afterwards.
+                limit = self._admit_horizon(q, limit, arrivals)
 
             if self._poll_once:
                 # One poll covers the whole environment-steady segment:
@@ -421,8 +553,12 @@ class PipelineRunner:
                 # identically.
                 n = limit
                 if rc_thr is not None:
-                    rc_thr[q:q + n] = rc_thr[q]
-                self._chunk_tick(q, [step] * n, arrivals)
+                    rc_thr[s0:s0 + n] = rc_thr[s0]
+                self._chunk_tick(q, [step] * n,
+                                 arrivals[q:q + n]
+                                 if arrivals is not None else None)
+                if observe is not None:
+                    self._observe_span(s0)
                 q += n
                 continue
 
@@ -443,7 +579,7 @@ class PipelineRunner:
                     break
                 src_j = executor.begin_query(j)
                 if rc_thr is not None:
-                    rc_thr[j] = executor.reference_throughput(j)
+                    rc_thr[s0 + len(steps)] = executor.reference_throughput(j)
                 step_j = runtime.poll(src_j) if src_j is not None \
                     else runtime.steady_step()
                 if step_j.serial or step_j.config != step.config:
@@ -451,7 +587,9 @@ class PipelineRunner:
                     break
                 steps.append(step_j)
                 j += 1
-            self._chunk_tick(q, steps, arrivals)
+            self._chunk_tick(q, steps,
+                             arrivals[q:q + len(steps)]
+                             if arrivals is not None else None)
             q += len(steps)
             if leftover is not None:
                 # Already polled (the trial/commit is charged to this
@@ -461,15 +599,23 @@ class PipelineRunner:
                     jq, jstep,
                     arrivals[jq] if arrivals is not None else None)
                 q += 1
-        self.num_served = q
+            if observe is not None:
+                self._observe_span(s0)
+        self.num_offered = q
 
     # -- result --------------------------------------------------------------
     def finish(self, scheduler_name: str = "",
                workload_name: str = "closed",
                peak_throughput: float = float("nan")) -> PipelineTrace:
         """Freeze the run into a :class:`PipelineTrace` (arrays trimmed
-        to the number of queries actually served)."""
+        to the number of queries actually served; shed queries are
+        reported through the trace's shed/goodput surface)."""
         n = self.num_served
+        admission_name = ("none" if self.admission is None
+                          else getattr(self.admission, "name",
+                                       type(self.admission).__name__))
+        slo = float(getattr(self.admission, "slo", float("inf"))
+                    if self.admission is not None else float("inf"))
         return PipelineTrace(
             scheduler=scheduler_name,
             latencies=self.latencies[:n],
@@ -489,6 +635,9 @@ class PipelineRunner:
             peak_throughput=peak_throughput,
             rc_throughputs=(self.rc_thr[:n] if self.rc_thr is not None
                             else None),
+            admission=admission_name,
+            slo_latency=slo,
+            shed_arrivals=np.asarray(self.shed_arrivals, dtype=float),
         )
 
 
@@ -500,7 +649,9 @@ def run_pipeline(executor: QueryExecutor,
                  scheduler_name: str = "",
                  peak_throughput: float = float("nan"),
                  chunking: bool = True,
-                 max_chunk: Optional[int] = None) -> PipelineTrace:
+                 max_chunk: Optional[int] = None,
+                 admission: Union[str, object, None] = None,
+                 admission_kwargs: Optional[dict] = None) -> PipelineTrace:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
 
@@ -511,7 +662,18 @@ def run_pipeline(executor: QueryExecutor,
     ``chunking=False`` forces the scalar per-query tick even when the
     executor supports ``execute_many`` (benchmark baseline / debugging);
     ``max_chunk`` overrides the executor's preferred chunk cap.
+
+    ``admission`` selects an :class:`~repro.control.AdmissionPolicy`
+    (registry name + ``admission_kwargs``, or an instance;
+    docs/CONTROL.md).  ``None`` / ``"none"`` admits everything —
+    closed-loop results are bit-identical to a run without a control
+    plane either way.
     """
+    # Deferred import: repro.control registers its builtins on first
+    # use; the run loop itself only needs the resolver.
+    from repro.control.registry import resolve_admission
+    policy = resolve_admission(admission, admission_kwargs)
+
     wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
                                          num_queries)
     # Executors whose interference timeline is wall-clock anchored
@@ -522,7 +684,8 @@ def run_pipeline(executor: QueryExecutor,
         announce(arrivals)
 
     runner = PipelineRunner(executor, runtime, num_queries,
-                            chunking=chunking, max_chunk=max_chunk)
+                            chunking=chunking, max_chunk=max_chunk,
+                            admission=policy)
     runner.run(num_queries, arrivals)
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,

@@ -40,6 +40,16 @@ class PipelineTrace:
     queue_depths: Optional[np.ndarray] = None
     peak_throughput: float = float("nan")  # interference-free optimum
     rc_throughputs: Optional[np.ndarray] = None  # per-query DP optimum
+    # -- admission control / load shedding (repro.control) ------------------
+    #: Name of the admission policy the run was served under.
+    admission: str = "none"
+    #: Latency objective (driver time units) the admission policy
+    #: enforced; +inf when no objective was enforced (SLO attainment is
+    #: then trivially 1 and goodput counts every admitted completion).
+    slo_latency: float = float("inf")
+    #: Arrival times of shed queries (empty = nothing shed).  The
+    #: per-query arrays above only ever hold *admitted* queries.
+    shed_arrivals: Optional[np.ndarray] = None
 
     def __post_init__(self):
         n = len(self.latencies)
@@ -49,6 +59,10 @@ class PipelineTrace:
             self.queue_delays = np.zeros(n)
         if self.queue_depths is None:
             self.queue_depths = np.zeros(n, dtype=int)
+        if self.shed_arrivals is None:
+            self.shed_arrivals = np.empty(0)
+        else:
+            self.shed_arrivals = np.asarray(self.shed_arrivals, dtype=float)
 
     # -- compat surface (old ServeMetrics field names) ----------------------
     @property
@@ -99,14 +113,63 @@ class PipelineTrace:
             return float(np.mean(self.throughputs < target))
         raise ValueError(reference)
 
+    # -- admission / shed accounting (docs/CONTROL.md) ----------------------
+    @property
+    def num_admitted(self) -> int:
+        """Queries that entered (and ran through) the pipeline."""
+        return len(self.latencies)
+
+    @property
+    def num_shed(self) -> int:
+        """Queries the admission policy turned away."""
+        return len(self.shed_arrivals)
+
+    @property
+    def num_offered(self) -> int:
+        """All arrivals, admitted plus shed."""
+        return self.num_admitted + self.num_shed
+
+    @property
+    def shed_rate(self) -> float:
+        """Fraction of offered queries that were shed."""
+        return self.num_shed / self.num_offered if self.num_offered else 0.0
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of *admitted* queries with latency within the
+        admission policy's SLO (trivially 1.0 when no finite SLO was
+        enforced; NaN for an empty trace)."""
+        if not self.num_admitted:
+            return float("nan")
+        if not np.isfinite(self.slo_latency):
+            return 1.0
+        return float(np.mean(self.latencies <= self.slo_latency))
+
+    @property
+    def goodput_qps(self) -> float:
+        """Completion rate of admitted queries that met the SLO — the
+        control plane's figure of merit (InferLine's goodput).  Equals
+        :attr:`achieved_load` when no SLO was enforced."""
+        if not np.isfinite(self.slo_latency):
+            return self.achieved_load
+        if self.completion_times is None or len(self.completion_times) < 2:
+            return float("nan")
+        span = float(np.max(self.completion_times))
+        if span <= 0:
+            return float("inf")
+        return float(np.sum(self.latencies <= self.slo_latency)) / span
+
     # -- offered vs. achieved load ------------------------------------------
     @property
     def offered_load(self) -> float:
-        """Arrival rate over the run (queries / time unit)."""
+        """Arrival rate over the run (queries / time unit), counting
+        shed queries — offered load is what arrived, not what ran."""
         if self.arrival_times is None or len(self.arrival_times) < 2:
             return float("nan")
         span = float(self.arrival_times[-1])
-        return len(self.arrival_times) / span if span > 0 else float("inf")
+        if self.num_shed:
+            span = max(span, float(np.max(self.shed_arrivals)))
+        return self.num_offered / span if span > 0 else float("inf")
 
     @property
     def achieved_load(self) -> float:
@@ -160,4 +223,10 @@ class PipelineTrace:
                                if peak_known else float("nan")),
             "rebalances": self.num_rebalances,
             "serial_frac": self.rebalance_fraction,
+            # -- admission control / goodput (docs/CONTROL.md) -------------
+            "num_shed": float(self.num_shed),
+            "shed_rate": self.shed_rate,
+            "goodput_qps": self.goodput_qps,
+            "slo_attainment": self.slo_attainment,
+            "slo_latency_s": float(self.slo_latency),
         }

@@ -8,14 +8,12 @@ import pytest
 from repro.cluster import (
     Cluster,
     ClusterTrace,
-    Replica,
     ReplicaView,
     Router,
     available_routers,
     make_router,
     register_router,
     router_class,
-    run_cluster,
     simulate_cluster,
     unregister_router,
 )
@@ -105,7 +103,7 @@ def test_cluster_validates_replicas_and_router_output(db):
         def reset(self):
             pass
 
-    with pytest.raises(ValueError, match="replica 7"):
+    with pytest.raises(ValueError, match="position 7"):
         simulate_cluster(db, 4, 2, scheduler="none", router=BadRouter(),
                          num_queries=4)
 

@@ -1,0 +1,468 @@
+"""repro.control: admission registries, closed-loop bit-identity, SLO
+shedding under overload (sim + live + fleet), adaptive batch bounds,
+and load-profile autoscaling."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # optional-dep shim
+
+from repro.cluster import simulate_cluster
+from repro.control import (
+    AdmissionPolicy,
+    AdmissionView,
+    AdaptiveBatchAdmission,
+    available_admission_policies,
+    available_autoscalers,
+    make_admission,
+    make_autoscaler,
+    register_admission,
+    resolve_admission,
+    resolve_autoscaler,
+    unregister_admission,
+)
+from repro.core import generate_events, simulate, synthetic_database
+
+BUILTIN_ADMISSION = ("adaptive_batch", "none", "queue_cap", "slo_shed")
+BUILTIN_AUTOSCALERS = ("load_profile", "static")
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+@pytest.fixture(scope="module")
+def cap(db):
+    """Interference-free peak throughput (queries / time unit)."""
+    return simulate(db, 4, scheduler="none", events=[], num_queries=10).peak_throughput
+
+
+@pytest.fixture(scope="module")
+def service(db):
+    """Steady pipelined service latency of one query."""
+    t = simulate(db, 4, scheduler="none", events=[], num_queries=10)
+    return float(t.service_latencies[-1])
+
+
+def overload_kwargs(cap, seed=3):
+    """A bursty workload whose bursts far exceed pipeline capacity."""
+    return dict(
+        workload="bursty",
+        workload_kwargs=dict(
+            burst_rate=3.0 * cap,
+            base_rate=0.5 * cap,
+            mean_burst=2000.0 / cap,
+            mean_gap=1000.0 / cap,
+            seed=seed,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtin_policies():
+    names = available_admission_policies()
+    for name in BUILTIN_ADMISSION:
+        assert name in names
+    scalers = available_autoscalers()
+    for name in BUILTIN_AUTOSCALERS:
+        assert name in scalers
+
+
+def test_registry_kwargs_filtered_per_policy():
+    """One kwargs superset constructs any policy (cap means nothing to
+    slo_shed, slo nothing to queue_cap)."""
+    for name in BUILTIN_ADMISSION:
+        p = make_admission(name, cap=4, slo=1.0, margin=2.0)
+        assert isinstance(p, AdmissionPolicy)
+    assert make_admission("queue_cap", cap=4, slo=1.0).cap == 4
+    assert make_admission("slo_shed", cap=4, slo=1.0).slo == 1.0
+
+
+def test_registry_unknown_and_validation():
+    with pytest.raises(ValueError, match="unknown admission"):
+        make_admission("does-not-exist")
+    with pytest.raises(TypeError):
+        make_admission("slo_shed")  # slo is required
+    with pytest.raises(ValueError):
+        make_admission("slo_shed", slo=0.0)
+    with pytest.raises(ValueError):
+        make_admission("queue_cap", cap=0)
+    with pytest.raises(ValueError, match="unknown autoscaler"):
+        make_autoscaler("does-not-exist")
+    with pytest.raises(ValueError):
+        make_autoscaler("load_profile", target_util=0.0)
+
+
+def test_resolve_admission_none_and_instances():
+    assert resolve_admission(None) is None
+    with pytest.raises(ValueError, match="no admission policy"):
+        resolve_admission(None, {"slo": 1.0})
+    inst = make_admission("queue_cap", cap=7)
+    assert resolve_admission(inst) is inst
+    with pytest.raises(ValueError, match="already-constructed"):
+        resolve_admission(inst, {"cap": 3})
+    scaler = make_autoscaler("static")
+    assert resolve_autoscaler(scaler) is scaler
+    assert resolve_autoscaler(None).name == "static"
+
+
+def test_register_custom_policy():
+    @register_admission("_test_flaky_gate")
+    class FlakyGate:
+        admits_all = False
+
+        def admit(self, view):
+            return view.query % 2 == 0
+
+        def reset(self):
+            pass
+
+    try:
+        p = make_admission("_test_flaky_gate")
+        assert p.name == "_test_flaky_gate"
+        view = AdmissionView(query=1, arrival=0.0, wait=0.0, est_service=1.0)
+        assert not p.admit(view)
+    finally:
+        unregister_admission("_test_flaky_gate")
+    with pytest.raises(ValueError):
+        make_admission("_test_flaky_gate")
+
+
+def test_admission_view_queue_length():
+    v = AdmissionView(query=0, arrival=1.0, wait=10.0, est_service=2.0)
+    assert v.queue_length == 5.0
+    unknown = AdmissionView(query=0, arrival=1.0, wait=10.0, est_service=float("nan"))
+    assert unknown.queue_length == 0.0
+
+
+# ---------------------------------------------------------------------------
+# closed loop: the control plane must be invisible
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "admission,admission_kwargs",
+    [
+        ("none", {}),
+        ("queue_cap", {"cap": 4}),
+        ("slo_shed", {"slo": 1e9}),
+        ("adaptive_batch", {"slo": 1e9}),
+    ],
+)
+@pytest.mark.parametrize("scheduler", ["odin", "none"])
+def test_closed_loop_bit_identical_to_no_policy(
+    db, scheduler, admission, admission_kwargs
+):
+    """Closed loops have zero predicted wait, so no built-in policy may
+    shed — and the trace must be bit-identical to running without a
+    control plane at all."""
+    base = simulate(db, 4, scheduler=scheduler, num_queries=400, seed=0)
+    ctl = simulate(
+        db,
+        4,
+        scheduler=scheduler,
+        num_queries=400,
+        seed=0,
+        admission=admission,
+        admission_kwargs=admission_kwargs,
+    )
+    assert ctl.num_shed == 0
+    assert np.array_equal(base.latencies, ctl.latencies)
+    assert np.array_equal(base.throughputs, ctl.throughputs)
+    assert np.array_equal(base.queue_delays, ctl.queue_delays)
+    assert base.configs_trace == ctl.configs_trace
+    assert base.num_rebalances == ctl.num_rebalances
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cap_=st.integers(min_value=1, max_value=64),
+    slo_services=st.floats(min_value=1.5, max_value=100.0),
+    seed=st.integers(min_value=0, max_value=7),
+)
+def test_property_no_shed_below_capacity_closed_loop(cap_, slo_services, seed):
+    """queue_cap / slo_shed never shed a closed-loop query, for any cap
+    >= 1 and any feasible SLO (>= one service latency)."""
+    db = synthetic_database("vgg16", seed=0)
+    probe = simulate(db, 4, scheduler="none", events=[], num_queries=5)
+    slo = slo_services * float(probe.service_latencies[-1])
+    base = simulate(db, 4, scheduler="odin", num_queries=120, seed=seed)
+    for admission, kwargs in (
+        ("queue_cap", {"cap": cap_}),
+        ("slo_shed", {"slo": slo}),
+    ):
+        t = simulate(
+            db,
+            4,
+            scheduler="odin",
+            num_queries=120,
+            seed=seed,
+            admission=admission,
+            admission_kwargs=kwargs,
+        )
+        assert t.num_shed == 0
+        assert np.array_equal(t.latencies, base.latencies)
+
+
+# ---------------------------------------------------------------------------
+# overload: slo_shed holds the tail where none cannot
+# ---------------------------------------------------------------------------
+
+
+def test_slo_shed_holds_p99_of_admitted_under_overload(db, cap, service):
+    """The acceptance scenario in simulate(): bursty offered load above
+    capacity — none blows through the SLO, slo_shed keeps every
+    admitted query inside it."""
+    slo = 3.0 * service
+    kw = dict(scheduler="none", events=[], num_queries=4000, **overload_kwargs(cap))
+    none_t = simulate(db, 4, **kw)
+    shed_t = simulate(db, 4, admission="slo_shed", admission_kwargs={"slo": slo}, **kw)
+    assert none_t.tail_latency(99) > slo
+    assert none_t.num_shed == 0
+    assert shed_t.num_shed > 0
+    assert shed_t.tail_latency(99) <= slo
+    assert shed_t.slo_attainment == 1.0
+    # offered load counts shed arrivals; goodput only admitted-in-SLO
+    assert shed_t.num_offered == 4000
+    assert shed_t.num_admitted + shed_t.num_shed == 4000
+    assert shed_t.offered_load == pytest.approx(none_t.offered_load)
+    assert shed_t.goodput_qps <= shed_t.achieved_load
+
+
+def test_slo_shed_chunked_matches_scalar_under_overload(db, cap, service):
+    """The chunk admission pre-pass (predicted ledger) must make the
+    same decisions as the scalar tick in the simulator, where the
+    estimated beat is exact."""
+    slo = 3.0 * service
+    kw = dict(
+        scheduler="none",
+        events=[],
+        num_queries=3000,
+        admission="slo_shed",
+        admission_kwargs={"slo": slo},
+        **overload_kwargs(cap),
+    )
+    chunked = simulate(db, 4, chunking=True, **kw)
+    scalar = simulate(db, 4, chunking=False, **kw)
+    assert chunked.num_shed == scalar.num_shed
+    assert np.array_equal(chunked.shed_arrivals, scalar.shed_arrivals)
+    # open-loop ledger values agree up to float re-association, the
+    # same tolerance the chunked fast path itself is held to
+    # (tests/test_batching.py)
+    assert np.allclose(chunked.latencies, scalar.latencies, rtol=1e-9)
+
+
+def test_queue_cap_bounds_depth_under_overload(db, cap):
+    uncapped = simulate(
+        db, 4, scheduler="none", events=[], num_queries=3000, **overload_kwargs(cap)
+    )
+    capped = simulate(
+        db,
+        4,
+        scheduler="none",
+        events=[],
+        num_queries=3000,
+        admission="queue_cap",
+        admission_kwargs={"cap": 8},
+        **overload_kwargs(cap),
+    )
+    assert capped.num_shed > 0
+    assert capped.queue_depths.max() < uncapped.queue_depths.max()
+    # the cap bounds the *queued* backlog; in-flight queries ride on top
+    assert capped.queue_depths.max() <= 8 + 8
+
+
+def test_shed_summary_keys_identical_across_policies(db, cap):
+    """One metric surface: a shed run and a plain run expose the same
+    summary keys (values differ, shape never)."""
+    kw = dict(scheduler="none", events=[], num_queries=500, **overload_kwargs(cap))
+    plain = simulate(db, 4, **kw).summary()
+    shed = simulate(
+        db, 4, admission="queue_cap", admission_kwargs={"cap": 4}, **kw
+    ).summary()
+    assert set(plain.keys()) == set(shed.keys())
+    assert plain["num_shed"] == 0 and shed["num_shed"] > 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive_batch: SLO-aware max_batch control
+# ---------------------------------------------------------------------------
+
+
+class _RecordingAdaptive(AdaptiveBatchAdmission):
+    """Records every bound the run loop consults."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.bounds = []
+
+    def max_chunk_bound(self):
+        b = super().max_chunk_bound()
+        self.bounds.append(b)
+        return b
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_adaptive_batch_stays_within_declared_bounds(db, cap, service, seed):
+    policy = _RecordingAdaptive(
+        slo=3.0 * service, min_batch=2, max_batch=16, window=32, interval=8
+    )
+    simulate(
+        db,
+        4,
+        scheduler="none",
+        events=[],
+        num_queries=2000,
+        admission=policy,
+        workload="bursty",
+        workload_kwargs=dict(
+            burst_rate=3.0 * cap,
+            base_rate=0.5 * cap,
+            mean_burst=500.0 / cap,
+            mean_gap=500.0 / cap,
+            seed=seed,
+        ),
+    )
+    assert policy.bounds, "the run loop never consulted the bound"
+    assert min(policy.bounds) >= 2
+    assert max(policy.bounds) <= 16
+    # overload pushes p99 queue delay past the SLO: the bound must move
+    assert min(policy.bounds) < 16
+
+
+def test_adaptive_batch_grows_back_when_quiet(db, cap, service):
+    policy = AdaptiveBatchAdmission(
+        slo=3.0 * service, min_batch=1, max_batch=8, window=16, interval=4
+    )
+    # closed loop: zero queue delay, the bound climbs to max and stays
+    simulate(db, 4, scheduler="none", events=[], num_queries=200, admission=policy)
+    assert policy.max_chunk_bound() == 8
+
+
+# ---------------------------------------------------------------------------
+# fleet: admission + autoscaling through the cluster
+# ---------------------------------------------------------------------------
+
+
+def fleet_overload(cap, num_replicas, seed=6):
+    return dict(
+        workload="bursty",
+        workload_kwargs=dict(
+            burst_rate=2.0 * num_replicas * cap,
+            base_rate=0.375 * num_replicas * cap,
+            mean_burst=80.0 / cap,
+            mean_gap=250.0 / cap,
+            seed=seed,
+        ),
+    )
+
+
+def test_cluster_admission_none_and_static_bit_identical(db, cap):
+    """admission="none" + autoscaler="static" must reproduce the
+    pre-control-plane fleet bit for bit."""
+    kw = dict(
+        scheduler="odin",
+        alpha=4,
+        num_queries=600,
+        router="least_outstanding",
+        **fleet_overload(cap, 4),
+    )
+    base = simulate_cluster(db, 4, 4, **kw)
+    ctl = simulate_cluster(db, 4, 4, admission="none", autoscaler="static", **kw)
+    assert np.array_equal(base.assignments, ctl.assignments)
+    assert np.array_equal(base.fleet.latencies, ctl.fleet.latencies)
+    assert ctl.num_shed == 0
+    assert ctl.summary()["mean_active_replicas"] == 4.0
+
+
+def test_cluster_slo_shed_holds_fleet_tail(db, cap, service):
+    """Fleet acceptance: slo_shed p99-of-admitted meets the SLO where
+    none violates it, with replica-scoped interference in play."""
+    slo = 3.0 * service
+    events = [
+        dataclasses.replace(ev, replica=2)
+        for ev in generate_events(300, 4, db.num_scenarios, 2, 100, 5)
+    ]
+    kw = dict(
+        scheduler="odin",
+        alpha=10,
+        num_queries=2000,
+        events=events,
+        router="odin_aware",
+        **fleet_overload(cap, 4),
+    )
+    none_ct = simulate_cluster(db, 4, 4, **kw)
+    shed_ct = simulate_cluster(
+        db, 4, 4, admission="slo_shed", admission_kwargs={"slo": slo}, **kw
+    )
+    assert none_ct.fleet.tail_latency(99) > slo
+    assert shed_ct.num_shed > 0
+    # interference can begin between decision and execution: allow a
+    # whisker past the SLO, and require the bulk strictly inside it
+    assert shed_ct.fleet.tail_latency(99) <= 1.05 * slo
+    assert shed_ct.fleet.slo_attainment >= 0.98
+    assert shed_ct.num_admitted + shed_ct.num_shed == 2000
+    assert len(shed_ct.shed_arrivals) == shed_ct.num_shed
+
+
+def test_load_profile_autoscaler_tracks_diurnal_load(db, cap):
+    """Day/night swings activate and drain replicas; quiet phases run
+    on a subset, peaks re-activate the fleet."""
+    ct = simulate_cluster(
+        db,
+        4,
+        4,
+        scheduler="none",
+        num_queries=4000,
+        router="least_outstanding",
+        workload="diurnal",
+        workload_kwargs=dict(
+            mean_rate=1.5 * cap,
+            period=4000.0 / cap,
+            amplitude=0.8,
+            seed=5,
+        ),
+        autoscaler="load_profile",
+    )
+    counts = ct.active_counts
+    assert len(ct.active_timeline) >= 2, "active set never changed"
+    assert counts.min() < 4, "never drained"
+    assert counts.max() == 4, "never used the whole fleet"
+    s = ct.summary()
+    assert 1.0 <= s["mean_active_replicas"] < 4.0
+    assert s["autoscaler"] == "load_profile"
+
+
+def test_static_autoscaler_prefix(db, cap):
+    """static(n_active=k) keeps the router on the first k replicas."""
+    ct = simulate_cluster(
+        db,
+        4,
+        4,
+        scheduler="none",
+        num_queries=400,
+        router="round_robin",
+        workload="poisson",
+        workload_kwargs=dict(rate=2.0 * cap, seed=1),
+        autoscaler="static",
+        autoscaler_kwargs={"n_active": 2},
+    )
+    counts = ct.replica_counts
+    assert counts[0] + counts[1] == 400
+    assert counts[2] == counts[3] == 0
+
+
+def test_closed_loop_cluster_with_load_profile_degenerates_to_static(db):
+    """No arrival clock -> the measured offered rate is the fleet's own
+    service rate -> the autoscaler keeps everyone active."""
+    base = simulate_cluster(db, 4, 2, scheduler="none", num_queries=200)
+    ct = simulate_cluster(
+        db, 4, 2, scheduler="none", num_queries=200, autoscaler="load_profile"
+    )
+    assert ct.summary()["mean_active_replicas"] == 2.0
+    assert np.array_equal(base.fleet.latencies, ct.fleet.latencies)

@@ -2,8 +2,6 @@
 import pytest
 
 from repro.launch.roofline import (
-    HBM_BW,
-    PEAK_FLOPS,
     RooflineTerms,
     _shape_bytes,
     _trip_count,

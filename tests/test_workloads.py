@@ -7,7 +7,6 @@ from repro.core import (
     EventTimeline,
     InterferenceEvent,
     SimTimeSource,
-    balanced_config,
     generate_events,
     optimal_partition,
     pipelined_latency,
