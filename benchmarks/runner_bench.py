@@ -13,15 +13,24 @@ Environment:
     REPRO_BENCH_QUERIES        queries per row            (default 2000)
     REPRO_BENCH_REPEATS        best-of repeats per row    (default 3)
     REPRO_BENCH_MIN_SPEEDUP    gate on the steady row     (default 5.0)
-    REPRO_BENCH_SCALE_QUERIES  scalability-row size       (default 1000000;
+    REPRO_BENCH_SCALE_QUERIES  dense scalability-row size (default 1000000;
                                0 skips the row)
+    REPRO_BENCH_STREAM_QUERIES streaming scalability-row size
+                               (default 10000000; 0 skips the row)
+    REPRO_BENCH_RSS_TOLERANCE  streaming-RSS gate: streaming peak RSS
+                               must stay within this multiple of the
+                               dense 1M row's (default 1.5)
 
-Besides the scalar-vs-chunked comparison rows, the report carries one
-*scalability* row: a 1M-query open-loop run through the vectorized
-arrival/queue/completion ledger (chunked only — the scalar tick at
-this size is the thing the ledger exists to avoid), recording wall
-time, queries/s and peak RSS so the perf trajectory of the ledger
-itself is tracked across PRs.
+Besides the scalar-vs-chunked comparison rows, the report carries two
+*scalability* rows: a 1M-query dense open-loop run through the
+vectorized arrival/queue/completion ledger, and a 10M-query run in
+``trace_mode="streaming"`` (docs/TELEMETRY.md) whose peak RSS must stay
+flat — within ``REPRO_BENCH_RSS_TOLERANCE`` of the 10x-smaller dense
+row — because the streaming collector folds every flushed chunk into
+constant-memory sketches and rollups instead of dense per-query arrays.
+Each scale row runs in its own subprocess (``--scale-row``): ru_maxrss
+is a process-lifetime high-water mark, so an in-process measurement
+would inherit whichever earlier row peaked highest.
 
 The gate row (``steady_none``) is the fast path's home turf: long
 environment-steady segments with no exploration phases, where the run
@@ -36,6 +45,7 @@ import json
 import math
 import os
 import resource
+import subprocess
 import sys
 import time
 
@@ -46,6 +56,9 @@ NUM_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "2000"))
 REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
 MIN_SPEEDUP = float(os.environ.get("REPRO_BENCH_MIN_SPEEDUP", "5.0"))
 SCALE_QUERIES = int(os.environ.get("REPRO_BENCH_SCALE_QUERIES", "1000000"))
+STREAM_QUERIES = int(os.environ.get("REPRO_BENCH_STREAM_QUERIES",
+                                    "10000000"))
+RSS_TOLERANCE = float(os.environ.get("REPRO_BENCH_RSS_TOLERANCE", "1.5"))
 GATE_ROW = "steady_none"
 
 #: (row name, run_matrix scheduler spec, (freq, dur) paper setting)
@@ -107,14 +120,16 @@ def _peak_rss_mb() -> float:
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
 
 
-def bench_scale(num_queries: int) -> dict:
-    """One 1M-query open-loop run through the vectorized ledger.
+def bench_scale(num_queries: int, trace_mode: str = "dense") -> dict:
+    """One open-loop scale run through the vectorized ledger.
 
     No interference events and a static scheduler: the row isolates the
     arrival/queue/completion ledger (cumsum admission, pruned-heap
     depth accounting) — the pieces that must stay O(n log n) with flat
     memory at fleet scale.  Offered load sits just under capacity so
-    the queue stays busy without diverging.
+    the queue stays busy without diverging.  ``trace_mode="streaming"``
+    runs the same workload through the constant-memory telemetry
+    collector (``repro.telemetry``) instead of dense per-query arrays.
     """
     db = db_for("vgg16")
     cap = simulate(db, 4, scheduler="none", events=[],
@@ -122,13 +137,16 @@ def bench_scale(num_queries: int) -> dict:
     t0 = time.perf_counter()
     r = simulate(db, 4, scheduler="none", events=[],
                  num_queries=num_queries, workload="poisson",
-                 workload_kwargs=dict(rate=0.9 * cap, seed=0))
+                 workload_kwargs=dict(rate=0.9 * cap, seed=0),
+                 trace_mode=trace_mode)
     wall = time.perf_counter() - t0
     s = r.summary()
     return {
-        "row": "scale_ledger",
+        "row": ("scale_ledger" if trace_mode == "dense"
+                else "scale_streaming"),
         "num_queries": num_queries,
         "workload": "poisson",
+        "trace_mode": trace_mode,
         "chunked_s": wall,
         "chunked_qps": num_queries / wall,
         "peak_rss_mb": _peak_rss_mb(),
@@ -140,9 +158,34 @@ def bench_scale(num_queries: int) -> dict:
     }
 
 
+def _bench_scale_subprocess(num_queries: int, trace_mode: str) -> dict:
+    """Run one scale row in a fresh interpreter and return its row dict.
+
+    Isolation keeps ``ru_maxrss`` honest: it is a process-lifetime
+    high-water mark, so rows sharing a process would all report
+    whichever allocation peaked highest (the bit-identity rows touch
+    dense 2k-query traces before any scale row runs).
+    """
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.runner_bench",
+         "--scale-row", trace_mode, str(num_queries)],
+        capture_output=True, text=True, check=True,
+        env=dict(os.environ), cwd=os.getcwd())
+    return json.loads(out.stdout)
+
+
 def main() -> int:
+    if len(sys.argv) >= 4 and sys.argv[1] == "--scale-row":
+        # Child mode: one scale row, JSON on stdout, nothing else.
+        json.dump(bench_scale(int(sys.argv[3]), trace_mode=sys.argv[2]),
+                  sys.stdout)
+        return 0
+
     results = [bench_row(*row) for row in ROWS]
-    scale = bench_scale(SCALE_QUERIES) if SCALE_QUERIES > 0 else None
+    scale = (_bench_scale_subprocess(SCALE_QUERIES, "dense")
+             if SCALE_QUERIES > 0 else None)
+    scale_streaming = (_bench_scale_subprocess(STREAM_QUERIES, "streaming")
+                       if STREAM_QUERIES > 0 else None)
     report = {
         "schema": 1,
         "benchmark": "runner_fast_path",
@@ -151,9 +194,11 @@ def main() -> int:
         "num_queries": NUM_QUERIES,
         "repeats": REPEATS,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-        "gate": {"row": GATE_ROW, "min_speedup": MIN_SPEEDUP},
+        "gate": {"row": GATE_ROW, "min_speedup": MIN_SPEEDUP,
+                 "rss_tolerance": RSS_TOLERANCE},
         "rows": results,
         "scale": scale,
+        "scale_streaming": scale_streaming,
     }
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, "BENCH_runner.json")
@@ -173,13 +218,26 @@ def main() -> int:
     if gate["speedup"] < MIN_SPEEDUP:
         failed.append(f"{GATE_ROW}: speedup {gate['speedup']:.1f}x "
                       f"< gate {MIN_SPEEDUP:.1f}x")
-    if scale is not None:
-        print(f"{scale['row']:12s} {scale['num_queries']} queries "
-              f"({scale['workload']}): {scale['chunked_s']:6.2f}s  "
-              f"{scale['chunked_qps']:9.0f} q/s  "
-              f"peak RSS {scale['peak_rss_mb']:7.1f} MB")
-        if not scale["finite"]:
-            failed.append("scale_ledger: non-finite summary metrics")
+    for row in (scale, scale_streaming):
+        if row is None:
+            continue
+        print(f"{row['row']:12s} {row['num_queries']} queries "
+              f"({row['workload']}, {row['trace_mode']}): "
+              f"{row['chunked_s']:6.2f}s  "
+              f"{row['chunked_qps']:9.0f} q/s  "
+              f"peak RSS {row['peak_rss_mb']:7.1f} MB")
+        if not row["finite"]:
+            failed.append(f"{row['row']}: non-finite summary metrics")
+    if scale is not None and scale_streaming is not None:
+        # The flat-memory gate: 10x the queries in streaming mode may
+        # not cost more than RSS_TOLERANCE x the dense row's memory.
+        budget = RSS_TOLERANCE * scale["peak_rss_mb"]
+        if scale_streaming["peak_rss_mb"] > budget:
+            failed.append(
+                f"scale_streaming: peak RSS "
+                f"{scale_streaming['peak_rss_mb']:.1f} MB > "
+                f"{RSS_TOLERANCE:.2f}x dense row "
+                f"({scale['peak_rss_mb']:.1f} MB)")
     if failed:
         print("runner_bench FAILED: " + "; ".join(failed))
         return 1

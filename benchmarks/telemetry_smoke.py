@@ -1,0 +1,178 @@
+"""CI telemetry smoke: streaming summaries match dense within tolerance.
+
+Runs the control-plane smoke scenario (bursty overload + ``slo_shed``
+admission, docs/CONTROL.md) twice on each surface — once with the
+default dense trace and once with ``trace_mode="streaming"``
+(docs/TELEMETRY.md) — and gates that the constant-memory telemetry
+path reports the same run:
+
+* **single pipeline** (``simulate``): identical summary key set, exact
+  offered/admitted/shed counts, p99-of-admitted within
+  ``REPRO_TELEMETRY_P99_TOL`` (default 1%) relative error, SLO
+  attainment within 0.5% absolute, goodput within 1% relative.
+* **4-replica fleet** (``simulate_cluster``): the same gates on the
+  merged fleet summary, with replica-scoped interference (freq=2,
+  dur=100 on replica 2), ``odin`` rebalancing, ``odin_aware`` routing
+  and ``load_profile`` autoscaling — so sketch *merging* across
+  replicas is in the gated path, not just single-collector accuracy.
+
+The streaming runs also drive a ``MemorySink`` and must emit at least
+one metrics snapshot each.  Both summaries plus the per-key diffs land
+in ``results/benchmarks/telemetry_smoke.json`` for the CI artifact
+upload.
+
+    REPRO_TELEMETRY_QUERIES=4000 PYTHONPATH=src \
+        python -m benchmarks.telemetry_smoke
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR, db_for
+from repro.cluster import simulate_cluster
+from repro.core import generate_events, simulate
+from repro.telemetry import MemorySink
+
+NUM_QUERIES = int(os.environ.get("REPRO_TELEMETRY_QUERIES", "4000"))
+P99_TOL = float(os.environ.get("REPRO_TELEMETRY_P99_TOL", "0.01"))
+NUM_EPS = 4
+NUM_REPLICAS = 4
+VICTIM = 2
+SLO_SERVICES = 3.0
+
+#: summary keys that must match exactly (counts and run bookkeeping).
+EXACT_KEYS = ("num_shed", "shed_rate", "rebalances", "slo_latency_s")
+#: (key, relative tolerance) pairs for the sketch-backed tails; the
+#: p99 gate is the acceptance criterion, the rest catch gross drift.
+REL_KEYS = (
+    ("p99_latency_s", None),  # None -> P99_TOL
+    ("p50_latency_s", 0.02),
+    ("mean_latency_s", 1e-9),
+    ("goodput_qps", 0.01),
+    ("offered_load_qps", 1e-9),
+    ("achieved_load_qps", 1e-9),
+)
+#: absolute-tolerance keys (already-normalized rates).
+ABS_KEYS = (("slo_attainment", 0.005),)
+
+
+def _rel(a: float, b: float) -> float:
+    if math.isnan(a) and math.isnan(b):
+        return 0.0
+    if a == b:
+        return 0.0
+    return abs(a - b) / max(abs(a), abs(b), 1e-12)
+
+
+def check_pair(scope: str, dense: dict, stream: dict, failures: list) -> dict:
+    """Gate one dense/streaming summary pair; return the diff record."""
+    diffs = {"scope": scope, "dense": dense, "streaming": stream,
+             "key_sets_equal": set(dense) == set(stream)}
+    if not diffs["key_sets_equal"]:
+        failures.append(
+            f"{scope}: summary key sets differ "
+            f"({sorted(set(dense) ^ set(stream))})")
+        return diffs
+    rel_report = {}
+    for key in EXACT_KEYS:
+        if key in dense and float(dense[key]) != float(stream[key]):
+            failures.append(f"{scope}: {key} diverged "
+                            f"(dense {dense[key]} vs "
+                            f"streaming {stream[key]})")
+    for key, tol in REL_KEYS:
+        tol = P99_TOL if tol is None else tol
+        rel = _rel(float(dense[key]), float(stream[key]))
+        rel_report[key] = rel
+        if rel > tol:
+            failures.append(f"{scope}: {key} rel err {rel:.4f} > {tol}")
+    for key, tol in ABS_KEYS:
+        err = abs(float(dense[key]) - float(stream[key]))
+        rel_report[key] = err
+        if err > tol:
+            failures.append(f"{scope}: {key} abs err {err:.4f} > {tol}")
+    diffs["errors"] = rel_report
+    return diffs
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    probe = simulate(db, NUM_EPS, scheduler="none", events=[],
+                     num_queries=10)
+    cap = probe.peak_throughput
+    slo = SLO_SERVICES * float(probe.service_latencies[-1])
+    failures: list = []
+    records = []
+
+    # -- single pipeline ---------------------------------------------------
+    pipe_kw = dict(
+        num_queries=NUM_QUERIES, scheduler="none", events=[],
+        workload="bursty",
+        workload_kwargs=dict(burst_rate=3.0 * cap, base_rate=0.5 * cap,
+                             mean_burst=2000.0 / cap, mean_gap=1000.0 / cap,
+                             seed=7),
+        admission="slo_shed", admission_kwargs=dict(slo=slo))
+    dense = simulate(db, NUM_EPS, **pipe_kw)
+    sink = MemorySink()
+    stream = simulate(db, NUM_EPS, trace_mode="streaming",
+                      metrics_sink=sink, sink_interval=1000, **pipe_kw)
+    records.append(check_pair("pipeline", dense.summary(), stream.summary(),
+                              failures))
+    if len(sink) == 0:
+        failures.append("pipeline: streaming run emitted no snapshots")
+    records[-1]["sink_emissions"] = len(sink)
+
+    # -- 4-replica fleet ---------------------------------------------------
+    fleet_events = [
+        dataclasses.replace(ev, replica=VICTIM)
+        for ev in generate_events(
+            NUM_QUERIES // NUM_REPLICAS, NUM_EPS, db.num_scenarios, 2,
+            100, 5)
+    ]
+    fleet_kw = dict(
+        scheduler="odin", alpha=10, num_queries=NUM_QUERIES,
+        events=fleet_events, router="odin_aware", workload="bursty",
+        workload_kwargs=dict(burst_rate=2.0 * NUM_REPLICAS * cap,
+                             base_rate=0.375 * NUM_REPLICAS * cap,
+                             mean_burst=80.0 / cap, mean_gap=250.0 / cap,
+                             seed=6),
+        admission="slo_shed", admission_kwargs=dict(slo=slo),
+        autoscaler="load_profile")
+    dense_ct = simulate_cluster(db, NUM_EPS, NUM_REPLICAS, **fleet_kw)
+    fleet_sink = MemorySink()
+    stream_ct = simulate_cluster(db, NUM_EPS, NUM_REPLICAS,
+                                 trace_mode="streaming",
+                                 metrics_sink=fleet_sink,
+                                 sink_interval=1000, **fleet_kw)
+    records.append(check_pair("fleet", dense_ct.summary(),
+                              stream_ct.summary(), failures))
+    if len(fleet_sink) == 0:
+        failures.append("fleet: streaming run emitted no snapshots")
+    records[-1]["sink_emissions"] = len(fleet_sink)
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "telemetry_smoke.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "num_queries": NUM_QUERIES,
+                   "p99_tolerance": P99_TOL, "records": records,
+                   "failures": failures}, f, indent=2, default=repr)
+
+    for rec in records:
+        errs = rec.get("errors", {})
+        print(f"{rec['scope']:9s} p99 dense "
+              f"{rec['dense']['p99_latency_s']:10.2f}  streaming "
+              f"{rec['streaming']['p99_latency_s']:10.2f}  "
+              f"rel {errs.get('p99_latency_s', float('nan')):.5f}  "
+              f"sink emits {rec['sink_emissions']}")
+    if failures:
+        print("telemetry_smoke FAILED: " + "; ".join(failures))
+        return 1
+    print(f"telemetry_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

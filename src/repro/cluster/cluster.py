@@ -32,8 +32,30 @@ from repro.cluster.trace import ClusterTrace
 from repro.control.base import AdmissionView
 from repro.control.registry import resolve_admission, resolve_autoscaler
 from repro.schedulers.runtime import RebalanceRuntime
+from repro.telemetry.streaming import (
+    DEFAULT_SINK_INTERVAL,
+    StreamingClusterTrace,
+    StreamingCollector,
+)
 from repro.workloads.base import QueryExecutor, Workload
 from repro.workloads.runner import PipelineRunner, resolve_arrivals
+
+
+def _fleet_snapshot(runners, extra: Optional[StreamingCollector],
+                    slo: float, num_active: int) -> dict:
+    """Aggregate per-replica collectors into one fleet snapshot for the
+    sink: counters sum exactly, sketches merge within tolerance."""
+    agg = StreamingCollector(slo=slo)
+    for runner in runners:
+        runner.flush_telemetry()
+        agg.absorb(runner.telemetry)
+    if extra is not None:
+        agg.absorb(extra)
+    reg = agg.registry
+    reg.gauge("num_replicas", "fleet size").set(len(runners))
+    reg.gauge("active_replicas",
+              "replicas in the routed set").set(num_active)
+    return reg.snapshot()
 
 
 @dataclasses.dataclass
@@ -109,7 +131,11 @@ class Cluster:
     def run(self, num_queries: int,
             workload: Union[str, Workload, None] = "closed",
             workload_kwargs: Optional[dict] = None,
-            scheduler_name: str = "") -> ClusterTrace:
+            scheduler_name: str = "",
+            trace_mode: str = "dense",
+            metrics_sink=None,
+            sink_interval: Optional[int] = None
+            ) -> Union[ClusterTrace, StreamingClusterTrace]:
         """Serve ``num_queries`` fleet arrivals of ``workload`` through
         the routed replicas; returns a :class:`ClusterTrace`.
 
@@ -120,24 +146,51 @@ class Cluster:
         its environment, polling its scheduler runtime, accounting its
         arrival queue — identical per-query semantics to
         ``run_pipeline``).
+
+        ``trace_mode="streaming"`` (docs/TELEMETRY.md) runs every
+        replica at flat memory and returns a
+        :class:`~repro.telemetry.StreamingClusterTrace` — same
+        ``summary()`` keys, fleet percentiles from merged per-replica
+        sketches.  ``metrics_sink`` receives fleet-aggregated snapshots
+        every ``sink_interval`` arrivals in either mode.
         """
+        if trace_mode not in ("dense", "streaming"):
+            raise ValueError(f"unknown trace_mode {trace_mode!r}; "
+                             f"expected 'dense' or 'streaming'")
+        streaming = trace_mode == "streaming"
         wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
                                              num_queries)
 
+        adm = self.admission
+        slo = float(getattr(adm, "slo", float("inf"))
+                    if adm is not None else float("inf"))
+        use_telemetry = streaming or metrics_sink is not None
+        # Fleet-level sheds never reach a replica, so they get their
+        # own collector (merged into the fleet view at read time).
+        fleet_extra = StreamingCollector(slo=slo) if use_telemetry else None
+
         # Pre-size each runner at its balanced share; a skewed router
-        # just grows that replica's arrays (doubling) as it serves.
+        # just grows that replica's arrays (doubling) as it serves —
+        # streaming runners stay at their fixed recycling capacity.
         share = -(-num_queries // len(self.replicas))
-        runners = [PipelineRunner(rep.executor, rep.runtime, share)
+        runners = [PipelineRunner(rep.executor, rep.runtime, share,
+                                  trace_mode=trace_mode,
+                                  telemetry=(StreamingCollector(slo=slo)
+                                             if use_telemetry else None))
                    for rep in self.replicas]
         # Outstanding completions per replica: popped against the
         # (monotone) decision clock to count in-system queries.
         outstanding: List[List[float]] = [[] for _ in self.replicas]
         last_assign = [-1] * len(self.replicas)
-        # Shed queries keep the sentinel -1 (admission control).
-        assignments = np.full(num_queries, -1, dtype=int)
-        local_indices = np.full(num_queries, -1, dtype=int)
+        # Shed queries keep the sentinel -1 (admission control); the
+        # per-arrival ledger is exactly what streaming mode must not
+        # materialize.
+        if streaming:
+            assignments = local_indices = None
+        else:
+            assignments = np.full(num_queries, -1, dtype=int)
+            local_indices = np.full(num_queries, -1, dtype=int)
 
-        adm = self.admission
         shed_check = (adm is not None
                       and not getattr(adm, "admits_all", False))
         observe = getattr(adm, "observe", None) if adm is not None else None
@@ -149,8 +202,15 @@ class Cluster:
         shed_arrivals: List[float] = []
         active_timeline: List[Tuple[int, Tuple[int, ...]]] = []
         cur_active: Optional[List[int]] = None
+        active_sum = 0.0
+        num_active = len(runners)
+        interval = (sink_interval if sink_interval is not None
+                    else DEFAULT_SINK_INTERVAL)
 
         for i in range(num_queries):
+            if metrics_sink is not None and i and i % interval == 0:
+                metrics_sink.emit(_fleet_snapshot(runners, fleet_extra,
+                                                  slo, num_active))
             if arrivals is not None:
                 arrival: Optional[float] = float(arrivals[i])
                 now = arrival
@@ -183,10 +243,16 @@ class Cluster:
                         f"{len(runners)}")
                 if active != cur_active:
                     cur_active = active
-                    active_timeline.append((i, tuple(active)))
+                    if not streaming:
+                        # The change-point list is unbounded in the
+                        # worst case; streaming keeps the running mean
+                        # (active_sum) instead.
+                        active_timeline.append((i, tuple(active)))
                 routed_views = [views[r] for r in active]
             else:
                 routed_views = views
+            active_sum += len(routed_views)
+            num_active = len(routed_views)
             pos = int(self.router.route(i, now, routed_views))
             if not 0 <= pos < len(routed_views):
                 raise ValueError(f"router {self.router_name!r} returned "
@@ -204,20 +270,31 @@ class Cluster:
                     est_service=v.est_bottleneck,
                     est_latency=v.est_latency)
                 if not adm.admit(view):
-                    shed_arrivals.append(now)
+                    if fleet_extra is not None:
+                        fleet_extra.observe_shed(now)
+                    if not streaming:
+                        shed_arrivals.append(now)
                     continue
-            local = runners[r].num_served
+            # total_served == num_served in dense mode; in streaming it
+            # keeps counting across the runner's array recycling, so
+            # backends see a stable local query index either way.
+            local = runners[r].total_served
             hook = self.replicas[r].on_assign
             if hook is not None:
                 hook(i, local, arrival)
             completion = runners[r].step(arrival)
             heapq.heappush(outstanding[r], completion)
             last_assign[r] = i
-            assignments[i] = r
-            local_indices[i] = local
+            if not streaming:
+                assignments[i] = r
+                local_indices[i] = local
             if observe is not None:
-                observe(float(runners[r].queue_delay[local]),
-                        float(runners[r].service_lat[local]))
+                # The row the step just wrote: num_served - 1 (== local
+                # in dense mode; streaming recycles indices, times don't
+                # move).
+                s = runners[r].num_served - 1
+                observe(float(runners[r].queue_delay[s]),
+                        float(runners[r].service_lat[s]))
 
         traces = [
             runner.finish(
@@ -225,16 +302,25 @@ class Cluster:
                 workload_name=wl_name,
                 peak_throughput=rep.peak_throughput)
             for rep, runner in zip(self.replicas, runners)]
+        if metrics_sink is not None:
+            metrics_sink.emit(_fleet_snapshot(runners, fleet_extra, slo,
+                                              num_active))
+        if streaming:
+            return StreamingClusterTrace(
+                router=self.router_name, workload=wl_name,
+                scheduler=scheduler_name, replicas=traces,
+                num_queries=num_queries,
+                admission=self.admission_name,
+                autoscaler=self.autoscaler_name,
+                slo_latency=slo, shed_collector=fleet_extra,
+                active_sum=active_sum)
         return ClusterTrace(router=self.router_name, workload=wl_name,
                             scheduler=scheduler_name, replicas=traces,
                             assignments=assignments,
                             local_indices=local_indices,
                             admission=self.admission_name,
                             autoscaler=self.autoscaler_name,
-                            slo_latency=float(getattr(adm, "slo",
-                                                      float("inf"))
-                                              if adm is not None
-                                              else float("inf")),
+                            slo_latency=slo,
                             shed_arrivals=np.asarray(shed_arrivals,
                                                      dtype=float),
                             active_timeline=active_timeline)
@@ -250,7 +336,11 @@ def run_cluster(replicas: Sequence[Replica],
                 admission: Union[str, object, None] = None,
                 admission_kwargs: Optional[dict] = None,
                 autoscaler: Union[str, object, None] = None,
-                autoscaler_kwargs: Optional[dict] = None) -> ClusterTrace:
+                autoscaler_kwargs: Optional[dict] = None,
+                trace_mode: str = "dense",
+                metrics_sink=None,
+                sink_interval: Optional[int] = None
+                ) -> Union[ClusterTrace, StreamingClusterTrace]:
     """Functional driver: build a :class:`Cluster` and serve one window."""
     cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs,
                       admission=admission,
@@ -259,4 +349,6 @@ def run_cluster(replicas: Sequence[Replica],
                       autoscaler_kwargs=autoscaler_kwargs)
     return cluster.run(num_queries, workload=workload,
                        workload_kwargs=workload_kwargs,
-                       scheduler_name=scheduler_name)
+                       scheduler_name=scheduler_name,
+                       trace_mode=trace_mode, metrics_sink=metrics_sink,
+                       sink_interval=sink_interval)

@@ -40,7 +40,10 @@ def serve_cluster(engines: Sequence,
                   admission: Union[str, object, None] = None,
                   admission_kwargs: Optional[dict] = None,
                   autoscaler: Union[str, object, None] = None,
-                  autoscaler_kwargs: Optional[dict] = None) -> ClusterTrace:
+                  autoscaler_kwargs: Optional[dict] = None,
+                  trace_mode: str = "dense",
+                  metrics_sink=None,
+                  sink_interval: Optional[int] = None) -> ClusterTrace:
     """Serve fleet ``queries`` through N live engines behind a router.
 
     ``engines`` — one :class:`~repro.serving.ServingEngine` per
@@ -82,7 +85,9 @@ def serve_cluster(engines: Sequence,
                         admission=admission,
                         admission_kwargs=admission_kwargs,
                         autoscaler=autoscaler,
-                        autoscaler_kwargs=autoscaler_kwargs)
+                        autoscaler_kwargs=autoscaler_kwargs,
+                        trace_mode=trace_mode, metrics_sink=metrics_sink,
+                        sink_interval=sink_interval)
     # Peak references only exist after measurement — stamp post-hoc,
     # exactly like ServingEngine.serve does for a single pipeline.
     for rep_trace, eng in zip(trace.replicas, engines):

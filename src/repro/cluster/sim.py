@@ -50,7 +50,10 @@ def simulate_cluster(db: LayerDatabase,
                      admission: Union[str, object, None] = None,
                      admission_kwargs: Optional[dict] = None,
                      autoscaler: Union[str, object, None] = None,
-                     autoscaler_kwargs: Optional[dict] = None
+                     autoscaler_kwargs: Optional[dict] = None,
+                     trace_mode: str = "dense",
+                     metrics_sink=None,
+                     sink_interval: Optional[int] = None
                      ) -> ClusterTrace:
     """Run one (scheduler, router, workload, events) fleet simulation.
 
@@ -138,4 +141,6 @@ def simulate_cluster(db: LayerDatabase,
                        admission=admission,
                        admission_kwargs=admission_kwargs,
                        autoscaler=autoscaler,
-                       autoscaler_kwargs=autoscaler_kwargs)
+                       autoscaler_kwargs=autoscaler_kwargs,
+                       trace_mode=trace_mode, metrics_sink=metrics_sink,
+                       sink_interval=sink_interval)

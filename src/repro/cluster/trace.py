@@ -216,7 +216,7 @@ class ClusterTrace:
                    "queries": int(self.replica_counts[r])}
             if len(t.latencies):
                 row.update(
-                    p50_latency=float(np.percentile(t.latencies, 50)),
+                    p50_latency=t.percentile(50),
                     p99_latency=t.tail_latency(99),
                     mean_queue_delay=t.mean_queue_delay,
                     steady_throughput=t.steady_throughput,

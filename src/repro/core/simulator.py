@@ -190,7 +190,10 @@ def simulate(db: LayerDatabase,
              max_chunk: Optional[int] = None,
              events_time_indexed: bool = False,
              admission: Union[str, object, None] = None,
-             admission_kwargs: Optional[dict] = None) -> PipelineTrace:
+             admission_kwargs: Optional[dict] = None,
+             trace_mode: str = "dense",
+             metrics_sink=None,
+             sink_interval: Optional[int] = None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -215,6 +218,11 @@ def simulate(db: LayerDatabase,
     (e.g. ``admission="slo_shed", admission_kwargs={"slo": ...}``);
     shed queries are reported through the trace's shed/goodput
     surface.  The default (no policy) admits everything.
+
+    ``trace_mode="streaming"`` / ``metrics_sink`` select the flat-memory
+    telemetry path (docs/TELEMETRY.md): streaming runs return a
+    :class:`~repro.telemetry.StreamingTrace` with the same ``summary()``
+    keys, and a sink receives periodic metric snapshots in either mode.
     """
     if events is None:
         if events_time_indexed:
@@ -266,7 +274,9 @@ def simulate(db: LayerDatabase,
                         scheduler_name=sched_name, peak_throughput=peak,
                         chunking=chunking, max_chunk=max_chunk,
                         admission=admission,
-                        admission_kwargs=admission_kwargs)
+                        admission_kwargs=admission_kwargs,
+                        trace_mode=trace_mode, metrics_sink=metrics_sink,
+                        sink_interval=sink_interval)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

@@ -63,6 +63,16 @@ def main() -> None:
     ap.add_argument("--slo", type=float, default=0.0,
                     help="latency objective in seconds for --admission "
                          "slo_shed / adaptive_batch (0 = unset)")
+    ap.add_argument("--trace-mode", default="dense",
+                    choices=("dense", "streaming"),
+                    help="streaming folds per-query telemetry into "
+                         "constant-memory sketches/rollups instead of "
+                         "dense arrays (docs/TELEMETRY.md)")
+    ap.add_argument("--metrics-export", default="", metavar="PATH",
+                    help="write the final metrics registry to PATH after "
+                         "the run (.prom/.txt Prometheus text exposition, "
+                         "anything else JSON; needs --trace-mode "
+                         "streaming; docs/TELEMETRY.md)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -106,14 +116,26 @@ def main() -> None:
                          seed=args.seed)
     if args.admission in ("slo_shed", "adaptive_batch") and args.slo <= 0:
         ap.error(f"--admission {args.admission} requires --slo > 0")
+    if args.metrics_export and args.trace_mode != "streaming":
+        ap.error("--metrics-export needs --trace-mode streaming (the "
+                 "dense trace has no metrics registry)")
     adm_kwargs = {"slo": args.slo} if args.slo > 0 else None
     metrics = eng.serve(queries, schedule, workload=args.workload,
                         workload_kwargs=wl_kwargs,
                         max_batch=args.max_batch,
                         admission=args.admission,
-                        admission_kwargs=adm_kwargs)
+                        admission_kwargs=adm_kwargs,
+                        trace_mode=args.trace_mode)
     s = metrics.summary()
-    s["final_config"] = metrics.configs[-1]
+    configs = metrics.configs
+    s["final_config"] = configs[-1] if configs else None
+    if args.metrics_export:
+        from repro.telemetry import export_path_format, render_export
+        path, fmt = export_path_format(args.metrics_export)
+        with open(path, "w") as f:
+            f.write(render_export(metrics.registry, fmt))
+        if not args.json:
+            print(f"metrics registry ({fmt}) -> {path}")
     if args.json:
         print(json.dumps(s))
     else:

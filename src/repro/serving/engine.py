@@ -275,7 +275,10 @@ class ServingEngine:
               workload_kwargs: Optional[dict] = None,
               max_batch: int = 1,
               admission: Union[str, object, None] = None,
-              admission_kwargs: Optional[dict] = None) -> PipelineTrace:
+              admission_kwargs: Optional[dict] = None,
+              trace_mode: str = "dense",
+              metrics_sink=None,
+              sink_interval: Optional[int] = None) -> PipelineTrace:
         """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
         slowdown factors (>= 1.0)``.
 
@@ -298,6 +301,12 @@ class ServingEngine:
         0.25}`` — SLO in wall-clock seconds); shed queries are turned
         away before touching the executor and reported through the
         trace's shed/goodput surface (docs/CONTROL.md).
+
+        ``trace_mode="streaming"`` / ``metrics_sink`` select the
+        flat-memory telemetry path (docs/TELEMETRY.md), identically to
+        the simulator: streaming runs return a
+        :class:`~repro.telemetry.StreamingTrace`, sinks receive
+        periodic snapshots in either mode.
         """
         live = self.query_executor(queries, slowdown_schedule,
                                    max_batch=max_batch)
@@ -306,7 +315,10 @@ class ServingEngine:
                              workload_kwargs=workload_kwargs,
                              scheduler_name=self.scheduler,
                              admission=admission,
-                             admission_kwargs=admission_kwargs)
+                             admission_kwargs=admission_kwargs,
+                             trace_mode=trace_mode,
+                             metrics_sink=metrics_sink,
+                             sink_interval=sink_interval)
         # The peak reference only exists after measurement: stamp it
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()

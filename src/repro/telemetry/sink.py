@@ -1,0 +1,93 @@
+"""MetricsSink: the periodic snapshot hook for live observability.
+
+A sink receives metric snapshots *during* a run — the operator-facing
+signal dense traces cannot provide.  ``PipelineRunner``,
+``ServingEngine.serve``, and the cluster backends accept
+``metrics_sink=`` and call :meth:`MetricsSink.emit` roughly every
+``sink_interval`` served queries (plus once at run end), passing the
+current :meth:`MetricsRegistry.snapshot` dict.
+
+Emission cadence is measured in *queries*, not wall time, so runs stay
+deterministic: the same workload and seed produce the same sequence of
+snapshots.
+
+Built-ins cover the common cases; anything with an
+``emit(snapshot: dict) -> None`` method satisfies the protocol
+(structural typing — no subclassing required).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class MetricsSink(Protocol):
+    """Anything that can receive periodic metric snapshots."""
+
+    def emit(self, snapshot: Dict[str, object]) -> None:
+        """Receive one snapshot.  Must not mutate it."""
+        ...
+
+
+class MemorySink:
+    """Collects snapshots in a list — tests and notebook plotting."""
+
+    def __init__(self):
+        self.snapshots: List[Dict[str, object]] = []
+
+    def emit(self, snapshot: Dict[str, object]) -> None:
+        self.snapshots.append(snapshot)
+
+    def __len__(self) -> int:
+        return len(self.snapshots)
+
+    @property
+    def last(self) -> Optional[Dict[str, object]]:
+        return self.snapshots[-1] if self.snapshots else None
+
+
+class CallbackSink:
+    """Adapts a plain callable into a sink."""
+
+    def __init__(self, fn: Callable[[Dict[str, object]], None]):
+        self._fn = fn
+
+    def emit(self, snapshot: Dict[str, object]) -> None:
+        self._fn(snapshot)
+
+
+class JsonLinesSink:
+    """Appends one JSON object per snapshot to a stream or file.
+
+    >>> sink = JsonLinesSink("metrics.jsonl")   # or JsonLinesSink()
+    >>> # ... run with metrics_sink=sink ...
+    >>> sink.close()
+    """
+
+    def __init__(self, path_or_stream=None):
+        if path_or_stream is None:
+            self._stream = sys.stdout
+            self._owns = False
+        elif hasattr(path_or_stream, "write"):
+            self._stream = path_or_stream
+            self._owns = False
+        else:
+            self._stream = open(path_or_stream, "a")
+            self._owns = True
+
+    def emit(self, snapshot: Dict[str, object]) -> None:
+        self._stream.write(json.dumps(snapshot) + "\n")
+        self._stream.flush()
+
+    def close(self) -> None:
+        if self._owns:
+            self._stream.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -66,6 +66,7 @@ from typing import TYPE_CHECKING, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.control.base import AdmissionView
+from repro.telemetry.streaming import StreamingCollector, StreamingTrace
 from repro.workloads.base import QueryExecutor, Workload
 from repro.workloads.registry import make_workload
 from repro.workloads.trace import PipelineTrace
@@ -104,10 +105,20 @@ def resolve_arrivals(workload: Union[str, Workload, None],
     wl = resolve_workload(workload, workload_kwargs)
     wl_name = getattr(wl, "name", type(wl).__name__)
     gaps = wl.inter_arrivals(num_queries) if wl.open_loop else None
-    if gaps is not None and len(gaps) != num_queries:
+    if gaps is None:
+        return wl_name, None
+    if len(gaps) != num_queries:
         raise ValueError(f"workload {wl_name!r} produced {len(gaps)} "
                          f"inter-arrivals for {num_queries} queries")
-    return wl_name, (np.cumsum(gaps) if gaps is not None else None)
+    # Cumsum in place when the generator handed us a fresh array it
+    # owns: at 10M+ queries the second O(n) float64 buffer is the
+    # difference between flat and doubled RSS.  Workloads may legally
+    # return views (TraceWorkload tiles a template), so fall back to an
+    # out-of-place cumsum unless the array is provably ours to reuse.
+    if (isinstance(gaps, np.ndarray) and gaps.dtype == np.float64
+            and gaps.flags.owndata and gaps.flags.writeable):
+        return wl_name, np.cumsum(gaps, out=gaps)
+    return wl_name, np.cumsum(gaps)
 
 
 class _CompletionLedger:
@@ -238,10 +249,21 @@ class PipelineRunner:
                  capacity: int,
                  chunking: bool = True,
                  max_chunk: Optional[int] = None,
-                 admission: Optional[AdmissionPolicy] = None):
+                 admission: Optional[AdmissionPolicy] = None,
+                 trace_mode: str = "dense",
+                 telemetry: Optional[StreamingCollector] = None):
+        if trace_mode not in ("dense", "streaming"):
+            raise ValueError(f"unknown trace_mode {trace_mode!r}; "
+                             f"expected 'dense' or 'streaming'")
+        if trace_mode == "streaming" and telemetry is None:
+            telemetry = StreamingCollector(
+                slo=float(getattr(admission, "slo", float("inf"))
+                          if admission is not None else float("inf")))
         self.executor = executor
         self.runtime = runtime
         self.capacity = max(1, int(capacity))
+        self.trace_mode = trace_mode
+        self.telemetry = telemetry
 
         self.admission = admission
         if admission is not None:
@@ -284,6 +306,24 @@ class PipelineRunner:
         # policy's steady detect is stable (pure under unchanged
         # conditions).
         self._poll_once = mode == "vector" and runtime.steady_poll_stable()
+
+        # Streaming mode: the result arrays are a bounded recycling
+        # scratch, not the run's storage — cap them near the chunk cap
+        # and flush to the collector whenever the next chunk might not
+        # fit (the +2 leaves room for a chunk's polled-but-unchunkable
+        # leftover query).  Dense mode with a collector attached flushes
+        # on a fixed cadence without recycling, so sinks still see
+        # periodic snapshots at zero behavioural change.
+        self._streaming = trace_mode == "streaming"
+        self._keep_configs = not self._streaming
+        self._last_config: Optional[List[int]] = None
+        if self._streaming:
+            self.capacity = min(self.capacity,
+                                max(8192, 2 * (self._chunk_cap + 2)))
+            self.capacity = max(self.capacity, self._chunk_cap + 2)
+        self._flush_at = self.capacity - (self._chunk_cap + 2)
+        self.num_flushed = 0           # recycled-away rows (streaming)
+        self._stream_pos = 0           # first unobserved row (dense+sink)
 
         n = self.capacity
         self.latencies = np.zeros(n)
@@ -336,7 +376,10 @@ class PipelineRunner:
         rec = self.executor.execute(gq, step)
         self.throughputs[s] = rec.throughput
         self.serial_mask[s] = step.serial
-        self.configs_trace.append(list(step.config))
+        if self._keep_configs:
+            self.configs_trace.append(list(step.config))
+        else:
+            self._last_config = list(step.config)
         # A serial trial runs on the drained pipeline, so it cannot
         # start until every in-flight pipelined query has completed.
         ready = (max(self.free_at, self.drain_at) if step.serial
@@ -377,7 +420,9 @@ class PipelineRunner:
             raise ValueError(f"execute_many returned {len(rec.throughputs)} "
                              f"records for a chunk of {n}")
         self.throughputs[sl] = rec.throughputs
-        if steps[0] is steps[-1]:
+        if not self._keep_configs:
+            self._last_config = list(steps[-1].config)
+        elif steps[0] is steps[-1]:
             # poll-once chunks replicate one step: share one row object
             # instead of materializing n copies (entries are read-only
             # by convention; the scalar path appends fresh lists).
@@ -409,9 +454,14 @@ class PipelineRunner:
             est_latency=self.runtime.estimated_service_latency())
         if self.admission.admit(view):
             return True
-        self.shed_indices.append(gq)
-        self.shed_arrivals.append(self.free_at if arrival is None
-                                  else float(arrival))
+        t = self.free_at if arrival is None else float(arrival)
+        if self.telemetry is not None:
+            self.telemetry.observe_shed(t)
+        if not self._streaming:
+            # Streaming keeps sheds as counters only — these lists are
+            # O(shed) and a saturating policy sheds millions.
+            self.shed_indices.append(gq)
+            self.shed_arrivals.append(t)
         return False
 
     def _admit_horizon(self, gq0: int, limit: int,
@@ -461,6 +511,44 @@ class PipelineRunner:
             self._observe(float(self.queue_delay[s]),
                           float(self.service_lat[s]))
 
+    # -- telemetry flushing (repro.telemetry; docs/TELEMETRY.md) -------------
+    @property
+    def total_served(self) -> int:
+        """Admitted queries over the whole run, including rows already
+        recycled into the collector (= :attr:`num_served` in dense
+        mode, where nothing is recycled)."""
+        return self.num_flushed + self.num_served
+
+    def _should_flush(self) -> bool:
+        if self._streaming:
+            return self.num_served >= self._flush_at
+        return self.num_served - self._stream_pos >= 1024
+
+    def flush_telemetry(self) -> None:
+        """Feed every row since the last flush to the collector; in
+        streaming mode the arrays are then recycled (dense indices
+        reset — the ledger's *times* carry all cross-flush state)."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        s0, s1 = self._stream_pos, self.num_served
+        if s1 > s0:
+            tel.observe_chunk(
+                latencies=self.latencies[s0:s1],
+                service_latencies=self.service_lat[s0:s1],
+                queue_delays=self.queue_delay[s0:s1],
+                throughputs=self.throughputs[s0:s1],
+                serial_mask=self.serial_mask[s0:s1],
+                arrival_times=self.arrival_t[s0:s1],
+                completion_times=self.completion_t[s0:s1],
+                queue_depths=self.queue_depth[s0:s1])
+        if self._streaming:
+            self.num_flushed += s1
+            self.num_served = 0
+            self._stream_pos = 0
+        else:
+            self._stream_pos = s1
+
     # -- incremental driving (one query at a time) --------------------------
     def step(self, arrival: Optional[float] = None) -> float:
         """Serve the next query, arriving at ``arrival`` (None = the
@@ -472,6 +560,8 @@ class PipelineRunner:
         completion time, which callers (the cluster's routers) use for
         outstanding-work accounting.
         """
+        if self.telemetry is not None and self._should_flush():
+            self.flush_telemetry()
         gq = self.num_offered          # global index (= dense when no sheds)
         s = self.num_served
         self._ensure_capacity(s + 1)
@@ -492,15 +582,22 @@ class PipelineRunner:
         path where the executor supports it.  ``arrivals`` is indexed
         by the *global* query index; shed queries (admission control)
         consume an index without executing."""
-        self._ensure_capacity(self.num_served + num_queries)
+        if not self._streaming:
+            # Streaming keeps the arrays at their fixed recycling
+            # capacity; growing them to the run length is exactly the
+            # O(n) footprint the mode exists to avoid.
+            self._ensure_capacity(self.num_served + num_queries)
         executor, runtime = self.executor, self.runtime
         mode = self._mode
         rc_thr = self.rc_thr
         shed_check, observe = self._shed_check, self._observe
+        telemetry = self.telemetry
 
         q = self.num_offered
         end = q + num_queries
         while q < end:
+            if telemetry is not None and self._should_flush():
+                self.flush_telemetry()
             arrival = arrivals[q] if arrivals is not None else None
             # -- admit or shed, with the actual ledger --------------------
             if shed_check and not self._admit(q, arrival):
@@ -606,16 +703,33 @@ class PipelineRunner:
     # -- result --------------------------------------------------------------
     def finish(self, scheduler_name: str = "",
                workload_name: str = "closed",
-               peak_throughput: float = float("nan")) -> PipelineTrace:
+               peak_throughput: float = float("nan")
+               ) -> Union[PipelineTrace, StreamingTrace]:
         """Freeze the run into a :class:`PipelineTrace` (arrays trimmed
         to the number of queries actually served; shed queries are
-        reported through the trace's shed/goodput surface)."""
-        n = self.num_served
+        reported through the trace's shed/goodput surface).  In
+        streaming mode the remaining rows are flushed and the result is
+        the collector's :class:`StreamingTrace` instead."""
         admission_name = ("none" if self.admission is None
                           else getattr(self.admission, "name",
                                        type(self.admission).__name__))
         slo = float(getattr(self.admission, "slo", float("inf"))
                     if self.admission is not None else float("inf"))
+        if self.telemetry is not None:
+            self.flush_telemetry()
+        if self._streaming:
+            return self.telemetry.finish(
+                scheduler=scheduler_name, workload=workload_name,
+                peak_throughput=peak_throughput, admission=admission_name,
+                num_rebalances=self.runtime.num_rebalances
+                - self._rebalances0,
+                total_trials=self.runtime.total_trials - self._trials0,
+                mitigation_lengths=list(
+                    self.runtime.mitigation_lengths[self._mitigations0:]),
+                final_config=self._last_config)
+        if self.telemetry is not None:
+            self.telemetry.emit()     # final sink snapshot (dense+sink)
+        n = self.num_served
         return PipelineTrace(
             scheduler=scheduler_name,
             latencies=self.latencies[:n],
@@ -651,7 +765,11 @@ def run_pipeline(executor: QueryExecutor,
                  chunking: bool = True,
                  max_chunk: Optional[int] = None,
                  admission: Union[str, object, None] = None,
-                 admission_kwargs: Optional[dict] = None) -> PipelineTrace:
+                 admission_kwargs: Optional[dict] = None,
+                 trace_mode: str = "dense",
+                 metrics_sink=None,
+                 sink_interval: Optional[int] = None
+                 ) -> Union[PipelineTrace, StreamingTrace]:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
 
@@ -668,11 +786,29 @@ def run_pipeline(executor: QueryExecutor,
     docs/CONTROL.md).  ``None`` / ``"none"`` admits everything —
     closed-loop results are bit-identical to a run without a control
     plane either way.
+
+    ``trace_mode="streaming"`` (docs/TELEMETRY.md) accumulates metrics
+    online at flat memory and returns a
+    :class:`~repro.telemetry.StreamingTrace` — same ``summary()`` keys,
+    percentiles within sketch tolerance.  ``metrics_sink`` receives
+    periodic :class:`~repro.telemetry.MetricsRegistry` snapshots every
+    ~``sink_interval`` queries in *either* mode (dense results stay
+    bit-identical with a sink attached).
     """
     # Deferred import: repro.control registers its builtins on first
     # use; the run loop itself only needs the resolver.
     from repro.control.registry import resolve_admission
     policy = resolve_admission(admission, admission_kwargs)
+
+    telemetry = None
+    if trace_mode == "streaming" or metrics_sink is not None:
+        from repro.telemetry.streaming import DEFAULT_SINK_INTERVAL
+        telemetry = StreamingCollector(
+            slo=float(getattr(policy, "slo", float("inf"))
+                      if policy is not None else float("inf")),
+            sink=metrics_sink,
+            sink_interval=(sink_interval if sink_interval is not None
+                           else DEFAULT_SINK_INTERVAL))
 
     wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
                                          num_queries)
@@ -685,7 +821,8 @@ def run_pipeline(executor: QueryExecutor,
 
     runner = PipelineRunner(executor, runtime, num_queries,
                             chunking=chunking, max_chunk=max_chunk,
-                            admission=policy)
+                            admission=policy, trace_mode=trace_mode,
+                            telemetry=telemetry)
     runner.run(num_queries, arrivals)
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,

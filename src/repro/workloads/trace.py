@@ -19,6 +19,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.telemetry.sketch import _percentile_sorted
+
 
 @dataclasses.dataclass
 class PipelineTrace:
@@ -63,6 +65,25 @@ class PipelineTrace:
             self.shed_arrivals = np.empty(0)
         else:
             self.shed_arrivals = np.asarray(self.shed_arrivals, dtype=float)
+        # Percentile reads share one sort per field (summary() alone
+        # makes three; rows() adds more) — sorted once, cached here.
+        self._sorted_cache: Dict[str, np.ndarray] = {}
+
+    # -- percentiles (one sort per field, reused for every read) -------------
+    def percentile(self, pct: float, field: str = "latencies") -> float:
+        """Percentile of a per-query array field, from a cached sort.
+
+        Bit-identical to ``np.percentile(getattr(self, field), pct)``
+        (linear interpolation), but the O(n log n) sort happens once
+        per field per trace instead of once per read.  NaN-safe: an
+        empty trace (admission shed everything) reads as NaN instead
+        of raising.
+        """
+        cached = self._sorted_cache.get(field)
+        if cached is None:
+            cached = np.sort(np.asarray(getattr(self, field)))
+            self._sorted_cache[field] = cached
+        return _percentile_sorted(cached, pct)
 
     # -- compat surface (old ServeMetrics field names) ----------------------
     @property
@@ -78,6 +99,8 @@ class PipelineTrace:
     # -- rebalance accounting ------------------------------------------------
     @property
     def rebalance_fraction(self) -> float:
+        if not len(self.serial_mask):
+            return float("nan")
         return float(np.mean(self.serial_mask))
 
     @property
@@ -86,21 +109,31 @@ class PipelineTrace:
         pipeline's operating rate, which is what the paper's Fig. 6
         reports (exploration overhead is Fig. 8's separate metric)."""
         pipe = self.throughputs[~self.serial_mask]
-        return float(pipe.mean()) if len(pipe) else float(
-            self.throughputs.mean())
+        if len(pipe):
+            return float(pipe.mean())
+        if len(self.throughputs):
+            return float(self.throughputs.mean())
+        return float("nan")
 
     # -- latency -----------------------------------------------------------
     def tail_latency(self, pct: float = 99.0) -> float:
-        return float(np.percentile(self.latencies, pct))
+        return self.percentile(pct)
 
     @property
     def mean_queue_delay(self) -> float:
+        if not len(self.queue_delays):
+            return float("nan")
         return float(np.mean(self.queue_delays))
 
     # -- SLO --------------------------------------------------------------
     def slo_violations(self, slo_level: float,
                        reference: str = "peak") -> float:
-        """Fraction of queries with throughput below slo_level × reference."""
+        """Fraction of queries with throughput below slo_level × reference.
+
+        NaN for an empty trace (nothing was admitted, so the fraction
+        is undefined)."""
+        if not len(self.throughputs):
+            return float("nan")
         if reference == "peak":
             target = slo_level * self.peak_throughput
             return float(np.mean(self.throughputs < target))
@@ -205,16 +238,26 @@ class PipelineTrace:
     SUMMARY_SLO_LEVEL = 0.9
 
     def summary(self) -> Dict[str, float]:
-        """Flat metric dict — identical keys for sim and live runs."""
+        """Flat metric dict — identical keys for sim and live runs.
+
+        NaN-safe on an empty trace (zero admitted queries): every
+        per-query statistic reads as NaN; counts and shed accounting
+        stay exact.  Percentile keys share one cached sort per field
+        (:meth:`percentile`) instead of re-sorting per read.
+        """
+        n = self.num_admitted
+        nan = float("nan")
         peak_known = np.isfinite(self.peak_throughput)
         return {
-            "mean_latency_s": float(self.latencies.mean()),
-            "p50_latency_s": float(np.percentile(self.latencies, 50)),
+            "mean_latency_s": float(self.latencies.mean()) if n else nan,
+            "p50_latency_s": self.percentile(50),
             "p99_latency_s": self.tail_latency(99),
-            "mean_service_latency_s": float(self.service_latencies.mean()),
+            "mean_service_latency_s": (float(self.service_latencies.mean())
+                                       if n else nan),
             "mean_queue_delay_s": self.mean_queue_delay,
-            "p99_queue_delay_s": float(np.percentile(self.queue_delays, 99)),
-            "mean_throughput_qps": float(self.throughputs.mean()),
+            "p99_queue_delay_s": self.percentile(99, "queue_delays"),
+            "mean_throughput_qps": (float(self.throughputs.mean())
+                                    if n else nan),
             "steady_throughput_qps": self.steady_throughput,
             "peak_throughput_qps": float(self.peak_throughput),
             "offered_load_qps": self.offered_load,

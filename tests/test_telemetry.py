@@ -1,0 +1,501 @@
+"""repro.telemetry: sketch accuracy/mergeability, windowed rollups,
+metrics registry + export, sinks, and trace_mode="streaming" parity
+with the dense trace on both simulate() and simulate_cluster()."""
+import dataclasses
+import io
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st  # optional-dep shim
+
+from repro.cluster import simulate_cluster
+from repro.core import generate_events, simulate, synthetic_database
+from repro.telemetry import (
+    CallbackSink,
+    JsonLinesSink,
+    MemorySink,
+    MetricsRegistry,
+    MetricsSink,
+    QuantileSketch,
+    StreamingCollector,
+    StreamingTrace,
+    WindowedRollup,
+    export_path_format,
+    render_export,
+)
+from repro.telemetry.sketch import _percentile_sorted
+
+PCTS = (0.0, 1.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+@pytest.fixture(scope="module")
+def cap(db):
+    return simulate(db, 4, scheduler="none", events=[],
+                    num_queries=10).peak_throughput
+
+
+@pytest.fixture(scope="module")
+def service(db):
+    t = simulate(db, 4, scheduler="none", events=[], num_queries=10)
+    return float(t.service_latencies[-1])
+
+
+class ShedAll:
+    """Admission policy that sheds every arrival (zero-admitted runs)."""
+
+    admits_all = False
+    slo = 1.0
+
+    def admit(self, view):
+        return False
+
+    def reset(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# QuantileSketch
+# ---------------------------------------------------------------------------
+
+def test_sketch_exact_below_buffer():
+    rng = np.random.default_rng(0)
+    values = rng.lognormal(0.0, 1.0, size=1000)
+    sk = QuantileSketch()
+    sk.add(values[:400])
+    sk.add(values[400:])
+    for pct in PCTS:
+        assert sk.percentile(pct) == np.percentile(values, pct)
+    assert sk.n == 1000
+    assert sk.min == values.min() and sk.max == values.max()
+    assert sk.sum == pytest.approx(values.sum(), rel=1e-12)
+    assert sk.mean == pytest.approx(values.mean(), rel=1e-12)
+
+
+def test_sketch_accuracy_compressed():
+    rng = np.random.default_rng(1)
+    values = rng.lognormal(0.0, 1.5, size=200_000)
+    sk = QuantileSketch()
+    for chunk in np.array_split(values, 37):
+        sk.add(chunk)
+    assert sk.n == values.size
+    for pct, tol in ((50.0, 0.005), (90.0, 0.005), (99.0, 0.01)):
+        exact = np.percentile(values, pct)
+        assert abs(sk.percentile(pct) - exact) / exact < tol
+    # Extremes stay exact: the sketch tracks min/max separately.
+    assert sk.percentile(0.0) == values.min()
+    assert sk.percentile(100.0) == values.max()
+
+
+def test_sketch_merged_matches_whole():
+    rng = np.random.default_rng(2)
+    values = rng.lognormal(0.0, 1.0, size=200_000)
+    shards = [QuantileSketch() for _ in range(4)]
+    for shard, chunk in zip(shards, np.array_split(values, 4)):
+        shard.add(chunk)
+    merged = QuantileSketch.merged(shards)
+    assert merged.n == values.size
+    assert merged.min == values.min() and merged.max == values.max()
+    for pct in (50.0, 99.0):
+        exact = np.percentile(values, pct)
+        assert abs(merged.percentile(pct) - exact) / exact < 0.01
+    # Merging must not mutate the shards.
+    assert shards[0].n == values.size // 4
+
+
+def test_sketch_deterministic():
+    rng = np.random.default_rng(3)
+    values = rng.exponential(2.0, size=50_000)
+    a, b = QuantileSketch(), QuantileSketch()
+    for chunk in np.array_split(values, 11):
+        a.add(chunk)
+        b.add(chunk)
+    for pct in PCTS:
+        assert a.percentile(pct) == b.percentile(pct)
+
+
+def test_sketch_empty_and_cdf():
+    sk = QuantileSketch()
+    assert sk.n == 0 and len(sk) == 0
+    assert math.isnan(sk.quantile(0.5))
+    assert math.isnan(sk.mean)
+    rng = np.random.default_rng(4)
+    values = rng.normal(10.0, 2.0, size=30_000)
+    sk.add(values)
+    exact = float((values <= 10.0).mean())
+    assert abs(sk.cdf(10.0) - exact) < 0.01
+    assert sk.cdf(values.min() - 1.0) == 0.0
+    assert sk.cdf(values.max() + 1.0) == 1.0
+    xs = np.linspace(values.min(), values.max(), 50)
+    cdf = [sk.cdf(float(x)) for x in xs]
+    assert all(a <= b + 1e-12 for a, b in zip(cdf, cdf[1:]))
+
+
+def test_sketch_copy_independent():
+    sk = QuantileSketch()
+    sk.add(np.arange(100.0))
+    cp = sk.copy()
+    cp.add(np.full(100, 1e6))
+    assert sk.n == 100 and cp.n == 200
+    assert sk.max == 99.0 and cp.max == 1e6
+
+
+def test_sketch_memory_bounded():
+    rng = np.random.default_rng(5)
+    sk = QuantileSketch()
+    for _ in range(50):
+        sk.add(rng.lognormal(0.0, 1.0, size=10_000))
+    assert sk.n == 500_000
+    # Centroids + buffer stay bounded regardless of n.
+    assert sk._means.size <= 2 * sk.compression
+    assert sk._buffered <= sk.buffer_size
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e6,
+                           allow_nan=False, allow_infinity=False),
+                min_size=1, max_size=500))
+def test_sketch_exact_path_property(values):
+    values = np.asarray(values, dtype=np.float64)
+    sk = QuantileSketch()
+    sk.add(values)
+    for pct in (50.0, 99.0):
+        assert sk.percentile(pct) == np.percentile(values, pct)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=1e-3, max_value=1e6,
+                           allow_nan=False, allow_infinity=False),
+                min_size=2, max_size=500),
+       st.integers(min_value=1, max_value=499))
+def test_sketch_merge_property(values, cut):
+    values = np.asarray(values, dtype=np.float64)
+    cut = min(cut, values.size - 1)
+    a, b = QuantileSketch(), QuantileSketch()
+    a.add(values[:cut])
+    b.add(values[cut:])
+    merged = QuantileSketch.merged([a, b])
+    # Both shards and the merge stay under the exact buffer, so the
+    # merged sketch must reproduce numpy's percentiles bit-exactly.
+    for pct in (50.0, 99.0):
+        assert merged.percentile(pct) == np.percentile(values, pct)
+
+
+def test_percentile_sorted_matches_numpy():
+    rng = np.random.default_rng(6)
+    for _ in range(25):
+        values = rng.lognormal(0.0, 1.0, size=rng.integers(1, 400))
+        s = np.sort(values)
+        for pct in PCTS:
+            assert _percentile_sorted(s, pct) == np.percentile(values, pct)
+    assert math.isnan(_percentile_sorted(np.empty(0), 50.0))
+
+
+# ---------------------------------------------------------------------------
+# WindowedRollup
+# ---------------------------------------------------------------------------
+
+def test_rollup_conserves_counts_under_collapse():
+    rng = np.random.default_rng(7)
+    roll = WindowedRollup(width=1.0, max_windows=16)
+    times = np.sort(rng.uniform(0.0, 5000.0, size=10_000))
+    lats = rng.exponential(1.0, size=10_000)
+    for t_chunk, l_chunk in zip(np.array_split(times, 13),
+                                np.array_split(lats, 13)):
+        roll.observe_arrivals(t_chunk)
+        roll.observe_completions(t_chunk, l_chunk)
+    assert roll.num_windows <= 16
+    assert roll.arrivals.sum() == 10_000
+    assert roll.completions.sum() == 10_000
+    assert roll.latency_sum.sum() == pytest.approx(lats.sum(), rel=1e-9)
+    assert roll.latency_max.max() == pytest.approx(lats.max())
+    edges = roll.edges()
+    assert edges.size == roll.num_windows
+    assert edges[0] <= times[0] and edges[-1] <= times[-1]
+
+
+def test_rollup_merge_conserves():
+    rng = np.random.default_rng(8)
+    a, b = WindowedRollup(width=2.0), WindowedRollup(width=3.0)
+    ta = np.sort(rng.uniform(0.0, 100.0, size=500))
+    tb = np.sort(rng.uniform(50.0, 400.0, size=700))
+    a.observe_arrivals(ta)
+    b.observe_arrivals(tb)
+    b.observe_shed(tb[:100])
+    merged = a.merge(b)
+    assert merged is a  # documented in-place fold
+    assert merged.arrivals.sum() == 1200
+    assert merged.shed.sum() == 100
+    assert b.arrivals.sum() == 700  # the folded operand is untouched
+
+
+def test_rollup_rates():
+    roll = WindowedRollup(width=10.0)
+    roll.observe_arrivals(np.array([1.0, 2.0, 11.0, 12.0, 13.0]))
+    starts, offered, completed = roll.rates()
+    assert starts.size == offered.size == completed.size
+    assert offered[0] == pytest.approx(0.2)   # 2 arrivals / width 10
+    assert offered[1] == pytest.approx(0.3)
+    assert completed.sum() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry + export
+# ---------------------------------------------------------------------------
+
+def test_registry_basics():
+    reg = MetricsRegistry(namespace="repro")
+    c = reg.counter("queries_total", "queries seen")
+    c.inc()
+    c.inc(4)
+    g = reg.gauge("queue_depth")
+    g.set(7.0)
+    s = reg.summary("latency_seconds")
+    s.observe(np.arange(1.0, 101.0))
+    assert c.value == 5.0
+    assert g.value == 7.0
+    assert s.count == 100
+    assert s.quantile(0.5) == np.percentile(np.arange(1.0, 101.0), 50)
+    # get-or-create returns the same object; kind mismatch raises.
+    assert reg.counter("queries_total") is c
+    with pytest.raises(TypeError):
+        reg.gauge("queries_total")
+    assert "queries_total" in reg
+    snap = reg.snapshot()
+    assert snap["repro_queries_total"] == 5.0
+    assert snap["repro_latency_seconds"]["count"] == 100
+
+
+def test_registry_merge():
+    a, b = MetricsRegistry("n"), MetricsRegistry("n")
+    a.counter("x").inc(2)
+    b.counter("x").inc(3)
+    a.gauge("g").set(1.0)
+    b.gauge("g").set(9.0)
+    a.summary("s").observe([1.0, 2.0])
+    b.summary("s").observe([3.0, 4.0])
+    m = a.merge(b)
+    assert m.counter("x").value == 5.0
+    assert m.gauge("g").value == 9.0  # last-writer wins
+    assert m.summary("s").count == 4
+
+
+def test_prometheus_and_json_export():
+    reg = MetricsRegistry(namespace="repro")
+    reg.counter("queries_total", "total queries").inc(3)
+    reg.gauge("depth").set(float("nan"))
+    reg.summary("latency_seconds").observe([1.0, 2.0, 3.0, 4.0])
+    text = reg.prometheus()
+    assert "# TYPE repro_queries_total counter" in text
+    assert "repro_queries_total 3.0" in text
+    assert "repro_depth NaN" in text
+    assert 'repro_latency_seconds{quantile="0.99"}' in text
+    assert "repro_latency_seconds_count 4" in text
+    assert text == render_export(reg, "prometheus")
+    decoded = json.loads(render_export(reg, "json"))
+    assert decoded["repro_queries_total"] == 3.0
+    with pytest.raises(ValueError):
+        render_export(reg, "xml")
+    assert export_path_format("m.prom") == ("m.prom", "prometheus")
+    assert export_path_format("m.txt") == ("m.txt", "prometheus")
+    assert export_path_format("m.json") == ("m.json", "json")
+
+
+def test_invalid_metric_name_rejected():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("bad name!")
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+def test_sinks(tmp_path):
+    mem = MemorySink()
+    assert isinstance(mem, MetricsSink)
+    assert mem.last is None
+    mem.emit({"a": 1})
+    mem.emit({"a": 2})
+    assert len(mem) == 2 and mem.last == {"a": 2}
+
+    seen = []
+    cb = CallbackSink(seen.append)
+    cb.emit({"b": 3})
+    assert seen == [{"b": 3}]
+
+    path = tmp_path / "metrics.jsonl"
+    with JsonLinesSink(str(path)) as sink:
+        sink.emit({"c": 4})
+        sink.emit({"c": 5})
+    lines = path.read_text().splitlines()
+    assert [json.loads(ln)["c"] for ln in lines] == [4, 5]
+
+    buf = io.StringIO()
+    JsonLinesSink(buf).emit({"d": 6})
+    assert json.loads(buf.getvalue())["d"] == 6
+
+
+# ---------------------------------------------------------------------------
+# StreamingCollector / StreamingTrace vs the dense trace
+# ---------------------------------------------------------------------------
+
+def _summary_close(dense: dict, stream: dict, p99_tol=0.01):
+    assert set(dense) == set(stream)
+    for key in ("num_shed", "shed_rate", "rebalances", "slo_latency_s",
+                "offered_load_qps", "achieved_load_qps", "mean_latency_s"):
+        x, y = float(dense[key]), float(stream[key])
+        assert (math.isnan(x) and math.isnan(y)) or x == pytest.approx(
+            y, rel=1e-9), key
+    for key, tol in (("p99_latency_s", p99_tol), ("p50_latency_s", 0.02),
+                     ("goodput_qps", 0.01)):
+        x, y = float(dense[key]), float(stream[key])
+        if math.isnan(x):
+            assert math.isnan(y), key
+        else:
+            assert abs(x - y) <= tol * max(abs(x), 1e-12), key
+    assert abs(float(dense["slo_attainment"])
+               - float(stream["slo_attainment"])) <= 0.005
+
+
+def test_streaming_simulate_parity(db, cap, service):
+    kw = dict(
+        scheduler="none", events=[], num_queries=8000,
+        workload="bursty",
+        workload_kwargs=dict(burst_rate=3.0 * cap, base_rate=0.5 * cap,
+                             mean_burst=2000.0 / cap,
+                             mean_gap=1000.0 / cap, seed=7),
+        admission="slo_shed",
+        admission_kwargs=dict(slo=3.0 * service))
+    dense = simulate(db, 4, **kw)
+    sink = MemorySink()
+    stream = simulate(db, 4, trace_mode="streaming", metrics_sink=sink,
+                      sink_interval=1000, **kw)
+    assert isinstance(stream, StreamingTrace)
+    _summary_close(dense.summary(), stream.summary())
+    assert stream.num_shed == dense.num_shed
+    assert len(sink) >= 2
+    # Snapshots carry the registry counters, not dense arrays.
+    assert sink.last["repro_queries_admitted_total"] == stream.num_admitted
+    assert sink.last["repro_queries_shed_total"] == stream.num_shed
+    # Flat-memory contract: no dense per-query arrays on the trace.
+    assert not hasattr(stream, "latencies")
+    assert stream.tail_latency(99) == stream.percentile(99.0)
+    prom = stream.prometheus()
+    assert "repro_queries_admitted_total" in prom
+
+
+def test_streaming_cluster_parity(db, cap, service):
+    events = [
+        dataclasses.replace(ev, replica=2)
+        for ev in generate_events(2000, 4, db.num_scenarios, 2, 100, 5)
+    ]
+    kw = dict(
+        scheduler="odin", alpha=10, num_queries=8000, events=events,
+        router="odin_aware", workload="bursty",
+        workload_kwargs=dict(burst_rate=8.0 * cap, base_rate=1.5 * cap,
+                             mean_burst=80.0 / cap, mean_gap=250.0 / cap,
+                             seed=6),
+        admission="slo_shed", admission_kwargs=dict(slo=3.0 * service),
+        autoscaler="load_profile")
+    dense = simulate_cluster(db, 4, 4, **kw)
+    sink = MemorySink()
+    stream = simulate_cluster(db, 4, 4, trace_mode="streaming",
+                              metrics_sink=sink, sink_interval=1000, **kw)
+    _summary_close(dense.summary(), stream.summary(), p99_tol=0.02)
+    assert stream.num_shed == dense.num_shed
+    assert np.array_equal(stream.replica_counts, dense.replica_counts)
+    assert stream.mean_active_replicas == pytest.approx(
+        dense.summary()["mean_active_replicas"])
+    assert len(sink) >= 2
+    # rows() keeps the per-replica + fleet reporting schema of the
+    # dense trace.
+    drows, srows = dense.rows(), stream.rows()
+    assert len(drows) == len(srows) == 5
+    for dr, sr in zip(drows, srows):
+        assert set(dr) == set(sr)
+        assert dr["scope"] == sr["scope"]
+        assert dr["queries"] == sr["queries"]
+
+
+def test_dense_with_sink_stays_bit_identical(db, cap):
+    kw = dict(scheduler="none", events=[], num_queries=3000,
+              workload="poisson",
+              workload_kwargs=dict(rate=0.9 * cap, seed=0))
+    plain = simulate(db, 4, **kw)
+    sink = MemorySink()
+    observed = simulate(db, 4, metrics_sink=sink, sink_interval=500, **kw)
+    assert len(sink) >= 2
+    sp, so = plain.summary(), observed.summary()
+    assert set(sp) == set(so)
+    for key in sp:
+        x, y = float(sp[key]), float(so[key])
+        assert (math.isnan(x) and math.isnan(y)) or x == y, key
+    assert np.array_equal(plain.latencies, observed.latencies)
+
+
+def test_zero_admitted_summary_nan_safe(db, cap):
+    kw = dict(scheduler="none", events=[], num_queries=50,
+              workload="poisson",
+              workload_kwargs=dict(rate=0.5 * cap, seed=0),
+              admission=ShedAll())
+    for mode in ("dense", "streaming"):
+        t = simulate(db, 4, trace_mode=mode, **kw)
+        assert t.num_shed == 50
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            s = t.summary()
+        assert math.isnan(s["p99_latency_s"])
+        assert math.isnan(s["p50_latency_s"])
+        assert s["num_shed"] == 50
+        assert s["shed_rate"] == 1.0
+
+
+def test_dense_trace_percentile_cached(db, cap):
+    t = simulate(db, 4, scheduler="none", events=[], num_queries=2000,
+                 workload="poisson",
+                 workload_kwargs=dict(rate=0.9 * cap, seed=1))
+    for pct in (50.0, 99.0):
+        expected = float(np.percentile(t.latencies, pct))
+        assert t.percentile(pct) == expected
+        assert t.percentile(pct) == expected  # cached second call
+    assert t.percentile(99.0, "queue_delays") == float(
+        np.percentile(t.queue_delays, 99.0))
+    assert t.tail_latency(99) == t.percentile(99.0)
+
+
+def test_streaming_trace_modes_and_errors(db):
+    with pytest.raises(ValueError):
+        simulate(db, 4, scheduler="none", events=[], num_queries=10,
+                 trace_mode="sparse")
+    t = simulate(db, 4, scheduler="none", events=[], num_queries=200,
+                 trace_mode="streaming")
+    with pytest.raises(ValueError):
+        t.slo_violations(0.9, reference="resource_constrained")
+    assert t.slo_violations(0.9) in (0.0, 1.0) or 0.0 <= t.slo_violations(0.9) <= 1.0
+
+
+def test_streaming_collector_absorb():
+    a = StreamingCollector(slo=10.0)
+    b = StreamingCollector(slo=10.0)
+    rng = np.random.default_rng(9)
+    for col, seed in ((a, 0), (b, 1)):
+        lat = rng.exponential(5.0, size=1000)
+        times = np.sort(rng.uniform(0.0, 100.0, size=1000))
+        col.observe_chunk(lat, lat * 0.5, lat * 0.5,
+                          np.full(1000, 2.0), np.zeros(1000, dtype=bool),
+                          times, times + lat,
+                          np.zeros(1000))
+    total = StreamingCollector(slo=10.0)
+    total.absorb(a).absorb(b)
+    assert total.num_admitted == 2000
+    assert total.latency.n == 2000
+    merged = QuantileSketch.merged([a.latency, b.latency])
+    assert total.latency.percentile(99.0) == merged.percentile(99.0)
