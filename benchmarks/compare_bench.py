@@ -15,7 +15,11 @@ script compares that fresh report against the committed baseline under
   the number survives the dev-machine -> CI-runner hop — may not drop
   more than the same tolerance.  Raw qps for both runs is carried in
   the diff for eyeballing but never gated (two different hosts differ
-  by far more than any real regression).
+  by far more than any real regression);
+* the batching row's continuous-vs-drain queue-delay ratio — a pure
+  simulator quantity, deterministic across hosts — may not drop more
+  than the same tolerance below the baseline's (runner_bench already
+  gates its absolute floor).
 
 The full diff is always written to ``results/benchmarks/bench_diff.json``
 so CI uploads it with the other artifacts.
@@ -103,6 +107,32 @@ def compare(baseline: dict, current: dict, tolerance: float) -> list:
                 "ok": False,
             }
         )
+
+    base_batch = baseline.get("batching")
+    cur_batch = current.get("batching")
+    if base_batch:
+        base_ratio = float(base_batch["delay_ratio"])
+        if cur_batch:
+            cur_ratio = float(cur_batch["delay_ratio"])
+            diffs.append(
+                {
+                    "metric": "bursty_batching.delay_ratio",
+                    "baseline": base_ratio,
+                    "current": cur_ratio,
+                    "ratio": cur_ratio / base_ratio,
+                    "ok": cur_ratio >= (1.0 - tolerance) * base_ratio,
+                }
+            )
+        else:
+            diffs.append(
+                {
+                    "metric": "bursty_batching.delay_ratio",
+                    "baseline": base_ratio,
+                    "current": None,
+                    "ratio": None,
+                    "ok": False,
+                }
+            )
     return diffs
 
 

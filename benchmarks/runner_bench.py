@@ -20,6 +20,9 @@ Environment:
     REPRO_BENCH_RSS_TOLERANCE  streaming-RSS gate: streaming peak RSS
                                must stay within this multiple of the
                                dense 1M row's (default 1.5)
+    REPRO_BENCH_BATCH_RATIO    continuous-batching gate: continuous
+                               mean queue delay must beat drain by at
+                               least this factor (default 1.3)
 
 Besides the scalar-vs-chunked comparison rows, the report carries two
 *scalability* rows: a 1M-query dense open-loop run through the
@@ -31,6 +34,15 @@ constant-memory sketches and rollups instead of dense per-query arrays.
 Each scale row runs in its own subprocess (``--scale-row``): ru_maxrss
 is a process-lifetime high-water mark, so an in-process measurement
 would inherit whichever earlier row peaked highest.
+
+A third comparison — the ``batching`` section — runs a bursty
+mixed-length open-loop workload through drain-mode and continuous
+formed dispatch (docs/WORKLOADS.md "Continuous batching & length
+buckets") at the same offered load and gates on continuous winning:
+its mean queue delay must be at least ``REPRO_BENCH_BATCH_RATIO``
+(default 1.3) times lower than drain's, with a p99 queue delay no
+worse.  The simulator is deterministic, so the row is exactly
+reproducible across hosts.
 
 The gate row (``steady_none``) is the fast path's home turf: long
 environment-steady segments with no exploration phases, where the run
@@ -59,6 +71,7 @@ SCALE_QUERIES = int(os.environ.get("REPRO_BENCH_SCALE_QUERIES", "1000000"))
 STREAM_QUERIES = int(os.environ.get("REPRO_BENCH_STREAM_QUERIES",
                                     "10000000"))
 RSS_TOLERANCE = float(os.environ.get("REPRO_BENCH_RSS_TOLERANCE", "1.5"))
+BATCH_MIN_RATIO = float(os.environ.get("REPRO_BENCH_BATCH_RATIO", "1.3"))
 GATE_ROW = "steady_none"
 
 #: (row name, run_matrix scheduler spec, (freq, dur) paper setting)
@@ -112,6 +125,54 @@ def bench_row(name: str, spec: dict, setting) -> dict:
         "chunked_qps": NUM_QUERIES / chunked_s,
         "speedup": scalar_s / chunked_s,
         "summaries_identical": identical,
+    }
+
+
+def bench_batching() -> dict:
+    """Drain vs continuous formed dispatch on a bursty mixed-length row.
+
+    Both modes see the identical arrival process, length stream and
+    dispatch cost model (per-dispatch ``batch_overhead`` plus
+    length-scaled stage work); the only difference is whether arrivals
+    may join the in-flight batch at stage boundaries.  Burstiness is
+    what continuous batching monetizes: a burst landing just after a
+    dispatch forms rides along instead of waiting out the whole
+    group-synchronous drain.
+    """
+    db = db_for("vgg16")
+    out = {}
+    for mode in ("drain", "continuous"):
+        t0 = time.perf_counter()
+        r = simulate(db, 8, scheduler="none", events=[],
+                     num_queries=800, workload="bursty",
+                     workload_kwargs=dict(rate=0.0035, burst_rate=0.007,
+                                          burst_prob=0.05, seed=7),
+                     batching=mode, max_batch=16, buckets="pow2:64:512",
+                     lengths="bimodal",
+                     lengths_kwargs=dict(short=48, long=420, p_long=0.1,
+                                         seed=11),
+                     batch_overhead=30.0)
+        s = r.summary()
+        out[mode] = {
+            "mean_queue_delay": s["mean_queue_delay_s"],
+            "p99_queue_delay": s["p99_queue_delay_s"],
+            "mean_batch_occupancy": s["mean_batch_occupancy"],
+            "padded_token_frac": s["padded_token_frac"],
+            "achieved_load": s["achieved_load_qps"],
+            "sim_wall_s": time.perf_counter() - t0,
+        }
+    ratio = (out["drain"]["mean_queue_delay"]
+             / max(out["continuous"]["mean_queue_delay"], 1e-12))
+    return {
+        "row": "bursty_batching",
+        "num_queries": 800,
+        "workload": "bursty",
+        "max_batch": 16,
+        "buckets": "pow2:64:512",
+        "lengths": "bimodal",
+        "drain": out["drain"],
+        "continuous": out["continuous"],
+        "delay_ratio": ratio,
     }
 
 
@@ -182,6 +243,7 @@ def main() -> int:
         return 0
 
     results = [bench_row(*row) for row in ROWS]
+    batching = bench_batching()
     scale = (_bench_scale_subprocess(SCALE_QUERIES, "dense")
              if SCALE_QUERIES > 0 else None)
     scale_streaming = (_bench_scale_subprocess(STREAM_QUERIES, "streaming")
@@ -195,8 +257,10 @@ def main() -> int:
         "repeats": REPEATS,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "gate": {"row": GATE_ROW, "min_speedup": MIN_SPEEDUP,
-                 "rss_tolerance": RSS_TOLERANCE},
+                 "rss_tolerance": RSS_TOLERANCE,
+                 "batch_min_ratio": BATCH_MIN_RATIO},
         "rows": results,
+        "batching": batching,
         "scale": scale,
         "scale_streaming": scale_streaming,
     }
@@ -218,6 +282,22 @@ def main() -> int:
     if gate["speedup"] < MIN_SPEEDUP:
         failed.append(f"{GATE_ROW}: speedup {gate['speedup']:.1f}x "
                       f"< gate {MIN_SPEEDUP:.1f}x")
+    b = batching
+    print(f"{b['row']:12s} drain qd {b['drain']['mean_queue_delay']:8.1f}  "
+          f"continuous qd {b['continuous']['mean_queue_delay']:8.1f}  "
+          f"ratio {b['delay_ratio']:5.2f}x  "
+          f"p99 {b['drain']['p99_queue_delay']:.1f} -> "
+          f"{b['continuous']['p99_queue_delay']:.1f}  "
+          f"padded {100 * b['continuous']['padded_token_frac']:.0f}%")
+    if b["delay_ratio"] < BATCH_MIN_RATIO:
+        failed.append(f"{b['row']}: continuous/drain queue-delay ratio "
+                      f"{b['delay_ratio']:.2f}x < gate "
+                      f"{BATCH_MIN_RATIO:.1f}x")
+    if (b["continuous"]["p99_queue_delay"]
+            > b["drain"]["p99_queue_delay"]):
+        failed.append(f"{b['row']}: continuous p99 queue delay "
+                      f"{b['continuous']['p99_queue_delay']:.1f} worse "
+                      f"than drain {b['drain']['p99_queue_delay']:.1f}")
     for row in (scale, scale_streaming):
         if row is None:
             continue

@@ -131,3 +131,50 @@ print(f"  achieved load   : {m1.achieved_load:.1f} -> "
       f"{m8.achieved_load:.1f} q/s")
 print(f"  rebalance/trial accounting identical: {acct_match} "
       f"(rebalances {m8.num_rebalances}, trials {m8.total_trials})")
+
+# --- continuous batching + length buckets ----------------------------------
+# Drain-mode batching above only helps queries that are ALREADY queued
+# when a dispatch forms; anything arriving a moment later waits out the
+# whole group-synchronous drain.  batching="continuous" admits those
+# arrivals into the in-flight batch at pipeline-stage boundaries — one
+# fused catch-up launch (embed + the stages the batch already ran) and
+# the batch resumes one row wider.  Length-bucketed dispatch keeps the
+# mixed short/long stream from padding every batch to the longest
+# member: dispatches group by power-of-two bucket, and every compiled
+# shape comes from the small pre-warmed {rows} x {bucket edges} set
+# (docs/WORKLOADS.md "Continuous batching & length buckets").
+#
+# Regime matters: joins pay off when drain mode would have QUEUED the
+# arrival (loaded pipeline); at near-idle a solo dispatch is already
+# optimal and group-synchronous completion makes joins pure delay
+# (docs/PERFORMANCE.md).
+mixed = [jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                  (1, 128 if rng.random() < 0.15 else 48)))
+         for _ in range(NUM_QUERIES)]
+# Re-calibrate on the mixed stream: short queries serve ~2x faster than
+# the all-128 probe above, and anchoring the arrival rate on the wrong
+# service time would land the A/B in the near-idle regime.
+probe = eng.serve(mixed[:10], lambda q: [1.0] * NUM_EPS)
+mixed_service = float(probe.service_latencies[3:].mean())
+cont_kwargs = dict(rate=0.35 / mixed_service,
+                   burst_rate=1.5 / mixed_service, burst_prob=0.08, seed=2)
+cont = {}
+for mode in ("drain", "continuous"):
+    eng.reset_policy()
+    m = eng.serve(mixed, schedule, workload="bursty",
+                  workload_kwargs=cont_kwargs,
+                  batching=mode, max_batch=8, buckets="pow2:64:128")
+    cont[mode] = s = m.summary()
+    print(f"\nODIN, mixed lengths (48/128), batching={mode}:")
+    print(f"  mean queue delay: {s['mean_queue_delay_s'] * 1e3:7.2f} ms   "
+          f"p99 {s['p99_queue_delay_s'] * 1e3:.2f} ms")
+    print(f"  batch occupancy : {s['mean_batch_occupancy']:7.2f}    "
+          f"padded-token waste {100 * s['padded_token_frac']:.0f}%")
+
+ratio = (cont["drain"]["mean_queue_delay_s"]
+         / max(cont["continuous"]["mean_queue_delay_s"], 1e-12))
+print(f"\nContinuous vs drain at the same offered load: "
+      f"{ratio:.2f}x lower mean queue delay")
+print("(live wall-clock A/B on a shared host is noisy run to run; the "
+      "deterministic, CI-gated comparison is benchmarks/runner_bench.py's "
+      "bursty_batching row)")

@@ -92,10 +92,22 @@ class Cluster:
     backlog.  Defaults (no admission policy, no autoscaler) leave the
     fleet loop bit-identical to the pre-control-plane cluster.
 
-    Note: ``adaptive_batch`` has no effect at the fleet level — cluster
-    replicas are driven one query per routing decision (the scalar
-    tick), so there is no batch bound to steer; per-replica adaptive
-    batching inside cluster runs is a ROADMAP follow-up.
+    ``max_batch > 1`` opts into fleet rebatching: consecutive open-loop
+    arrivals routed to the *same* replica are buffered and flushed
+    through that replica's :meth:`~repro.workloads.runner.PipelineRunner.
+    step_many` — the routed backlog re-forms into batches (one set of
+    stage dispatches per streak) instead of executing query-by-query.
+    Buffered queries count in every :class:`ReplicaView`'s
+    ``outstanding`` so routing stays load-aware, but ledger-derived
+    estimates (``backlog``, ``free_at``) trail the unflushed tail by up
+    to ``max_batch - 1`` queries.  The default ``max_batch = 1`` is the
+    exact pre-rebatching path (every query steps immediately), and a
+    closed loop never buffers — its decision clock needs each query's
+    completion.
+
+    Note: ``adaptive_batch`` has no effect at the fleet level — the
+    rebatch streak length is capped by routing locality and
+    ``max_batch``, not by a steered bound.
     """
 
     def __init__(self, replicas: Sequence[Replica],
@@ -104,10 +116,12 @@ class Cluster:
                  admission: Union[str, object, None] = None,
                  admission_kwargs: Optional[dict] = None,
                  autoscaler: Union[str, object, None] = None,
-                 autoscaler_kwargs: Optional[dict] = None):
+                 autoscaler_kwargs: Optional[dict] = None,
+                 max_batch: int = 1):
         if len(replicas) < 1:
             raise ValueError("a cluster needs at least one replica")
         self.replicas = list(replicas)
+        self.max_batch = max(1, int(max_batch))
         self.router = resolve_router(router, router_kwargs)
         self.router_name = getattr(self.router, "name",
                                    type(self.router).__name__)
@@ -207,6 +221,26 @@ class Cluster:
         interval = (sink_interval if sink_interval is not None
                     else DEFAULT_SINK_INTERVAL)
 
+        # Fleet rebatching (max_batch > 1): same-replica routing streaks
+        # buffer here and flush through step_many as one formed backlog.
+        pend: List[float] = []         # buffered arrival times
+        pend_r = -1                    # replica the buffer belongs to
+
+        def flush_pending() -> None:
+            nonlocal pend_r
+            if not pend:
+                return
+            runner = runners[pend_r]
+            s_before = runner.num_served
+            for completion in runner.step_many(pend):
+                heapq.heappush(outstanding[pend_r], completion)
+            if observe is not None:
+                for s in range(s_before, runner.num_served):
+                    observe(float(runner.queue_delay[s]),
+                            float(runner.service_lat[s]))
+            pend.clear()
+            pend_r = -1
+
         for i in range(num_queries):
             if metrics_sink is not None and i and i % interval == 0:
                 metrics_sink.emit(_fleet_snapshot(runners, fleet_extra,
@@ -230,7 +264,10 @@ class Cluster:
                     heapq.heappop(heap)
                 since = (i - last_assign[ridx] if last_assign[ridx] >= 0
                          else float("inf"))
-                views.append(ReplicaView(ridx, runner, len(heap), now,
+                # Buffered (not yet flushed) queries are in-system.
+                in_system = len(heap) + (len(pend) if ridx == pend_r
+                                         else 0)
+                views.append(ReplicaView(ridx, runner, in_system, now,
                                          since_assign=since))
             if scaler is not None:
                 active = sorted(set(int(r) for r in
@@ -259,6 +296,10 @@ class Cluster:
                                  f"position {pos} for "
                                  f"{len(routed_views)} active replicas")
             r = routed_views[pos].index
+            if pend and r != pend_r:
+                # The streak broke: flush the previous replica's
+                # buffered backlog before this query is considered.
+                flush_pending()
             if shed_check:
                 # Fleet-level shedding sees the *routed* replica: the
                 # router already picked the cheapest dispatch, so if
@@ -278,16 +319,25 @@ class Cluster:
             # total_served == num_served in dense mode; in streaming it
             # keeps counting across the runner's array recycling, so
             # backends see a stable local query index either way.
-            local = runners[r].total_served
+            # Buffered queries haven't stepped yet but already own their
+            # local slots.
+            local = runners[r].total_served + (len(pend) if r == pend_r
+                                               else 0)
             hook = self.replicas[r].on_assign
             if hook is not None:
                 hook(i, local, arrival)
-            completion = runners[r].step(arrival)
-            heapq.heappush(outstanding[r], completion)
             last_assign[r] = i
             if not streaming:
                 assignments[i] = r
                 local_indices[i] = local
+            if self.max_batch > 1 and arrival is not None:
+                pend.append(float(arrival))
+                pend_r = r
+                if len(pend) >= self.max_batch:
+                    flush_pending()
+                continue
+            completion = runners[r].step(arrival)
+            heapq.heappush(outstanding[r], completion)
             if observe is not None:
                 # The row the step just wrote: num_served - 1 (== local
                 # in dense mode; streaming recycles indices, times don't
@@ -296,6 +346,7 @@ class Cluster:
                 observe(float(runners[r].queue_delay[s]),
                         float(runners[r].service_lat[s]))
 
+        flush_pending()
         traces = [
             runner.finish(
                 scheduler_name=(rep.name or scheduler_name),
@@ -337,6 +388,7 @@ def run_cluster(replicas: Sequence[Replica],
                 admission_kwargs: Optional[dict] = None,
                 autoscaler: Union[str, object, None] = None,
                 autoscaler_kwargs: Optional[dict] = None,
+                max_batch: int = 1,
                 trace_mode: str = "dense",
                 metrics_sink=None,
                 sink_interval: Optional[int] = None
@@ -346,7 +398,8 @@ def run_cluster(replicas: Sequence[Replica],
                       admission=admission,
                       admission_kwargs=admission_kwargs,
                       autoscaler=autoscaler,
-                      autoscaler_kwargs=autoscaler_kwargs)
+                      autoscaler_kwargs=autoscaler_kwargs,
+                      max_batch=max_batch)
     return cluster.run(num_queries, workload=workload,
                        workload_kwargs=workload_kwargs,
                        scheduler_name=scheduler_name,

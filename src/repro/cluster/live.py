@@ -41,6 +41,7 @@ def serve_cluster(engines: Sequence,
                   admission_kwargs: Optional[dict] = None,
                   autoscaler: Union[str, object, None] = None,
                   autoscaler_kwargs: Optional[dict] = None,
+                  max_batch: int = 1,
                   trace_mode: str = "dense",
                   metrics_sink=None,
                   sink_interval: Optional[int] = None) -> ClusterTrace:
@@ -58,6 +59,11 @@ def serve_cluster(engines: Sequence,
     (:mod:`repro.control`, docs/CONTROL.md), identically to
     :func:`~repro.cluster.simulate_cluster` — SLOs are in wall-clock
     seconds here.  Shed queries never touch an engine.
+
+    ``max_batch > 1`` opts into fleet rebatching (docs/CLUSTER.md):
+    same-replica routing streaks of open-loop arrivals stack through
+    each engine's ``run_batch`` (one set of stage dispatches per
+    streak) instead of executing query-by-query.
     """
     if len(engines) < 1:
         raise ValueError("serve_cluster needs at least one engine")
@@ -70,7 +76,8 @@ def serve_cluster(engines: Sequence,
     replicas = []
     for eng, schedule in zip(engines, schedules):
         local_queries: List = []
-        executor = eng.query_executor(local_queries, schedule)
+        executor = eng.query_executor(local_queries, schedule,
+                                      max_batch=max_batch)
 
         def on_assign(fleet_q, local_q, arrival, _lq=local_queries):
             _lq.append(queries[fleet_q])
@@ -86,6 +93,7 @@ def serve_cluster(engines: Sequence,
                         admission_kwargs=admission_kwargs,
                         autoscaler=autoscaler,
                         autoscaler_kwargs=autoscaler_kwargs,
+                        max_batch=max_batch,
                         trace_mode=trace_mode, metrics_sink=metrics_sink,
                         sink_interval=sink_interval)
     # Peak references only exist after measurement — stamp post-hoc,

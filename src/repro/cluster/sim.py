@@ -51,6 +51,7 @@ def simulate_cluster(db: LayerDatabase,
                      admission_kwargs: Optional[dict] = None,
                      autoscaler: Union[str, object, None] = None,
                      autoscaler_kwargs: Optional[dict] = None,
+                     max_batch: int = 1,
                      trace_mode: str = "dense",
                      metrics_sink=None,
                      sink_interval: Optional[int] = None
@@ -75,6 +76,11 @@ def simulate_cluster(db: LayerDatabase,
     ``autoscaler="load_profile"`` activates/drains replicas off the
     rolling offered load.  Defaults leave both off (bit-identical to
     the pre-control-plane fleet).
+
+    ``max_batch > 1`` opts into fleet rebatching (docs/CLUSTER.md):
+    same-replica routing streaks of open-loop arrivals flush through
+    the replica's vectorized ``step_many`` instead of query-by-query
+    steps.  Default 1 is the exact per-query path.
     """
     if num_replicas < 1:
         raise ValueError("num_replicas must be >= 1")
@@ -142,5 +148,6 @@ def simulate_cluster(db: LayerDatabase,
                        admission_kwargs=admission_kwargs,
                        autoscaler=autoscaler,
                        autoscaler_kwargs=autoscaler_kwargs,
+                       max_batch=max_batch,
                        trace_mode=trace_mode, metrics_sink=metrics_sink,
                        sink_interval=sink_interval)

@@ -124,6 +124,15 @@ class AdaptiveBatchAdmission:
     it doubles (amortization is free).  The bound always stays within
     ``[min_batch, max_batch]`` (property-tested across bursty seeds).
 
+    The run loop also reports each query's dispatch *occupancy* (how
+    many queries rode its batch — the formed-dispatch paths fill this
+    in; scalar paths report 1).  Occupancy is batch-awareness for the
+    widen branch: when the rolling mean shows dispatches saturating the
+    current bound while the SLO has headroom, the bound provably binds
+    and re-opens at double speed (x4 per interval instead of x2).
+    Shrink decisions are occupancy-blind — overload must collapse the
+    bound whether or not batches were forming.
+
     Declared ``admits_all``: the run loop skips shed checks and only
     consults :meth:`max_chunk_bound` / :meth:`observe`, so closed-loop
     results stay bit-identical (closed loops have zero queue delay and
@@ -159,6 +168,7 @@ class AdaptiveBatchAdmission:
         self.low = float(low)
         self.high = float(high)
         self._delays: deque = deque(maxlen=self.window)
+        self._occ: deque = deque(maxlen=self.window)
         self._since_update = 0
         self._bound = self.max_batch
 
@@ -169,8 +179,10 @@ class AdaptiveBatchAdmission:
         """Current batch/chunk bound, in ``[min_batch, max_batch]``."""
         return self._bound
 
-    def observe(self, queue_delay: float, service_latency: float) -> None:
+    def observe(self, queue_delay: float, service_latency: float,
+                occupancy: float = 1.0) -> None:
         self._delays.append(queue_delay)
+        self._occ.append(occupancy)
         self._since_update += 1
         if self._since_update < self.interval:
             return
@@ -179,9 +191,12 @@ class AdaptiveBatchAdmission:
         if p99 > self.high * self.slo:
             self._bound = max(self.min_batch, self._bound // 2)
         elif p99 < self.low * self.slo:
-            self._bound = min(self.max_batch, self._bound * 2)
+            occ = float(np.mean(np.asarray(self._occ)))
+            step = 4 if occ >= 0.75 * self._bound else 2
+            self._bound = min(self.max_batch, self._bound * step)
 
     def reset(self) -> None:
         self._delays.clear()
+        self._occ.clear()
         self._since_update = 0
         self._bound = self.max_batch

@@ -49,6 +49,8 @@ from repro.workloads import (
     Workload,
     run_pipeline,
 )
+from repro.workloads.base import DispatchRecord
+from repro.workloads.batching import resolve_batching
 
 
 class SimTimeSource:
@@ -60,6 +62,19 @@ class SimTimeSource:
 
     def stage_times(self, config) -> np.ndarray:
         return self.db.stage_times(config, self.scenarios)
+
+
+def _dispatch_throughput(spans: np.ndarray) -> float:
+    """Throughput a dispatch record reports: one batch per full drain.
+
+    Batched dispatch is group-synchronous — the engine launches the
+    next dispatch only after this one retires — so the head occupancy
+    (``1/throughput``) is the whole wall, not the bottleneck stage.
+    Every dispatch site (profile, builder, execute, execute_many) goes
+    through this one helper so the floats agree bit-for-bit.
+    """
+    total = float(np.sum(spans))
+    return 1.0 / total if total > 0.0 else float("inf")
 
 
 #: Deprecated alias — the simulator now returns the unified
@@ -91,6 +106,19 @@ class DatabaseQueryExecutor:
     *arrival time* — how replica-scoped cluster events stay wall-clock
     aligned across replicas serving different query counts
     (docs/CLUSTER.md).
+
+    **Batched-dispatch cost model** (active only when a
+    :class:`~repro.workloads.batching.BatchFormer` is attached via
+    :meth:`configure_batching`; everything below is bypassed otherwise,
+    keeping pre-batching runs bit-identical): a stage executing a
+    member set ``M`` takes ``overhead + t_s * sum_i(Lpad_i /
+    length_ref)`` — a fixed per-dispatch stage cost (kernel launch +
+    sync) plus compute linear in padded tokens.  A solo query's service
+    time is the sum over occupied stages, and so is its head occupancy:
+    batched dispatch is group-synchronous — the next dispatch launches
+    only after this one drains, which is exactly why continuous joins
+    pay (the steady-state ``pipelined_latency`` model keeps governing
+    non-batched runs).
     """
 
     batch_mode = "vector"
@@ -107,6 +135,67 @@ class DatabaseQueryExecutor:
         self.source = SimTimeSource(db, self.scenarios)
         self._oracle = oracle    # tuple(scenarios) -> (config, throughput)
         self._arrivals = None    # set by the run loop (time-indexed only)
+        self.former = None       # BatchFormer (configure_batching)
+        self._lengths = None     # per-query actual lengths
+        self._padded = None      # per-query bucket-padded lengths
+        self.batch_overhead = 0.0
+        self.length_ref = None   # resolved at configure_batching time
+
+    # -- batched dispatch (opt-in) ------------------------------------------
+    def set_cost_model(self, batch_overhead: float,
+                       length_ref: Optional[float] = None) -> None:
+        """Tune the dispatch cost model (see class docs): fixed
+        per-stage dispatch overhead, and the sequence length the
+        database's profiled times correspond to (``None`` = derive from
+        the run's largest padded length at :meth:`configure_batching`
+        time)."""
+        self.batch_overhead = float(batch_overhead)
+        if length_ref is not None and length_ref <= 0:
+            raise ValueError(f"length_ref must be > 0, got {length_ref}")
+        self.length_ref = None if length_ref is None else float(length_ref)
+
+    def configure_batching(self, former, lengths, padded) -> None:
+        """Run-loop hook: attach the batch former + per-query lengths
+        (actual and bucket-padded) before serving begins."""
+        self.former = former
+        self._lengths = lengths
+        self._padded = padded
+        if self.length_ref is None:
+            self.length_ref = (float(np.max(padded))
+                               if padded is not None else 1.0)
+
+    def _lfrac(self, q: int) -> float:
+        """Padded-length compute fraction of query ``q`` vs. the
+        reference length the database times were profiled at."""
+        if self._padded is None:
+            return 1.0
+        return float(self._padded[q]) / self.length_ref
+
+    def _dispatch_times(self, config, lfrac: float) -> np.ndarray:
+        """Per-stage solo dispatch times under the batching cost model."""
+        times = self.source.stage_times(config)
+        return np.where(times > 0.0,
+                        self.batch_overhead + times * lfrac, 0.0)
+
+    def dispatch_profile(self, q: int, config) -> tuple:
+        """(wall, throughput, last_join_offset) of a solo dispatch of ``q``.
+
+        ``throughput`` goes through the same helper a size-1 dispatch
+        record reports, so the run loop's predicted head occupancy
+        (``1/throughput``) is bit-identical to the ledger advance the
+        executed dispatch will make.  ``last_join_offset`` is the clock
+        offset of the final stage boundary a continuous joiner could
+        still enter at — the vectorized path proves a stretch join-free
+        by checking successor arrivals against it.
+        """
+        tp = self._dispatch_times(config, self._lfrac(q))
+        wall = float(np.sum(tp))
+        join = float(np.sum(tp[:-1])) if len(tp) > 1 else 0.0
+        return wall, _dispatch_throughput(tp), join
+
+    def begin_dispatch(self, q0: int, step: RuntimeStep):
+        """Start forming a dispatch headed by query ``q0``."""
+        return _SimDispatchBuilder(self, step.config)
 
     def set_arrivals(self, arrivals) -> None:
         """Run-loop hook: the per-query arrival times (``None`` for a
@@ -156,6 +245,15 @@ class DatabaseQueryExecutor:
         return self._oracle(tuple(self.scenarios))[1]
 
     def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
+        if self.former is not None:
+            # Dispatch cost model: a solo query traverses its own
+            # dispatch — sum of per-stage costs; dispatches are
+            # group-synchronous, so the head is held for the full
+            # drain.  Serial trials traverse the same stages (the
+            # drain wait is the run loop's business).
+            tp = self._dispatch_times(step.config, self._lfrac(q))
+            return QueryRecord(service_latency=float(np.sum(tp)),
+                               throughput=_dispatch_throughput(tp))
         times = self.source.stage_times(step.config)
         latency = (serial_latency(times) if step.serial
                    else pipelined_latency(times))
@@ -166,11 +264,114 @@ class DatabaseQueryExecutor:
         # Steady chunks share one (config, scenario-segment): one
         # database gather serves every query in the chunk, broadcast
         # to the chunk without materializing per-query copies.
-        times = self.source.stage_times(steps[0].config)
         n = len(steps)
+        if self.former is not None:
+            # Chunks under a former are join-free solo stretches at one
+            # padded length (the run loop cuts at bucket changes and
+            # join points), so one dispatch profile broadcasts — the
+            # identical floats a size-1 dispatch builder would report.
+            tp = self._dispatch_times(steps[0].config, self._lfrac(q0))
+            return BatchRecord(
+                service_latencies=np.broadcast_to(float(np.sum(tp)), n),
+                throughputs=np.broadcast_to(_dispatch_throughput(tp), n))
+        times = self.source.stage_times(steps[0].config)
         return BatchRecord(
             service_latencies=np.broadcast_to(pipelined_latency(times), n),
             throughputs=np.broadcast_to(throughput(times), n))
+
+
+class _SimDispatchBuilder:
+    """Analytic dispatch builder (``begin_dispatch`` protocol).
+
+    Tracks every span the dispatch executes — per-stage batch times
+    plus joiners' catch-up runs — as a list; ``drain`` is their sum and
+    the head is held for the largest one.  All reductions go through
+    the same numpy calls ``execute``/``execute_many`` use, so a size-1
+    dispatch is bit-identical to the vectorized solo-stretch path (the
+    chunked == scalar invariant extends to batched runs).
+    """
+
+    def __init__(self, ex: "DatabaseQueryExecutor", config):
+        self._ex = ex
+        self._times = ex.source.stage_times(config)
+        self._live = self._times > 0.0
+        self._c = ex.batch_overhead
+        self._S = len(self._times)
+        self._stage = 0
+        self._spans: List[float] = []
+        self._starts: List[float] = []
+        self._sum_lfrac = 0.0
+        self._padded_tok = 0.0
+        self._actual_tok = 0.0
+        self._row_lfrac: Optional[float] = None   # head bucket, set on add
+        self._row_pad: Optional[float] = None
+
+    def _count_tokens(self, q: int) -> None:
+        ex = self._ex
+        if ex._padded is not None:
+            # Rows occupy the dispatch width (the head's bucket) —
+            # formation members share it, joiners pad up to it.
+            self._padded_tok += (self._row_pad
+                                 if self._row_pad is not None
+                                 else float(ex._padded[q]))
+            actual = ex._lengths[q] if ex._lengths is not None \
+                else ex._padded[q]
+            self._actual_tok += float(actual)
+
+    def _clock(self) -> float:
+        if not self._spans:
+            return 0.0
+        return float(np.sum(np.asarray(self._spans)))
+
+    def add(self, q: int) -> None:
+        if self._stage != 0:
+            raise RuntimeError("add() after launch; use join()")
+        if self._row_lfrac is None:
+            self._row_lfrac = self._ex._lfrac(q)
+            if self._ex._padded is not None:
+                self._row_pad = float(self._ex._padded[q])
+        self._sum_lfrac += self._row_lfrac
+        self._starts.append(0.0)
+        self._count_tokens(q)
+
+    def next_boundary(self) -> Optional[float]:
+        if self._stage >= self._S:
+            return None
+        s = self._stage
+        T = (self._c + float(self._times[s]) * self._sum_lfrac
+             if self._live[s] else 0.0)
+        self._spans.append(T)
+        self._stage += 1
+        if self._stage >= self._S:
+            return None      # drained: nothing left to join
+        return self._clock()
+
+    def join(self, q: int) -> None:
+        if not 0 < self._stage < self._S:
+            raise RuntimeError("join() is only valid at a stage boundary")
+        lf = self._ex._lfrac(q)
+        # Service begins at the boundary; the batch then waits out the
+        # joiner's solo catch-up through the already-executed stages —
+        # one fused ``run_stages(0, s)`` launch (a single dispatch
+        # overhead), compute linear in the joiner's padded tokens.
+        self._starts.append(self._clock())
+        done = self._live[:self._stage]
+        comp = float(np.sum(np.where(
+            done, self._times[:self._stage] * lf, 0.0)))
+        if bool(np.any(done)):
+            self._spans.append(self._c + comp)
+        self._sum_lfrac += lf
+        self._count_tokens(q)
+
+    def finish(self) -> DispatchRecord:
+        while self._stage < self._S:
+            self.next_boundary()
+        spans = np.asarray(self._spans, float)
+        return DispatchRecord(start_offsets=np.asarray(self._starts),
+                              drain=float(np.sum(spans)),
+                              throughput=_dispatch_throughput(spans),
+                              padded_tokens=self._padded_tok,
+                              actual_tokens=self._actual_tok)
 
 
 def simulate(db: LayerDatabase,
@@ -193,7 +394,15 @@ def simulate(db: LayerDatabase,
              admission_kwargs: Optional[dict] = None,
              trace_mode: str = "dense",
              metrics_sink=None,
-             sink_interval: Optional[int] = None) -> PipelineTrace:
+             sink_interval: Optional[int] = None,
+             batching=None,
+             max_batch: int = 8,
+             buckets=None,
+             explore_in_batch: bool = False,
+             lengths=None,
+             lengths_kwargs: Optional[dict] = None,
+             batch_overhead: float = 0.0,
+             length_ref: Optional[float] = None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -223,6 +432,19 @@ def simulate(db: LayerDatabase,
     telemetry path (docs/TELEMETRY.md): streaming runs return a
     :class:`~repro.telemetry.StreamingTrace` with the same ``summary()``
     keys, and a sink receives periodic metric snapshots in either mode.
+
+    ``batching`` turns on formed dispatch (docs/WORKLOADS.md
+    "Continuous batching & length buckets"): ``"drain"`` stacks queued
+    arrivals at dispatch instants, ``"continuous"`` additionally folds
+    them in at stage boundaries; ``max_batch`` / ``buckets`` /
+    ``explore_in_batch`` parameterize the
+    :class:`~repro.workloads.batching.BatchFormer`.  ``lengths``
+    attaches a per-query sequence-length distribution
+    (:mod:`repro.workloads.lengths`); ``batch_overhead`` is the fixed
+    per-stage dispatch cost and ``length_ref`` the sequence length the
+    database times were profiled at (defaults to the largest bucket
+    edge, else the largest sampled length).  ``batching=None`` (the
+    default) bypasses all of it — bit-identical to pre-batching runs.
     """
     if events is None:
         if events_time_indexed:
@@ -255,6 +477,13 @@ def simulate(db: LayerDatabase,
 
     executor = DatabaseQueryExecutor(db, num_eps, events, _oracle,
                                      time_indexed=events_time_indexed)
+    former = resolve_batching(batching, max_batch=max_batch,
+                              buckets=buckets,
+                              explore_in_batch=explore_in_batch)
+    if length_ref is None and former is not None \
+            and former.buckets is not None:
+        length_ref = float(former.buckets.edges[-1])
+    executor.set_cost_model(batch_overhead, length_ref)
 
     def oracle_solver(cfg, src) -> List[int]:
         return list(_oracle(tuple(executor.scenarios))[0])
@@ -276,7 +505,9 @@ def simulate(db: LayerDatabase,
                         admission=admission,
                         admission_kwargs=admission_kwargs,
                         trace_mode=trace_mode, metrics_sink=metrics_sink,
-                        sink_interval=sink_interval)
+                        sink_interval=sink_interval,
+                        former=former, lengths=lengths,
+                        lengths_kwargs=lengths_kwargs)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

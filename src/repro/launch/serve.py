@@ -23,7 +23,7 @@ from repro.core.database import paper_scenarios
 from repro.models import Model
 from repro.schedulers import available_schedulers
 from repro.serving import ServingEngine
-from repro.workloads import available_workloads
+from repro.workloads import available_workloads, make_lengths
 
 
 def main() -> None:
@@ -56,6 +56,24 @@ def main() -> None:
                     help="batched serving: stack up to N queued arrivals "
                          "per dispatch (docs/WORKLOADS.md; >1 only pays "
                          "off for open-loop workloads with bursts)")
+    ap.add_argument("--batching", default="none",
+                    choices=("none", "drain", "continuous"),
+                    help="formed-dispatch mode (docs/WORKLOADS.md "
+                         "'Continuous batching & length buckets'): drain "
+                         "runs length-bucketed batches to completion, "
+                         "continuous admits arrivals into the in-flight "
+                         "batch at stage boundaries; --max-batch caps the "
+                         "dispatch width")
+    ap.add_argument("--buckets", default="",
+                    help="length buckets for --batching: 'pow2:lo:hi', a "
+                         "comma list like '64,128,256', or empty for a "
+                         "single bucket at the longest query")
+    ap.add_argument("--lengths", default="fixed",
+                    choices=("fixed", "uniform", "bimodal"),
+                    help="per-query sequence-length distribution "
+                         "(repro.workloads.lengths; anchored at --seq: "
+                         "uniform draws [seq/4, seq], bimodal mixes seq/4 "
+                         "and seq)")
     ap.add_argument("--admission", default="none",
                     choices=tuple(available_admission_policies()),
                     help="admission policy (docs/CONTROL.md); slo_shed / "
@@ -86,8 +104,17 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     if cfg.embedding_inputs:
         raise SystemExit("serve demo uses token models; pick a non-VLM arch")
-    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, args.seq)))
-               for _ in range(args.queries)]
+    if args.lengths == "fixed":
+        lens = np.full(args.queries, args.seq, dtype=np.int64)
+    else:
+        kw = (dict(lo=max(1, args.seq // 4), hi=args.seq)
+              if args.lengths == "uniform"
+              else dict(short=max(1, args.seq // 4), long=args.seq,
+                        p_long=0.2))
+        lens = make_lengths(args.lengths, seed=args.seed,
+                            **kw).sample(args.queries)
+    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, int(L))))
+               for L in lens]
 
     scens = paper_scenarios()
     events = []
@@ -105,7 +132,12 @@ def main() -> None:
 
     eng = ServingEngine(cfg, params, num_eps=args.eps,
                         scheduler=args.scheduler, alpha=args.alpha)
-    eng.executor.warmup(1, args.seq)
+    if args.batching == "none":
+        # Bucketed serving pre-warms its own closed shape set
+        # (configure_batching); the unbucketed path compiles each raw
+        # length once, up front.
+        for length in sorted({int(x) for x in lens}):
+            eng.executor.ensure_warm(1, length)
     if args.workload == "closed":
         wl_kwargs = None             # --rate is irrelevant (and may be 0)
     else:
@@ -123,6 +155,9 @@ def main() -> None:
     metrics = eng.serve(queries, schedule, workload=args.workload,
                         workload_kwargs=wl_kwargs,
                         max_batch=args.max_batch,
+                        batching=(None if args.batching == "none"
+                                  else args.batching),
+                        buckets=(args.buckets or None),
                         admission=args.admission,
                         admission_kwargs=adm_kwargs,
                         trace_mode=args.trace_mode)

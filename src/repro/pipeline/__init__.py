@@ -1,5 +1,7 @@
 from repro.pipeline.executor import (  # noqa: F401
     LocalPipelineExecutor,
     MeasuredTimeSource,
+    MixedSequenceLengthError,
+    next_pow2,
     stage_bounds,
 )

@@ -35,6 +35,28 @@ def stage_bounds(config: Sequence[int]) -> List[tuple]:
     return out
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+class MixedSequenceLengthError(ValueError):
+    """A batched dispatch mixed incompatible sequence lengths.
+
+    Subclasses ``ValueError`` so pre-existing callers catching the old
+    untyped error keep working; the message names the offending
+    per-query lengths so the caller can see *which* queries to pad or
+    re-bucket.
+    """
+
+    def __init__(self, lengths: Sequence[int]):
+        self.lengths = [int(s) for s in lengths]
+        super().__init__(
+            "run_batch queries must share one sequence length "
+            f"(pad or group by length upstream); got per-query "
+            f"lengths {self.lengths}")
+
+
 class LocalPipelineExecutor:
     """Executes a stage-partitioned model, timing each stage.
 
@@ -85,6 +107,25 @@ class LocalPipelineExecutor:
         if (batch, seq) not in self._warmed:
             self.warmup(batch, seq)
 
+    def warm_buckets(self, seq_buckets: Sequence[int],
+                     max_batch: int) -> None:
+        """Pre-compile exactly the length-bucketed dispatch shapes.
+
+        Bucketed dispatch pads every batch to a power-of-two row count
+        and every query to its length-bucket edge, so the full shape set
+        is ``{1, 2, 4, .., next_pow2(max_batch)} x seq_buckets`` — a
+        small closed set, keeping ``_warmed`` bounded however many
+        distinct raw ``(batch, seq)`` combinations the traffic offers.
+        """
+        rows, r = [], 1
+        cap = next_pow2(max_batch)
+        while r <= cap:
+            rows.append(r)
+            r *= 2
+        for seq in seq_buckets:
+            for b in rows:
+                self.ensure_warm(b, int(seq))
+
     # -- execution --------------------------------------------------------------
     def _device_bounds(self, config: Sequence[int]) -> List[tuple]:
         """Stage bounds as committed device scalars.
@@ -100,6 +141,58 @@ class LocalPipelineExecutor:
             hi.block_until_ready()
         return bounds
 
+    def embed_tokens(self, tokens: jnp.ndarray) -> tuple:
+        """Embed ``[B, S]`` tokens -> (hidden ``[B, S, D]``, positions).
+
+        Blocks until the embedding is on device so the first stage's
+        measured time never includes the embed dispatch.
+        """
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self._embed_fn(self.params, tokens)
+        x.block_until_ready()
+        return x, positions
+
+    def run_stages(self, x: jnp.ndarray, positions: jnp.ndarray,
+                   config: Sequence[int], lo_stage: int, hi_stage: int,
+                   slowdowns: Optional[Sequence[float]] = None,
+                   bounds: Optional[List[tuple]] = None) -> tuple:
+        """Run stages ``[lo_stage, hi_stage)`` of ``config`` over ``x``.
+
+        The stage-granular entry point for continuous batching: a batch
+        can stop at any stage boundary, absorb newly arrived (embedded +
+        caught-up) queries along the batch axis, and resume — all with
+        the same jitted ``stage_fn``, since stage bounds and the batch
+        dimension are runtime arguments (no recompile).
+
+        Returns ``(x, times)`` where ``times[s]`` is the measured wall
+        time of stage ``lo_stage + s`` (slowdown-stretched like
+        :meth:`run_query`).  ``bounds`` accepts the precomputed
+        :meth:`_device_bounds` result so per-stage callers don't re-pay
+        the host->device commit between boundaries.
+        """
+        if bounds is None:
+            bounds = self._device_bounds(config)
+        times = np.zeros(hi_stage - lo_stage)
+        for s in range(lo_stage, hi_stage):
+            lo, hi = bounds[s]
+            t0 = time.perf_counter()
+            x = self._stage_fn(self.params, x, positions, lo, hi)
+            x.block_until_ready()
+            dt = time.perf_counter() - t0
+            if slowdowns is not None and slowdowns[s] > 1.0:
+                extra = dt * (slowdowns[s] - 1.0)
+                time.sleep(extra)
+                dt += extra
+            times[s - lo_stage] = dt
+        return x, times
+
+    def head(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Final norm + unembed, blocked until ready."""
+        logits = self._head_fn(self.params, x)
+        logits.block_until_ready()
+        return logits
+
     def run_query(self, tokens: jnp.ndarray, config: Sequence[int],
                   slowdowns: Optional[Sequence[float]] = None
                   ) -> tuple:
@@ -110,24 +203,11 @@ class LocalPipelineExecutor:
         measured stage time (sleep), physically delaying the pipeline —
         the scheduler only ever sees measured times.
         """
-        B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
         bounds = self._device_bounds(config)
-        x = self._embed_fn(self.params, tokens)
-        x.block_until_ready()
-        times = np.zeros(len(config))
-        for s, (lo, hi) in enumerate(bounds):
-            t0 = time.perf_counter()
-            x = self._stage_fn(self.params, x, positions, lo, hi)
-            x.block_until_ready()
-            dt = time.perf_counter() - t0
-            if slowdowns is not None and slowdowns[s] > 1.0:
-                extra = dt * (slowdowns[s] - 1.0)
-                time.sleep(extra)
-                dt += extra
-            times[s] = dt
-        logits = self._head_fn(self.params, x)
-        logits.block_until_ready()
+        x, positions = self.embed_tokens(tokens)
+        x, times = self.run_stages(x, positions, config, 0, len(config),
+                                   slowdowns=slowdowns, bounds=bounds)
+        logits = self.head(x)
         return logits, times
 
     def run_batch(self, queries: Sequence[jnp.ndarray],
@@ -146,14 +226,20 @@ class LocalPipelineExecutor:
         Returns (logits ``[sum(B_i), S, V]``, stage_times ndarray).
         Stage times cover the whole batch; per-query attribution is the
         caller's policy (the serving engine divides by the batch size).
+
+        A single-query batch is forwarded as-is (no concat, no copy);
+        mixed sequence lengths raise :class:`MixedSequenceLengthError`
+        naming every query's length.
         """
         if len(queries) == 0:
             raise ValueError("run_batch needs at least one query")
-        if len({int(t.shape[-1]) for t in queries}) != 1:
-            raise ValueError("run_batch queries must share one sequence "
-                             "length (pad or group by length upstream)")
-        tokens = (queries[0] if len(queries) == 1
-                  else jnp.concatenate(list(queries), axis=0))
+        if len(queries) == 1:
+            tokens = queries[0]
+        else:
+            lengths = [int(t.shape[-1]) for t in queries]
+            if len(set(lengths)) != 1:
+                raise MixedSequenceLengthError(lengths)
+            tokens = jnp.concatenate(list(queries), axis=0)
         return self.run_query(tokens, config, slowdowns=slowdowns)
 
     def measure_block_times(self, tokens: jnp.ndarray,

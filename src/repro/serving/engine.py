@@ -31,6 +31,14 @@ that queued up behind the pipeline are stacked and executed through
 ``LocalPipelineExecutor.run_batch`` — one set of stage dispatches per
 burst — while the detect → explore → commit machinery still observes
 every query (docs/WORKLOADS.md "Batching & the fast path").
+
+``serve(..., batching="continuous", buckets=...)`` enables continuous
+batching on top: length-bucketed formed dispatches run stage by stage
+through the executor's stage-granular ``run_stages``, and a query that
+arrives while a same-bucket batch is in flight joins it at the next
+pipeline-stage boundary — one fused catch-up launch instead of waiting
+out the full group-synchronous drain (docs/WORKLOADS.md "Continuous
+batching & length buckets").
 """
 from __future__ import annotations
 
@@ -42,16 +50,22 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.pipeline_state import balanced_config, throughput
-from repro.pipeline.executor import LocalPipelineExecutor, MeasuredTimeSource
+from repro.pipeline.executor import (
+    LocalPipelineExecutor,
+    MeasuredTimeSource,
+    next_pow2,
+)
 from repro.schedulers.base import SchedulerPolicy
 from repro.schedulers.defaults import DEFAULT_ALPHA, MEASURED_DETECTOR_MODE
 from repro.schedulers.registry import make_scheduler
 from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
 from repro.workloads import (
     BatchRecord,
+    DispatchRecord,
     PipelineTrace,
     QueryRecord,
     Workload,
+    resolve_batching,
     run_pipeline,
 )
 
@@ -90,6 +104,11 @@ class _LiveQueryExecutor:
         self.schedule = slowdown_schedule
         self.max_batch = max(1, int(max_batch))
         self._slow: Optional[np.ndarray] = None
+        # Batched-dispatch state (the run loop's configure_batching
+        # hook fills these in when a BatchFormer is attached).
+        self.former = None
+        self._lengths: Optional[np.ndarray] = None
+        self._padded: Optional[np.ndarray] = None
 
     @property
     def batch_mode(self) -> Optional[str]:
@@ -107,14 +126,70 @@ class _LiveQueryExecutor:
 
     def steady_horizon(self, q: int) -> int:
         """Constant-interference run length from ``q``: a batch must
-        share one slowdown vector (a schedule edge ends the chunk)."""
+        share one slowdown vector (a schedule edge ends the chunk) and
+        one dispatch shape (stacked rows need one shared sequence
+        length — a length change ends the chunk; with buckets attached
+        the cut falls at bucket-edge changes instead)."""
         base = np.asarray(self.schedule(q), float)
+        width = self._width(q)
         n = 1
         while (n < self.max_batch and q + n < len(self.queries)
+               and self._width(q + n) == width
                and np.array_equal(np.asarray(self.schedule(q + n), float),
                                   base)):
             n += 1
         return n
+
+    def _width(self, q: int) -> int:
+        """Sequence length query ``q`` dispatches at (bucket edge when
+        buckets are attached, raw length otherwise)."""
+        if self._padded is not None:
+            return int(self._padded[q])
+        return int(self.queries[q].shape[-1])
+
+    # -- batched dispatch (run-loop hooks) --------------------------------
+
+    def configure_batching(self, former, lengths, padded) -> None:
+        """Run-loop hook (:func:`repro.workloads.run_pipeline`): attach
+        the dispatch former and the per-query (raw, padded) lengths.
+
+        Pre-compiles the closed bucketed shape set — power-of-two row
+        counts x the bucket edges traffic actually uses — so no
+        dispatch inside the serving loop ever pays (or measures) a
+        first-shape XLA compile, and the executor's ``_warmed`` set
+        stays bounded however many raw shapes the traffic offers.
+        """
+        self.former = former
+        self._lengths = (None if lengths is None
+                         else np.asarray(lengths, dtype=np.int64))
+        self._padded = (None if padded is None
+                        else np.asarray(padded, dtype=np.int64))
+        if former is None:
+            return
+        self.max_batch = max(self.max_batch, int(former.max_batch))
+        if self._padded is not None:
+            edges = sorted({int(s) for s in self._padded})
+        else:
+            edges = sorted({int(t.shape[-1]) for t in self.queries})
+        max_rows = max((int(t.shape[0]) for t in self.queries), default=1)
+        self.engine.executor.warm_buckets(edges, self.max_batch * max_rows)
+
+    def _dispatch_tokens(self, q: int) -> jnp.ndarray:
+        """Query ``q``'s tokens, zero-padded along the sequence axis to
+        its bucket edge so every dispatch shape comes from the closed
+        warm set."""
+        t = self.queries[q]
+        if self._padded is None:
+            return t
+        seq = int(self._padded[q])
+        raw = int(t.shape[-1])
+        if seq == raw:
+            return t
+        return jnp.pad(t, ((0, 0), (0, seq - raw)))
+
+    def begin_dispatch(self, q0: int,
+                       step: RuntimeStep) -> "_LiveDispatchBuilder":
+        return _LiveDispatchBuilder(self, q0, step)
 
     def _measure(self, config, first_measurement: bool):
         """Post-execution bookkeeping shared by both paths: bottleneck
@@ -139,12 +214,29 @@ class _LiveQueryExecutor:
 
     def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
         eng = self.engine
+        if self.former is not None:
+            tokens = self._dispatch_tokens(q)
+            rows = int(tokens.shape[0])
+            pr = next_pow2(rows)
+            eng.executor.ensure_warm(pr, int(tokens.shape[-1]))
+            if pr > rows:
+                tokens = jnp.concatenate(
+                    [tokens, jnp.zeros((pr - rows, tokens.shape[-1]),
+                                       tokens.dtype)])
+        else:
+            tokens = self.queries[q]
         finish = self._measure(step.config, eng._block_times is None)
         t0 = time.perf_counter()
-        _, st = eng.executor.run_query(self.queries[q], step.config,
+        _, st = eng.executor.run_query(tokens, step.config,
                                        slowdowns=self._slow)
         latency = time.perf_counter() - t0
         tmax = finish(st)
+        if self.former is not None:
+            # Batched dispatch is group-synchronous — a solo dispatch
+            # holds the pipeline for its full drain, exactly like a
+            # singleton formed batch.
+            return QueryRecord(service_latency=latency,
+                               throughput=1.0 / max(latency, 1e-12))
         return QueryRecord(service_latency=latency,
                            throughput=1.0 / max(tmax, 1e-12))
 
@@ -152,7 +244,11 @@ class _LiveQueryExecutor:
         eng = self.engine
         n = len(steps)
         batch = [self.queries[q0 + i] for i in range(n)]
-        # Never measure a first-shape XLA compile as service time.
+        # Never measure a first-shape XLA compile as service time.  The
+        # key set here is bounded by construction (row sums never exceed
+        # max_batch, one seq per chunk); the formed-dispatch paths use
+        # the power-of-two warm family instead, since joins grow rows
+        # dynamically.
         eng.executor.ensure_warm(sum(int(t.shape[0]) for t in batch),
                                  int(batch[0].shape[-1]))
         finish = self._measure(steps[0].config, eng._block_times is None)
@@ -173,6 +269,167 @@ class _LiveQueryExecutor:
         return BatchRecord(
             service_latencies=wall - np.arange(n) * tmax,
             throughputs=np.broadcast_to(1.0 / tmax, n))
+
+
+class _LiveDispatchBuilder:
+    """One physical batched dispatch, executed stage by stage.
+
+    The live counterpart of the simulator's dispatch builder: formation
+    members are stacked (sequence-padded to the bucket edge, rows
+    rounded up to a warm power of two) and embedded once, then the run
+    loop drives the pipeline one stage at a time through the executor's
+    stage-granular ``run_stages``.  At each stage boundary a newly
+    arrived same-bucket query can :meth:`join`: it pays one fused
+    catch-up launch (embed + stages ``[0, s)`` over the joiner alone),
+    then its rows are spliced into the in-flight batch, which resumes
+    wider — no drain, no recompile (stage bounds and the batch dimension
+    are runtime arguments).
+
+    All times are wall-clock offsets from the dispatch launch.  Batched
+    dispatch is group-synchronous — the next dispatch launches only
+    after this one drains — so the record's throughput is ``1 / drain``.
+    Every compiled shape this builder touches comes from the closed
+    bucketed warm set (``configure_batching`` pre-compiled it); the
+    ``ensure_warm`` calls before each timed window are bounded-set
+    lookups, never compiles.
+    """
+
+    def __init__(self, live: "_LiveQueryExecutor", q0: int,
+                 step: RuntimeStep):
+        self._live = live
+        eng = live.engine
+        self._ex = eng.executor
+        self._config = list(step.config)
+        self._S = len(self._config)
+        self._bounds = self._ex._device_bounds(self._config)
+        self._slow = live._slow
+        self._first = eng._block_times is None
+        self._seq = live._width(q0)
+        self._members: List[int] = []
+        self._starts: List[float] = []
+        self._stage = 0
+        self._launched = False
+        self._t0 = 0.0
+        self._x = None
+        self._positions = None
+        self._rows = 0       # real (non-padding) rows in self._x
+        self._stage_times = np.zeros(self._S)
+        self._stage_members = np.zeros(self._S)
+        self._actual_tok = 0.0
+
+    def add(self, q: int) -> None:
+        """Formation member: present from stage 0 (start offset 0)."""
+        self._members.append(q)
+        self._starts.append(0.0)
+        self._count_tokens(q)
+
+    def _count_tokens(self, q: int) -> None:
+        live = self._live
+        rows = int(live.queries[q].shape[0])
+        raw = (int(live._lengths[q]) if live._lengths is not None
+               else int(live.queries[q].shape[-1]))
+        self._actual_tok += float(rows) * float(raw)
+
+    def _pad_rows(self, arr: jnp.ndarray, rows: int) -> jnp.ndarray:
+        pr = next_pow2(rows)
+        if pr > rows:
+            arr = jnp.concatenate(
+                [arr, jnp.zeros((pr - rows,) + arr.shape[1:], arr.dtype)])
+        return arr
+
+    def _launch(self) -> None:
+        toks = [self._live._dispatch_tokens(q) for q in self._members]
+        tokens = toks[0] if len(toks) == 1 else jnp.concatenate(toks)
+        rows = int(tokens.shape[0])
+        self._ex.ensure_warm(next_pow2(rows), self._seq)
+        tokens = self._pad_rows(tokens, rows)
+        self._rows = rows
+        self._launched = True
+        self._t0 = time.perf_counter()
+        self._x, self._positions = self._ex.embed_tokens(tokens)
+
+    def _run_stage(self) -> None:
+        s = self._stage
+        self._stage_members[s] = len(self._members)
+        self._x, st = self._ex.run_stages(
+            self._x, self._positions, self._config, s, s + 1,
+            slowdowns=self._slow, bounds=self._bounds)
+        self._stage_times[s] = float(st[0])
+        self._stage += 1
+
+    def next_boundary(self) -> Optional[float]:
+        """Run the next stage; return the boundary's wall-clock offset
+        (a join opportunity) or ``None`` after the final stage."""
+        if not self._launched:
+            self._launch()
+        self._run_stage()
+        if self._stage >= self._S:
+            return None
+        return time.perf_counter() - self._t0
+
+    def join(self, q: int) -> None:
+        if not 0 < self._stage < self._S:
+            raise RuntimeError("join() is only valid at a stage boundary")
+        live, ex = self._live, self._ex
+        tokens = live._dispatch_tokens(q)
+        jrows = int(tokens.shape[0])
+        new_rows = self._rows + jrows
+        # Both shapes the timed window touches, checked warm up front.
+        ex.ensure_warm(next_pow2(jrows), self._seq)
+        ex.ensure_warm(next_pow2(new_rows), self._seq)
+        tokens = self._pad_rows(tokens, jrows)
+        self._starts.append(time.perf_counter() - self._t0)
+        # One fused catch-up launch: embed, then every block of stages
+        # [0, s) in a single ``stage_fn`` dispatch — block bounds are
+        # runtime arguments, so the catch-up pays one dispatch + one
+        # device sync however many stages the batch already ran (the
+        # per-stage loop would price a join like a near-full solo
+        # query).  Then splice the joiner's real rows into the
+        # in-flight batch and re-pad to the next warm row count.
+        h, positions = ex.embed_tokens(tokens)
+        t1 = time.perf_counter()
+        h = ex._stage_fn(ex.params, h, positions,
+                         self._bounds[0][0],
+                         self._bounds[self._stage - 1][1])
+        h.block_until_ready()
+        if self._slow is not None:
+            # Interference emulation for the fused span: stretch by the
+            # mean slowdown of the stages it covers (run_stages does
+            # this per stage; the fused launch can't attribute within).
+            stretch = float(np.mean(
+                np.asarray(self._slow, float)[:self._stage]))
+            if stretch > 1.0:
+                time.sleep((time.perf_counter() - t1) * (stretch - 1.0))
+        x = jnp.concatenate([self._x[:self._rows], h[:jrows]])
+        x = self._pad_rows(x, new_rows)
+        x.block_until_ready()
+        self._x = x
+        self._positions = jnp.broadcast_to(
+            jnp.arange(self._seq, dtype=jnp.int32),
+            (int(x.shape[0]), self._seq))
+        self._rows = new_rows
+        self._members.append(q)
+        self._count_tokens(q)
+
+    def finish(self) -> DispatchRecord:
+        if not self._launched:
+            self._launch()
+        while self._stage < self._S:
+            self._run_stage()
+        self._ex.head(self._x)
+        drain = time.perf_counter() - self._t0
+        # Per-query stage-time attribution for the EMA: each stage's
+        # measured time is shared by the members present when it ran
+        # (joiners' catch-up work is dispatch latency, not a per-block
+        # time signal).
+        done = self._live._measure(self._config, self._first)
+        done(self._stage_times / np.maximum(self._stage_members, 1.0))
+        return DispatchRecord(
+            start_offsets=np.asarray(self._starts, float),
+            drain=drain,
+            throughput=1.0 / max(drain, 1e-12),
+            padded_tokens=float(next_pow2(self._rows)) * float(self._seq),
+            actual_tokens=self._actual_tok)
 
 
 class ServingEngine:
@@ -274,6 +531,9 @@ class ServingEngine:
               workload: Union[str, Workload, None] = "closed",
               workload_kwargs: Optional[dict] = None,
               max_batch: int = 1,
+              batching: Union[str, object, None] = None,
+              buckets: Union[str, object, None] = None,
+              explore_in_batch: bool = False,
               admission: Union[str, object, None] = None,
               admission_kwargs: Optional[dict] = None,
               trace_mode: str = "dense",
@@ -296,6 +556,22 @@ class ServingEngine:
         rebalance, and only queries that have already arrived join
         (a closed loop therefore still serves one at a time).
 
+        ``batching`` selects the formed-dispatch path instead
+        (docs/WORKLOADS.md "Continuous batching & length buckets"):
+        ``"drain"`` forms length-bucketed batches that run to
+        completion; ``"continuous"`` additionally admits arrivals into
+        the in-flight batch at pipeline-stage boundaries via the
+        executor's stage-granular ``run_stages`` — a joiner pays one
+        fused catch-up launch instead of waiting out the full
+        group-synchronous drain.  ``buckets`` picks the length buckets
+        (``"pow2:lo:hi"``, an edge list, or ``None`` for raw lengths);
+        queries are sequence-padded to their bucket edge and batches
+        row-padded to powers of two, so every dispatch shape comes from
+        a small pre-compiled set.  ``explore_in_batch`` lets an
+        exploration trial ride at the head of a formed batch instead of
+        forcing serial one-at-a-time processing.  With ``batching``
+        set, ``max_batch`` caps the formed dispatch width.
+
         ``admission`` selects a :mod:`repro.control` admission policy
         (e.g. ``admission="slo_shed", admission_kwargs={"slo":
         0.25}`` — SLO in wall-clock seconds); shed queries are turned
@@ -308,8 +584,22 @@ class ServingEngine:
         :class:`~repro.telemetry.StreamingTrace`, sinks receive
         periodic snapshots in either mode.
         """
-        live = self.query_executor(queries, slowdown_schedule,
-                                   max_batch=max_batch)
+        seq_max = max((int(t.shape[-1]) for t in queries), default=1)
+        former = resolve_batching(batching, max_batch=max_batch,
+                                  buckets=buckets,
+                                  explore_in_batch=explore_in_batch,
+                                  seq=seq_max)
+        lengths = None
+        if former is not None:
+            # Real query shapes are the length distribution here — the
+            # generators in repro.workloads.lengths drive query
+            # *construction* (launch CLI, examples), not serving.
+            lengths = np.array([int(t.shape[-1]) for t in queries],
+                               dtype=np.int64)
+        live = self.query_executor(
+            queries, slowdown_schedule,
+            max_batch=(former.max_batch if former is not None
+                       else max_batch))
         trace = run_pipeline(live, self.runtime, len(queries),
                              workload=workload,
                              workload_kwargs=workload_kwargs,
@@ -318,7 +608,9 @@ class ServingEngine:
                              admission_kwargs=admission_kwargs,
                              trace_mode=trace_mode,
                              metrics_sink=metrics_sink,
-                             sink_interval=sink_interval)
+                             sink_interval=sink_interval,
+                             former=former,
+                             lengths=lengths)
         # The peak reference only exists after measurement: stamp it
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()

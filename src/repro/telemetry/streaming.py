@@ -64,6 +64,7 @@ class StreamingCollector:
         self.latency = QuantileSketch(compression)
         self.queue_delay = QuantileSketch(compression)
         self.throughput = QuantileSketch(compression)
+        self.occupancy = QuantileSketch(compression)  # dispatch sizes
         self.rollup = WindowedRollup(max_windows=max_windows)
         self.num_admitted = 0
         self.num_shed = 0
@@ -71,6 +72,8 @@ class StreamingCollector:
         self.num_slo_met = 0
         self.service_sum = 0.0
         self.steady_thr_sum = 0.0        # throughput sum over pipelined rows
+        self.padded_tok_sum = 0.0        # padded tokens executed
+        self.actual_tok_sum = 0.0        # useful tokens executed
         self.max_arrival = 0.0
         self.max_completion = 0.0
         self.max_shed_arrival = 0.0
@@ -100,6 +103,13 @@ class StreamingCollector:
                     ).sketch = self.queue_delay
         reg.summary("throughput_qps", "per-query pipeline throughput"
                     ).sketch = self.throughput
+        reg.summary("batch_occupancy", "dispatch size each query rode in"
+                    ).sketch = self.occupancy
+        reg.counter("tokens_padded_total", "padded tokens executed "
+                                           "(bucket-edge lengths)")
+        reg.counter("tokens_actual_total", "useful tokens executed")
+        reg.gauge("padded_token_frac", "fraction of executed tokens that "
+                                       "were padding waste")
         reg.gauge("queue_depth", "in-system depth at the last arrival")
         reg.gauge("slo_attainment", "fraction of admitted queries within "
                                     "the SLO")
@@ -116,15 +126,26 @@ class StreamingCollector:
                       serial_mask: np.ndarray,
                       arrival_times: np.ndarray,
                       completion_times: np.ndarray,
-                      queue_depths: np.ndarray) -> None:
+                      queue_depths: np.ndarray,
+                      batch_sizes: Optional[np.ndarray] = None,
+                      padded_tokens: Optional[np.ndarray] = None,
+                      actual_tokens: Optional[np.ndarray] = None) -> None:
         """Fold one span of index-aligned per-query rows (the runner's
-        flushed arrays; the caller recycles them afterwards)."""
+        flushed arrays; the caller recycles them afterwards).  The
+        batching columns are optional — a feeder without them reads as
+        all-solo dispatch (occupancy 1) with no token accounting."""
         n = len(latencies)
         if n == 0:
             return
         self.latency.add(latencies)
         self.queue_delay.add(queue_delays)
         self.throughput.add(throughputs)
+        self.occupancy.add(batch_sizes if batch_sizes is not None
+                           else np.ones(n))
+        if padded_tokens is not None:
+            self.padded_tok_sum += float(padded_tokens.sum())
+        if actual_tokens is not None:
+            self.actual_tok_sum += float(actual_tokens.sum())
         self.num_admitted += n
         serial = int(np.count_nonzero(serial_mask))
         self.num_serial += serial
@@ -172,6 +193,7 @@ class StreamingCollector:
         self.latency.merge(other.latency)
         self.queue_delay.merge(other.queue_delay)
         self.throughput.merge(other.throughput)
+        self.occupancy.merge(other.occupancy)
         self.rollup.merge(other.rollup)
         self.num_admitted += other.num_admitted
         self.num_shed += other.num_shed
@@ -179,6 +201,8 @@ class StreamingCollector:
         self.num_slo_met += other.num_slo_met
         self.service_sum += other.service_sum
         self.steady_thr_sum += other.steady_thr_sum
+        self.padded_tok_sum += other.padded_tok_sum
+        self.actual_tok_sum += other.actual_tok_sum
         self.max_arrival = max(self.max_arrival, other.max_arrival)
         self.max_completion = max(self.max_completion, other.max_completion)
         self.max_shed_arrival = max(self.max_shed_arrival,
@@ -231,6 +255,14 @@ class StreamingCollector:
     def shed_rate(self) -> float:
         return self.num_shed / self.num_offered if self.num_offered else 0.0
 
+    @property
+    def padded_token_frac(self) -> float:
+        """Fraction of executed tokens that were padding waste; 0.0
+        when the run carried no length information."""
+        if self.padded_tok_sum <= 0.0:
+            return 0.0
+        return 1.0 - self.actual_tok_sum / self.padded_tok_sum
+
     # -- export --------------------------------------------------------------
     def _refresh_registry(self) -> None:
         reg = self._registry
@@ -243,6 +275,9 @@ class StreamingCollector:
         reg.counter("queries_shed_total")._value = float(self.num_shed)
         reg.counter("queries_serial_total")._value = float(self.num_serial)
         reg.counter("queries_slo_met_total")._value = float(self.num_slo_met)
+        reg.counter("tokens_padded_total")._value = self.padded_tok_sum
+        reg.counter("tokens_actual_total")._value = self.actual_tok_sum
+        reg.gauge("padded_token_frac").set(self.padded_token_frac)
         reg.gauge("queue_depth").set(self.last_queue_depth)
         reg.gauge("slo_attainment").set(self.slo_attainment)
         reg.gauge("shed_rate").set(self.shed_rate)
@@ -313,7 +348,8 @@ class StreamingTrace:
     SUMMARY_SLO_LEVEL = SUMMARY_SLO_LEVEL
 
     _SKETCH_FIELDS = {"latencies": "latency", "queue_delays": "queue_delay",
-                      "throughputs": "throughput"}
+                      "throughputs": "throughput",
+                      "batch_sizes": "occupancy"}
 
     # -- shape / shed accounting --------------------------------------------
     @property
@@ -457,6 +493,10 @@ class StreamingTrace:
             "goodput_qps": c.goodput_qps,
             "slo_attainment": c.slo_attainment,
             "slo_latency_s": float(self.slo_latency),
+            # -- batch occupancy / padding (docs/WORKLOADS.md) --------------
+            "mean_batch_occupancy": c.occupancy.mean,
+            "p99_batch_occupancy": c.occupancy.percentile(99),
+            "padded_token_frac": c.padded_token_frac,
         }
 
     @classmethod

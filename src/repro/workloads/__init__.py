@@ -8,9 +8,16 @@ metric surface.
 """
 from repro.workloads.base import (  # noqa: F401
     BatchRecord,
+    DispatchRecord,
     QueryExecutor,
     QueryRecord,
     Workload,
+)
+from repro.workloads.batching import (  # noqa: F401
+    BatchFormer,
+    LengthBuckets,
+    resolve_batching,
+    resolve_buckets,
 )
 from repro.workloads.generators import (  # noqa: F401
     BurstyWorkload,
@@ -19,6 +26,13 @@ from repro.workloads.generators import (  # noqa: F401
     PoissonWorkload,
     RampWorkload,
     TraceWorkload,
+)
+from repro.workloads.lengths import (  # noqa: F401
+    available_lengths,
+    make_lengths,
+    register_lengths,
+    resolve_lengths,
+    with_lengths,
 )
 from repro.workloads.registry import (  # noqa: F401
     available_workloads,

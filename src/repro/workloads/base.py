@@ -83,6 +83,45 @@ class BatchRecord:
             raise ValueError("BatchRecord arrays must be index-aligned")
 
 
+@dataclasses.dataclass
+class DispatchRecord:
+    """What one *formed dispatch* (a batch, possibly grown mid-flight by
+    stage-boundary joins) reports back to the run loop.
+
+    All offsets are relative to the dispatch start ``t0`` chosen by the
+    run loop's ledger.  Every member completes together when the batch
+    drains: ``completion_i = t0 + drain``; member ``i`` entered service
+    at ``t0 + start_offsets[i]`` (0 for members present at dispatch,
+    the join-boundary clock for continuous joiners), so its service
+    latency is ``drain - start_offsets[i]`` and its queue delay is
+    ``t0 + start_offsets[i] - arrival_i``.
+
+    ``throughput`` is the dispatch-level service rate: formed dispatch
+    is group-synchronous (the next dispatch launches only after this
+    one retires), so ``1 / throughput`` is how long the dispatch holds
+    the admission head — its full drain — and each of the ``n`` members
+    reports ``n * throughput`` (n queries retired per drain).
+    """
+
+    #: Per-member service start offset from ``t0`` (non-decreasing).
+    start_offsets: np.ndarray
+    #: Batch completion offset from ``t0`` (all members finish here).
+    drain: float
+    #: Dispatch-level service rate (1 / full drain).
+    throughput: float
+    #: Total padded tokens executed (bucket-edge lengths x members,
+    #: plus any batch-dimension padding rows); 0 when the run carries
+    #: no length information.
+    padded_tokens: float = 0.0
+    #: Total useful tokens (actual query lengths); 0 when unknown.
+    actual_tokens: float = 0.0
+
+    def __post_init__(self):
+        self.start_offsets = np.asarray(self.start_offsets, float)
+        if self.start_offsets.ndim != 1 or len(self.start_offsets) == 0:
+            raise ValueError("DispatchRecord needs >= 1 member")
+
+
 class QueryExecutor(Protocol):
     """One query's environment + execution, driver-specific.
 
@@ -107,6 +146,24 @@ class QueryExecutor(Protocol):
       state); chunks never cross this boundary.
     * ``max_chunk`` (optional int) — executor-preferred chunk cap
       (e.g. the live engine's ``max_batch``).
+
+    Executors that support **continuous batching** (a
+    :class:`~repro.workloads.batching.BatchFormer` attached to the run)
+    additionally provide ``begin_dispatch(q0, step) -> builder``, where
+    the builder exposes:
+
+    * ``add(q)`` — stack query ``q`` into the batch before it launches.
+    * ``next_boundary() -> Optional[float]`` — advance the batch one
+      pipeline-stage; returns the boundary's clock offset from the
+      dispatch start, or ``None`` once the batch has drained.
+    * ``join(q)`` — fold query ``q`` into the in-flight batch at the
+      current boundary (the builder catches it up through the already-
+      executed stages and accounts the delay honestly).
+    * ``finish() -> DispatchRecord`` — drain and report.
+
+    The run loop drives the builder (it owns arrivals and admission);
+    the builder owns execution — analytic stage arithmetic in the
+    simulator, physical ``run_stages`` calls in the live engine.
     """
 
     def begin_query(self, q: int) -> Optional[StageTimeSource]:

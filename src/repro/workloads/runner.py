@@ -57,10 +57,27 @@ exact for the simulator, whose steady chunks have constant beats.
 Policies declaring ``admits_all`` (the ``none`` built-in) skip every
 check, keeping closed-loop traces bit-identical to running without a
 control plane.
+
+Formed dispatch (``repro.workloads.batching``, docs/WORKLOADS.md
+"Continuous batching & length buckets"): when a
+:class:`~repro.workloads.batching.BatchFormer` is attached, queries are
+served as *dispatches* — contiguous arrival-order runs sharing one
+length bucket.  ``drain`` mode stacks the queued backlog at the
+dispatch instant; ``continuous`` mode additionally folds arrivals in at
+every pipeline-stage boundary via the executor's ``begin_dispatch``
+builder.  Admission decisions happen only at dispatch *heads*: a query
+that can join an in-flight batch is by construction being served
+promptly, and keeping joiners shed-free is also what makes the chunked
+and scalar paths take identical join/shed decisions (the vectorized
+solo-stretch fast path proves a run of queries join-free from arrival
+gaps alone, then admits them with the same predicted ledger the scalar
+loop would).  With no former attached every batching branch is bypassed
+— pre-former runs are bit-identical.
 """
 from __future__ import annotations
 
 import heapq
+import inspect
 from typing import TYPE_CHECKING, List, Optional, Tuple, Union
 
 import numpy as np
@@ -68,12 +85,14 @@ import numpy as np
 from repro.control.base import AdmissionView
 from repro.telemetry.streaming import StreamingCollector, StreamingTrace
 from repro.workloads.base import QueryExecutor, Workload
+from repro.workloads.lengths import resolve_lengths
 from repro.workloads.registry import make_workload
 from repro.workloads.trace import PipelineTrace
 
 if TYPE_CHECKING:  # annotation-only: keeps workloads <-> schedulers acyclic
     from repro.control.base import AdmissionPolicy
     from repro.schedulers.runtime import RebalanceRuntime
+    from repro.workloads.batching import BatchFormer
 
 #: Fallback chunk cap when the executor does not prefer one.  Bounds the
 #: temporary per-chunk arrays; segments longer than this simply split.
@@ -251,7 +270,10 @@ class PipelineRunner:
                  max_chunk: Optional[int] = None,
                  admission: Optional[AdmissionPolicy] = None,
                  trace_mode: str = "dense",
-                 telemetry: Optional[StreamingCollector] = None):
+                 telemetry: Optional[StreamingCollector] = None,
+                 former: Optional[BatchFormer] = None,
+                 lengths: Optional[np.ndarray] = None,
+                 padded: Optional[np.ndarray] = None):
         if trace_mode not in ("dense", "streaming"):
             raise ValueError(f"unknown trace_mode {trace_mode!r}; "
                              f"expected 'dense' or 'streaming'")
@@ -275,6 +297,18 @@ class PipelineRunner:
                             and not getattr(admission, "admits_all", False))
         self._observe = (getattr(admission, "observe", None)
                          if admission is not None else None)
+        # Policies that understand batch occupancy (adaptive_batch) take
+        # an ``occupancy`` keyword; older/custom observe hooks keep the
+        # two-argument call.  Resolved once, outside the hot loop.
+        self._observe_occ = False
+        if self._observe is not None:
+            try:
+                params = inspect.signature(self._observe).parameters
+                self._observe_occ = ("occupancy" in params or any(
+                    p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values()))
+            except (TypeError, ValueError):
+                self._observe_occ = False
         self._chunk_bound = (getattr(admission, "max_chunk_bound", None)
                              if admission is not None else None)
         self.shed_arrivals: List[float] = []
@@ -301,6 +335,30 @@ class PipelineRunner:
         cap = (max_chunk if max_chunk is not None
                else getattr(executor, "max_chunk", DEFAULT_MAX_CHUNK))
         self._chunk_cap = max(1, int(cap))
+
+        # Batch formation (docs/WORKLOADS.md "Continuous batching &
+        # length buckets").  The former is policy; the executor's
+        # begin_dispatch builder is mechanism.  None = every batching
+        # branch below is dead code — pre-former runs are untouched.
+        self._former = former
+        self._lengths = None if lengths is None else np.asarray(lengths)
+        self._padded = None if padded is None else np.asarray(padded)
+        if former is not None:
+            if not callable(getattr(executor, "begin_dispatch", None)):
+                raise ValueError(
+                    "batching needs an executor providing "
+                    "begin_dispatch(q, step); got "
+                    f"{type(executor).__name__}")
+            if not callable(getattr(executor, "steady_horizon", None)):
+                raise ValueError(
+                    "batching needs an executor providing "
+                    "steady_horizon(q); dispatches must not cross an "
+                    "interference edge")
+        # Optional (wall, throughput, last_join_offset) oracle enabling
+        # the vectorized solo-stretch fast path; without it every query
+        # goes through the dispatch loop (correct, just scalar).
+        self._profile = (getattr(executor, "dispatch_profile", None)
+                         if former is not None else None)
         # "vector" chunks poll the scheduler once per environment-steady
         # segment, which is only equivalent to per-query polling when the
         # policy's steady detect is stable (pure under unchanged
@@ -335,6 +393,9 @@ class PipelineRunner:
         self.completion_t = np.zeros(n)
         self.queue_depth = np.zeros(n, dtype=int)
         self.rc_thr = np.zeros(n) if self._has_reference else None
+        self.batch_sizes = np.zeros(n)   # dispatch size each row rode in
+        self.padded_tok = np.zeros(n)    # padded tokens charged to the row
+        self.actual_tok = np.zeros(n)    # useful tokens (actual length)
         self.configs_trace: List[List[int]] = []
 
         self.free_at = 0.0             # when the admission head frees up
@@ -346,7 +407,7 @@ class PipelineRunner:
     #: Result arrays grown together when the run outlives ``capacity``.
     _ARRAYS = ("latencies", "service_lat", "queue_delay", "throughputs",
                "serial_mask", "arrival_t", "completion_t", "queue_depth",
-               "rc_thr")
+               "rc_thr", "batch_sizes", "padded_tok", "actual_tok")
 
     def _ensure_capacity(self, n: int) -> None:
         """Grow the result arrays (doubling) to hold ``n`` queries."""
@@ -400,6 +461,13 @@ class PipelineRunner:
         self.queue_delay[s] = start - arrival
         self.service_lat[s] = rec.service_latency
         self.latencies[s] = self.queue_delay[s] + rec.service_latency
+        self.batch_sizes[s] = 1.0
+        if self._padded is not None:
+            self.padded_tok[s] = float(self._padded[gq])
+            self.actual_tok[s] = float(self._lengths[gq])
+        else:
+            self.padded_tok[s] = 0.0
+            self.actual_tok[s] = 0.0
         self.num_served = s + 1
         return completion
 
@@ -420,6 +488,7 @@ class PipelineRunner:
             raise ValueError(f"execute_many returned {len(rec.throughputs)} "
                              f"records for a chunk of {n}")
         self.throughputs[sl] = rec.throughputs
+        self.serial_mask[sl] = False   # chunks are steady by construction
         if not self._keep_configs:
             self._last_config = list(steps[-1].config)
         elif steps[0] is steps[-1]:
@@ -440,7 +509,222 @@ class PipelineRunner:
         self.queue_delay[sl] = start - arrival
         self.service_lat[sl] = rec.service_latencies
         self.latencies[sl] = self.queue_delay[sl] + rec.service_latencies
+        # "batch" chunks are one physical execution (n-wide occupancy);
+        # "vector" chunks are a computational speedup over solo queries.
+        self.batch_sizes[sl] = float(n) if self._mode == "batch" else 1.0
+        if self._padded is not None:
+            self.padded_tok[sl] = self._padded[gq0:gq0 + n]
+            self.actual_tok[sl] = self._lengths[gq0:gq0 + n]
+        else:
+            self.padded_tok[sl] = 0.0
+            self.actual_tok[sl] = 0.0
         self.num_served = s0 + n
+
+    # -- formed dispatch (repro.workloads.batching; docs/WORKLOADS.md) -------
+    def _dispatch_tick(self, q: int, step, arrivals: Optional[np.ndarray],
+                       end: int) -> int:
+        """Form and execute one dispatch headed by global query ``q``
+        (already admitted and polled).  Returns the next global index.
+
+        Formation stacks already-arrived same-bucket queries at the
+        dispatch instant; continuous mode additionally joins arrivals
+        at every stage boundary the executor's builder reports.
+        Joiners are *not* admission-checked (head-only shedding — see
+        the module docstring) but are polled, so an exploration trial
+        or a config change still cuts the batch: the polled query
+        becomes the leftover, executed scalar right after the dispatch
+        drains.  A serial head (``explore_in_batch``) skips polling its
+        riders entirely — one trial per poll is an explorer invariant —
+        and rides the dispatch pipelined instead of draining first.
+        """
+        executor, runtime, former = self.executor, self.runtime, self._former
+        arrival = float(arrivals[q]) if arrivals is not None else None
+        t0 = self.free_at if arrival is None else max(arrival, self.free_at)
+        serial_head = step.serial
+        pw = self._padded
+        cap = min(former.max_batch, self._chunk_cap_now())
+        # Candidate window: the head's steady segment (a joiner must
+        # share the head's environment — its poll is only reusable and
+        # the builder's catch-up arithmetic only valid there).  Skip the
+        # possibly-costly horizon scan when no candidate can exist.
+        if arrivals is None or q + 1 >= end or cap == 1:
+            wlimit = q + 1
+        elif not former.continuous and arrivals[q + 1] > t0:
+            wlimit = q + 1     # drain mode with no backlog: solo by definition
+        else:
+            wlimit = q + min(end - q,
+                             max(1, int(executor.steady_horizon(q))))
+        s0 = self.num_served
+        self._ensure_capacity(s0 + min(cap, end - q) + 1)
+        builder = executor.begin_dispatch(q, step)
+        builder.add(q)
+        members = [q]
+        j = q + 1
+        leftover = None
+        stop = False
+
+        def try_fill(ready: float, joining: bool) -> None:
+            nonlocal j, leftover, stop
+            while (j < wlimit and len(members) < cap
+                   and arrivals[j] <= ready):
+                # Dispatches are single-bucket — formation and joins
+                # alike.  Padding a narrow joiner up to a wide batch is
+                # shape-legal but prices the padded row's full compute
+                # in every remaining stage (the cost model is linear in
+                # padded tokens), which balloons the dispatch for the
+                # whole backlog behind it; the bucket cut keeps joins
+                # strictly win-win.
+                if pw is not None and pw[j] != pw[q]:
+                    stop = True
+                    return
+                if not serial_head:
+                    src = executor.begin_query(j)
+                    if self.rc_thr is not None:
+                        self.rc_thr[s0 + len(members)] = \
+                            executor.reference_throughput(j)
+                    stp = (runtime.poll(src) if src is not None
+                           else runtime.steady_step())
+                    if stp.serial or stp.config != step.config:
+                        leftover = (j, stp)
+                        stop = True
+                        j += 1
+                        return
+                elif self.rc_thr is not None:
+                    # Riders of a trial are not polled; the reference
+                    # oracle is env-pure, and the env is steady here.
+                    self.rc_thr[s0 + len(members)] = \
+                        executor.reference_throughput(j)
+                (builder.join if joining else builder.add)(j)
+                members.append(j)
+                j += 1
+
+        if arrivals is not None:
+            try_fill(t0, joining=False)
+            if former.continuous:
+                while not stop and j < wlimit and len(members) < cap:
+                    b = builder.next_boundary()
+                    if b is None:
+                        break
+                    try_fill(t0 + b, joining=True)
+        rec = builder.finish()
+
+        n = len(members)
+        sl = slice(s0, s0 + n)
+        mem = np.asarray(members)
+        arr_m = arrivals[mem] if arrivals is not None else np.full(n, t0)
+        starts = t0 + rec.start_offsets
+        completion = t0 + float(rec.drain)
+        thr = float(rec.throughput)
+        # Batched dispatch is group-synchronous: the dispatch holds the
+        # admission head for its full drain (thr = 1/drain), and the
+        # next dispatch launches only after this one retires; a riding
+        # trial deliberately skips the old drain-the-pipeline wait.
+        self.free_at = t0 + (1.0 / thr if thr > 0 else 0.0)
+        self.drain_at = max(self.drain_at, completion)
+        completions = np.full(n, completion)
+        self.queue_depth[sl] = self._pending.depths_bulk(arr_m, completions)
+        self.throughputs[sl] = n * thr
+        self.serial_mask[sl] = False
+        self.serial_mask[s0] = serial_head
+        if self._keep_configs:
+            self.configs_trace.extend([list(step.config)] * n)
+        else:
+            self._last_config = list(step.config)
+        self.arrival_t[sl] = arr_m
+        self.completion_t[sl] = completions
+        qd = starts - arr_m
+        sv = float(rec.drain) - rec.start_offsets
+        self.queue_delay[sl] = qd
+        self.service_lat[sl] = sv
+        self.latencies[sl] = qd + sv
+        self.batch_sizes[sl] = float(n)
+        if pw is not None:
+            # Every row of the dispatch occupies the head's bucket
+            # width (formation members and joiners alike share the
+            # head's bucket — dispatches are single-bucket).
+            width = float(pw[q])
+            pmem = np.full(n, width)
+            amem = self._lengths[mem].astype(float)
+            # Batch-dimension padding (the live engine rounds rows up to
+            # a warm power-of-two) is dispatch-level waste: charge it to
+            # the head row.  A relative threshold keeps the analytic
+            # builders' token sums (sequential adds vs. np.sum pairwise,
+            # ulp apart) from perturbing per-row values.
+            extra = float(rec.padded_tokens) - width * n
+            if extra > 1e-9 * max(float(rec.padded_tokens), 1.0):
+                pmem[0] += extra
+            self.padded_tok[sl] = pmem
+            self.actual_tok[sl] = amem
+        else:
+            self.padded_tok[sl] = float(rec.padded_tokens) / n
+            self.actual_tok[sl] = float(rec.actual_tokens) / n
+        self.num_served = s0 + n
+
+        if leftover is not None:
+            jq, jstep = leftover
+            self._scalar_tick(jq, jstep,
+                              float(arrivals[jq]) if arrivals is not None
+                              else None)
+        if self._observe is not None:
+            self._observe_span(s0)
+        return j
+
+    def _solo_window(self, q: int, step,
+                     arrivals: Optional[np.ndarray], end: int) -> int:
+        """Length of the provably join-free run of dispatch heads at ``q``.
+
+        A query is *solo* when its successor arrives after its last
+        join opportunity (dispatch start plus the final stage-boundary
+        offset; the dispatch instant itself in drain mode).  Solo
+        queries are bit-identical to singleton dispatches, so the
+        poll-once vector fast path serves the whole run through
+        ``execute_many`` instead of one builder per query.  Returns 0
+        when the head itself may receive joiners.
+        """
+        executor = self.executor
+        cap = self._chunk_cap_now()
+        if arrivals is None:
+            # Closed loop: the next query arrives only once the head
+            # frees up, never strictly inside a dispatch — all solo.
+            return min(end - q, cap,
+                       max(1, int(executor.steady_horizon(q))))
+        horizon = max(1, int(executor.steady_horizon(q)))
+        limit = min(end - q, horizon)
+        open_end = True        # successor beyond window cannot join
+        if cap < limit:
+            limit, open_end = cap, False
+        pw = self._padded
+        if pw is not None and limit > 1:
+            w = pw[q:q + limit]
+            diff = np.nonzero(w != w[0])[0]
+            if len(diff):
+                limit, open_end = int(diff[0]), True
+        _, thr, join_off = self._profile(q, step.config)
+        if not self._former.continuous:
+            join_off = 0.0     # drain mode: joins only at the dispatch instant
+        occ = 1.0 / thr if thr > 0 else 0.0
+        _, starts, _ = _chunk_ledger(arrivals[q:q + limit],
+                                     np.full(limit, occ), self.free_at)
+        if limit > 1:
+            solo = arrivals[q + 1:q + limit] > starts[:-1] + join_off
+            bad = np.nonzero(~solo)[0]
+            m = int(bad[0]) if len(bad) else limit
+        else:
+            m = 1
+        if m == limit and not open_end:
+            # Window cut by the chunk cap: the successor exists in the
+            # same environment and may join the last member — leave
+            # that member to the dispatch loop.
+            nxt = q + limit
+            if (arrivals[nxt] <= starts[-1] + join_off
+                    and (pw is None or pw[nxt] == pw[q])):
+                m = limit - 1
+        if self._shed_check and m > 1:
+            # Heads shed exactly as the scalar loop would: the shadow
+            # ledger advances by the dispatch occupancy, which for solo
+            # stretches is the actual occupancy — prediction is exact.
+            m = self._admit_horizon(q, m, arrivals, occ_est=occ)
+        return m
 
     # -- admission control (repro.control; docs/CONTROL.md) ------------------
     def _admit(self, gq: int, arrival: Optional[float]) -> bool:
@@ -465,7 +749,8 @@ class PipelineRunner:
         return False
 
     def _admit_horizon(self, gq0: int, limit: int,
-                       arrivals: Optional[np.ndarray]) -> int:
+                       arrivals: Optional[np.ndarray],
+                       occ_est: Optional[float] = None) -> int:
         """Largest ``n <= limit`` such that queries ``gq0+1 ..
         gq0+n-1`` are all predicted to be admitted (``gq0`` itself was
         already admitted with the actual ledger).
@@ -476,10 +761,17 @@ class PipelineRunner:
         occupancy.  The first predicted shed cuts the chunk; that
         query is then re-decided (and recorded) by the outer loop
         against the post-chunk actual ledger.
+
+        ``occ_est`` overrides the shadow-ledger advance (the former's
+        solo-stretch path passes the dispatch-adjusted occupancy, which
+        folds in the batch overhead and padded-length cost model); the
+        policy's *view* always carries the raw runtime estimates either
+        way, matching what a scalar head decision would see.
         """
         est = self.runtime.estimated_bottleneck()
         est_lat = self.runtime.estimated_service_latency()
-        occ_est = est if np.isfinite(est) and est > 0 else 0.0
+        if occ_est is None:
+            occ_est = est if np.isfinite(est) and est > 0 else 0.0
         a0 = arrivals[gq0] if arrivals is not None else None
         free_pred = (max(float(a0), self.free_at) + occ_est
                      if a0 is not None else self.free_at + occ_est)
@@ -506,10 +798,17 @@ class PipelineRunner:
 
     def _observe_span(self, s0: int) -> None:
         """Feed the policy's observe hook every query executed since
-        dense index ``s0`` (its measured queue delay + service time)."""
-        for s in range(s0, self.num_served):
-            self._observe(float(self.queue_delay[s]),
-                          float(self.service_lat[s]))
+        dense index ``s0`` (its measured queue delay + service time,
+        plus the dispatch occupancy it rode in when the hook takes it)."""
+        if self._observe_occ:
+            for s in range(s0, self.num_served):
+                self._observe(float(self.queue_delay[s]),
+                              float(self.service_lat[s]),
+                              occupancy=float(self.batch_sizes[s]))
+        else:
+            for s in range(s0, self.num_served):
+                self._observe(float(self.queue_delay[s]),
+                              float(self.service_lat[s]))
 
     # -- telemetry flushing (repro.telemetry; docs/TELEMETRY.md) -------------
     @property
@@ -541,7 +840,10 @@ class PipelineRunner:
                 serial_mask=self.serial_mask[s0:s1],
                 arrival_times=self.arrival_t[s0:s1],
                 completion_times=self.completion_t[s0:s1],
-                queue_depths=self.queue_depth[s0:s1])
+                queue_depths=self.queue_depth[s0:s1],
+                batch_sizes=self.batch_sizes[s0:s1],
+                padded_tokens=self.padded_tok[s0:s1],
+                actual_tokens=self.actual_tok[s0:s1])
         if self._streaming:
             self.num_flushed += s1
             self.num_served = 0
@@ -573,6 +875,73 @@ class PipelineRunner:
         completion = self._scalar_tick(gq, step, arrival)
         self.num_offered = gq + 1
         return completion
+
+    def step_many(self, arrivals) -> List[float]:
+        """Serve several already-routed queries in one call, grouping
+        steady same-config runs through ``execute_many``.
+
+        The cluster's rebatch path (docs/CLUSTER.md): a replica that
+        accumulated a routed backlog flushes it here instead of
+        query-by-query :meth:`step`, so a burst pays one set of stage
+        dispatches.  Arrival times must be non-decreasing and already
+        in the past at flush time (a real batch can only stack queries
+        that have arrived).  Like :meth:`step`, no admission check is
+        made here — the cluster sheds at its own routing layer.
+        Returns the per-query completion times in arrival order.
+        """
+        arr = np.asarray(arrivals, dtype=float)
+        n = len(arr)
+        if n == 0:
+            return []
+        if self._mode is None or n == 1:
+            return [self.step(float(a)) for a in arr]
+        executor, runtime = self.executor, self.runtime
+        out: List[float] = []
+        i = 0
+        while i < n:
+            if self.telemetry is not None and self._should_flush():
+                self.flush_telemetry()
+            gq = self.num_offered
+            self._ensure_capacity(self.num_served + (n - i) + 1)
+            source = executor.begin_query(gq)
+            s0 = self.num_served
+            if self.rc_thr is not None:
+                self.rc_thr[s0] = executor.reference_throughput(gq)
+            step = (runtime.poll(source) if source is not None
+                    else runtime.steady_step())
+            if step.serial:
+                out.append(self._scalar_tick(gq, step, float(arr[i])))
+                self.num_offered = gq + 1
+                i += 1
+                continue
+            limit = min(n - i, self._chunk_cap_now(),
+                        max(1, int(executor.steady_horizon(gq))))
+            steps = [step]
+            leftover = None
+            j = 1
+            while j < limit:
+                src_j = executor.begin_query(gq + j)
+                if self.rc_thr is not None:
+                    self.rc_thr[s0 + j] = executor.reference_throughput(gq + j)
+                step_j = (runtime.poll(src_j) if src_j is not None
+                          else runtime.steady_step())
+                if step_j.serial or step_j.config != step.config:
+                    leftover = step_j
+                    break
+                steps.append(step_j)
+                j += 1
+            k = len(steps)
+            self._chunk_tick(gq, steps, arr[i:i + k])
+            out.extend(self.completion_t[s0:s0 + k].tolist())
+            self.num_offered = gq + k
+            i += k
+            if leftover is not None:
+                # Polled but not chunkable (trial or config change):
+                # execute scalar without re-advancing the runtime.
+                out.append(self._scalar_tick(gq + k, leftover, float(arr[i])))
+                self.num_offered += 1
+                i += 1
+        return out
 
     # -- full-run driving (the run_pipeline path) ---------------------------
     def run(self, num_queries: int,
@@ -610,6 +979,35 @@ class PipelineRunner:
                 rc_thr[s0] = executor.reference_throughput(q)
             step = runtime.poll(source) if source is not None \
                 else runtime.steady_step()
+
+            # -- formed dispatch (batch former attached) -------------------
+            if self._former is not None:
+                former = self._former
+                if step.serial and not former.explore_in_batch:
+                    # Trials drain the pipeline exactly as before unless
+                    # the former opts them into riding a dispatch.
+                    self._scalar_tick(q, step, arrival)
+                    if observe is not None:
+                        self._observe_span(s0)
+                    q += 1
+                    continue
+                if (self._poll_once and not step.serial
+                        and self._profile is not None):
+                    m = self._solo_window(q, step, arrivals, end)
+                    if m >= 1:
+                        # Join-free run: singleton dispatches, served
+                        # vectorized — bit-identical to the scalar loop.
+                        if rc_thr is not None:
+                            rc_thr[s0:s0 + m] = rc_thr[s0]
+                        self._chunk_tick(q, [step] * m,
+                                         arrivals[q:q + m]
+                                         if arrivals is not None else None)
+                        if observe is not None:
+                            self._observe_span(s0)
+                        q += m
+                        continue
+                q = self._dispatch_tick(q, step, arrivals, end)
+                continue
 
             if mode is None or step.serial:
                 self._scalar_tick(q, step, arrival)
@@ -752,6 +1150,9 @@ class PipelineRunner:
             admission=admission_name,
             slo_latency=slo,
             shed_arrivals=np.asarray(self.shed_arrivals, dtype=float),
+            batch_sizes=self.batch_sizes[:n],
+            padded_tokens=self.padded_tok[:n],
+            actual_tokens=self.actual_tok[:n],
         )
 
 
@@ -768,7 +1169,10 @@ def run_pipeline(executor: QueryExecutor,
                  admission_kwargs: Optional[dict] = None,
                  trace_mode: str = "dense",
                  metrics_sink=None,
-                 sink_interval: Optional[int] = None
+                 sink_interval: Optional[int] = None,
+                 former: Optional[BatchFormer] = None,
+                 lengths=None,
+                 lengths_kwargs: Optional[dict] = None
                  ) -> Union[PipelineTrace, StreamingTrace]:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
@@ -794,6 +1198,15 @@ def run_pipeline(executor: QueryExecutor,
     periodic :class:`~repro.telemetry.MetricsRegistry` snapshots every
     ~``sink_interval`` queries in *either* mode (dense results stay
     bit-identical with a sink attached).
+
+    ``former`` attaches a resolved
+    :class:`~repro.workloads.batching.BatchFormer` (drivers build one
+    via ``resolve_batching``); the executor must provide the
+    ``begin_dispatch`` builder and a ``configure_batching`` hook.
+    ``lengths`` / ``lengths_kwargs`` attach a per-query sequence-length
+    distribution (sampler name, instance, or explicit array —
+    ``repro.workloads.lengths``); without a former lengths are
+    accounting-only (token counters in the trace).
     """
     # Deferred import: repro.control registers its builtins on first
     # use; the run loop itself only needs the resolver.
@@ -810,8 +1223,26 @@ def run_pipeline(executor: QueryExecutor,
             sink_interval=(sink_interval if sink_interval is not None
                            else DEFAULT_SINK_INTERVAL))
 
-    wl_name, arrivals = resolve_arrivals(workload, workload_kwargs,
-                                         num_queries)
+    wl = resolve_workload(workload, workload_kwargs)
+    wl_name, arrivals = resolve_arrivals(wl, None, num_queries)
+    lengths_arr = resolve_lengths(lengths, lengths_kwargs, num_queries,
+                                  workload=wl)
+    padded = None
+    if former is not None:
+        padded = former.padded_lengths(lengths_arr)
+        configure = getattr(executor, "configure_batching", None)
+        if not callable(configure):
+            raise ValueError(
+                "batching requires an executor providing "
+                "configure_batching(former, lengths, padded); got "
+                f"{type(executor).__name__}")
+        configure(former, lengths_arr, padded)
+    elif lengths_arr is not None:
+        # Accounting-only lengths: padded == actual, no cost model.
+        padded = lengths_arr
+        configure = getattr(executor, "configure_batching", None)
+        if callable(configure):
+            configure(None, lengths_arr, padded)
     # Executors whose interference timeline is wall-clock anchored
     # (time-indexed events, docs/CLUSTER.md) need each query's arrival
     # time to advance the environment.
@@ -822,7 +1253,8 @@ def run_pipeline(executor: QueryExecutor,
     runner = PipelineRunner(executor, runtime, num_queries,
                             chunking=chunking, max_chunk=max_chunk,
                             admission=policy, trace_mode=trace_mode,
-                            telemetry=telemetry)
+                            telemetry=telemetry, former=former,
+                            lengths=lengths_arr, padded=padded)
     runner.run(num_queries, arrivals)
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,

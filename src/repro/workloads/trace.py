@@ -52,6 +52,16 @@ class PipelineTrace:
     #: Arrival times of shed queries (empty = nothing shed).  The
     #: per-query arrays above only ever hold *admitted* queries.
     shed_arrivals: Optional[np.ndarray] = None
+    # -- batch occupancy / padding accounting (docs/WORKLOADS.md) ------------
+    #: Size of the dispatch each query rode in (1.0 for solo queries;
+    #: ``None`` on traces built before batching existed — read as all-1).
+    batch_sizes: Optional[np.ndarray] = None
+    #: Padded tokens charged to each query (bucket-edge length, plus any
+    #: batch-dimension padding charged to the dispatch head); zeros when
+    #: the run carried no length information.
+    padded_tokens: Optional[np.ndarray] = None
+    #: Useful tokens per query (actual sequence length).
+    actual_tokens: Optional[np.ndarray] = None
 
     def __post_init__(self):
         n = len(self.latencies)
@@ -65,6 +75,12 @@ class PipelineTrace:
             self.shed_arrivals = np.empty(0)
         else:
             self.shed_arrivals = np.asarray(self.shed_arrivals, dtype=float)
+        if self.batch_sizes is None:
+            self.batch_sizes = np.ones(n)
+        if self.padded_tokens is None:
+            self.padded_tokens = np.zeros(n)
+        if self.actual_tokens is None:
+            self.actual_tokens = np.zeros(n)
         # Percentile reads share one sort per field (summary() alone
         # makes three; rows() adds more) — sorted once, cached here.
         self._sorted_cache: Dict[str, np.ndarray] = {}
@@ -192,6 +208,24 @@ class PipelineTrace:
             return float("inf")
         return float(np.sum(self.latencies <= self.slo_latency)) / span
 
+    # -- batch occupancy / padding (docs/WORKLOADS.md) -----------------------
+    @property
+    def mean_batch_occupancy(self) -> float:
+        """Mean dispatch size queries rode in (1.0 = everything solo)."""
+        if not len(self.batch_sizes):
+            return float("nan")
+        return float(np.mean(self.batch_sizes))
+
+    @property
+    def padded_token_frac(self) -> float:
+        """Fraction of executed tokens that were padding waste
+        (``1 - actual/padded``); 0.0 when the run carried no length
+        information (both totals are then zero)."""
+        total = float(np.sum(self.padded_tokens))
+        if total <= 0.0:
+            return 0.0
+        return 1.0 - float(np.sum(self.actual_tokens)) / total
+
     # -- offered vs. achieved load ------------------------------------------
     @property
     def offered_load(self) -> float:
@@ -272,4 +306,8 @@ class PipelineTrace:
             "goodput_qps": self.goodput_qps,
             "slo_attainment": self.slo_attainment,
             "slo_latency_s": float(self.slo_latency),
+            # -- batch occupancy / padding (docs/WORKLOADS.md) --------------
+            "mean_batch_occupancy": self.mean_batch_occupancy,
+            "p99_batch_occupancy": self.percentile(99, "batch_sizes"),
+            "padded_token_frac": self.padded_token_frac,
         }

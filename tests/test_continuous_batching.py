@@ -1,0 +1,386 @@
+"""Continuous batching + length-bucketed dispatch (docs/WORKLOADS.md).
+
+Sim-side: chunked/scalar parity of the formed-dispatch paths, the
+drain-vs-continuous queue-delay win on the benchmark's locked config,
+closed-loop equivalence, occupancy/padded-token accounting (dense and
+streaming), batch-aware exploration, and the seeded length samplers.
+Live-side: a continuous serve smoke on the real JAX engine, the
+closed pre-warmed compile-shape set, and `run_batch`'s typed
+mixed-length error + single-query no-copy forwarding.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import simulate, synthetic_database
+from repro.workloads import make_lengths
+from repro.workloads.batching import (LengthBuckets, next_pow2,
+                                      resolve_batching)
+
+#: The benchmark row's locked configuration (benchmarks/runner_bench.py
+#: `bench_batching`): bursty bimodal-length traffic against an 8-EP
+#: vgg16 pipeline, where continuous joins monetize the bursts.
+LOCKED = dict(
+    scheduler="none", events=[], num_queries=800,
+    workload="bursty",
+    workload_kwargs=dict(rate=0.0035, burst_rate=0.007, burst_prob=0.05,
+                         seed=7),
+    max_batch=16, buckets="pow2:64:512",
+    lengths="bimodal",
+    lengths_kwargs=dict(short=48, long=420, p_long=0.1, seed=11),
+    batch_overhead=30.0,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+# ---------------------------------------------------------------------------
+# chunked == scalar parity on the formed-dispatch paths
+
+
+@pytest.mark.parametrize("scheduler,admission", [
+    ("odin", None),
+    ("lls", None),
+    ("none", None),
+    ("odin", "slo_shed"),
+])
+def test_continuous_chunked_scalar_identical(db, scheduler, admission):
+    """Chunked and scalar continuous-batching runs make identical
+    dispatch/join/shed decisions — full-array bit identity, including
+    the paper's stress setting (freq=2, dur=100)."""
+    kw = dict(scheduler=scheduler, num_queries=400, freq_period=2,
+              duration=100, seed=0,
+              workload="bursty",
+              workload_kwargs=dict(rate=0.0035, burst_rate=0.007,
+                                   burst_prob=0.05, seed=7),
+              batching="continuous", max_batch=16, buckets="pow2:64:512",
+              lengths="bimodal",
+              lengths_kwargs=dict(short=48, long=420, p_long=0.1, seed=11),
+              batch_overhead=30.0)
+    if admission is not None:
+        kw.update(admission=admission,
+                  admission_kwargs=dict(slo=3000.0))
+    a = simulate(db, 8, chunking=True, **kw)
+    b = simulate(db, 8, chunking=False, **kw)
+    for col in ("latencies", "queue_delays", "service_latencies",
+                "batch_sizes", "arrival_times", "completion_times"):
+        assert np.array_equal(getattr(a, col), getattr(b, col)), col
+    assert a.configs_trace == b.configs_trace
+    assert a.num_rebalances == b.num_rebalances
+    assert a.total_trials == b.total_trials
+    assert a.num_shed == b.num_shed
+    if admission is not None:
+        assert a.num_shed > 0, "slo_shed row should actually shed"
+
+
+# ---------------------------------------------------------------------------
+# the perf claim, on the benchmark's locked config
+
+
+def test_continuous_beats_drain_on_locked_config(db):
+    """Continuous >= 1.3x lower mean queue delay than drain at equal
+    offered load, p99 no worse — the CI-gated benchmark row."""
+    runs = {mode: simulate(db, 8, batching=mode, **LOCKED)
+            for mode in ("drain", "continuous")}
+    s = {mode: r.summary() for mode, r in runs.items()}
+    ratio = (s["drain"]["mean_queue_delay_s"]
+             / s["continuous"]["mean_queue_delay_s"])
+    assert ratio >= 1.3
+    assert (s["continuous"]["p99_queue_delay_s"]
+            <= s["drain"]["p99_queue_delay_s"])
+    # identical offered load and no losses: every query completes
+    assert (s["drain"]["offered_load_qps"]
+            == s["continuous"]["offered_load_qps"])
+    for mode in runs:
+        assert len(runs[mode].latencies) == LOCKED["num_queries"]
+
+
+def test_closed_loop_drain_equals_continuous(db):
+    """A closed loop serves one query at a time (the next arrival only
+    exists once the previous completes), so there is nothing to join:
+    both modes degenerate to the same solo-dispatch trace."""
+    kw = dict(scheduler="odin", num_queries=300, freq_period=25,
+              duration=10, seed=0, max_batch=16, buckets="pow2:64:512",
+              lengths="bimodal",
+              lengths_kwargs=dict(short=48, long=420, p_long=0.1, seed=11),
+              batch_overhead=30.0)
+    a = simulate(db, 8, batching="drain", **kw)
+    b = simulate(db, 8, batching="continuous", **kw)
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.batch_sizes, b.batch_sizes)
+    assert a.summary()["mean_batch_occupancy"] == 1.0
+
+
+def test_lengths_without_batching_is_accounting_only(db):
+    """`lengths=` alone must not perturb dispatch: latencies are
+    bit-identical to the plain run, and with no former there is no
+    padding to account."""
+    base = simulate(db, 8, scheduler="odin", num_queries=300, seed=0)
+    lo = simulate(db, 8, scheduler="odin", num_queries=300, seed=0,
+                  lengths="bimodal",
+                  lengths_kwargs=dict(short=48, long=420, p_long=0.1,
+                                      seed=11))
+    assert np.array_equal(base.latencies, lo.latencies)
+    assert lo.summary()["padded_token_frac"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# occupancy / padded-token accounting
+
+
+def test_occupancy_and_padding_accounting(db):
+    r = simulate(db, 8, batching="continuous", **LOCKED)
+    s = r.summary()
+    assert s["mean_batch_occupancy"] > 1.0, "bursts should form batches"
+    assert 0.0 < s["padded_token_frac"] < 1.0
+    assert r.batch_sizes.max() <= LOCKED["max_batch"]
+    assert r.batch_sizes.min() >= 1.0
+
+
+def test_streaming_trace_matches_dense_accounting(db):
+    """trace_mode="streaming" reports the same summary key set and the
+    identical occupancy/padding aggregates for a formed run."""
+    dense = simulate(db, 8, batching="continuous", **LOCKED).summary()
+    stream = simulate(db, 8, batching="continuous",
+                      trace_mode="streaming", **LOCKED).summary()
+    assert set(dense) == set(stream)
+    assert stream["mean_batch_occupancy"] == pytest.approx(
+        dense["mean_batch_occupancy"])
+    assert stream["padded_token_frac"] == pytest.approx(
+        dense["padded_token_frac"])
+
+
+def test_explore_in_batch_keeps_exploring_with_riders(db):
+    """Batch-aware exploration keeps the detect->explore->commit loop
+    functional (trials run, rebalances land) while trial dispatches
+    accept riders — occupancy no worse than serial-trial exploration."""
+    kw = dict(scheduler="odin", num_queries=600, freq_period=50,
+              duration=30, seed=0,
+              workload="bursty",
+              workload_kwargs=dict(rate=0.0035, burst_rate=0.007,
+                                   burst_prob=0.05, seed=7),
+              batching="continuous", max_batch=16, buckets="pow2:64:512",
+              lengths="bimodal",
+              lengths_kwargs=dict(short=48, long=420, p_long=0.1, seed=11),
+              batch_overhead=30.0)
+    serial = simulate(db, 8, **kw)
+    riding = simulate(db, 8, explore_in_batch=True, **kw)
+    for r in (serial, riding):
+        assert r.num_rebalances >= 1
+        assert r.total_trials > 0
+        assert 0.0 < r.rebalance_fraction < 1.0
+    assert (riding.summary()["mean_batch_occupancy"]
+            >= serial.summary()["mean_batch_occupancy"])
+
+
+# ---------------------------------------------------------------------------
+# length buckets + formers (unit level)
+
+
+def test_resolve_batching_modes():
+    assert resolve_batching(None) is None
+    drain = resolve_batching("drain", max_batch=4, buckets="pow2:64:256")
+    cont = resolve_batching("continuous", max_batch=4,
+                            buckets="pow2:64:256")
+    assert not drain.continuous and cont.continuous
+    assert drain.max_batch == cont.max_batch == 4
+    with pytest.raises(ValueError, match="batching"):
+        resolve_batching("sometimes")
+
+
+def test_length_buckets_pow2_and_overflow():
+    b = LengthBuckets.pow2(64, 512)
+    assert list(b.edges) == [64, 128, 256, 512]
+    assert b.pad(1) == 64
+    assert b.pad(64) == 64
+    assert b.pad(65) == 128
+    assert b.pad(512) == 512
+    with pytest.raises(ValueError):
+        b.pad(513)
+    padded = b.pad_many(np.array([48, 420, 64, 129]))
+    assert list(padded) == [64, 512, 64, 256]
+    with pytest.raises(ValueError):
+        b.pad_many(np.array([48, 4096]))
+
+
+def test_next_pow2():
+    assert [next_pow2(n) for n in (1, 2, 3, 4, 5, 8, 9)] \
+        == [1, 2, 4, 4, 8, 8, 16]
+
+
+# ---------------------------------------------------------------------------
+# seeded length samplers
+
+
+def test_length_samplers_seeded_deterministic():
+    for name, kw in (("uniform", dict(lo=32, hi=128, seed=3)),
+                     ("bimodal", dict(short=48, long=420, p_long=0.1,
+                                      seed=3))):
+        a = make_lengths(name, **kw).sample(500)
+        b = make_lengths(name, **kw).sample(500)
+        assert np.array_equal(a, b), name
+        c = make_lengths(name, **{**kw, "seed": 4}).sample(500)
+        assert not np.array_equal(a, c), name
+
+
+def test_length_sampler_bounds_and_support():
+    u = make_lengths("uniform", lo=32, hi=128, seed=0).sample(1000)
+    assert u.min() >= 32 and u.max() <= 128
+    bi = make_lengths("bimodal", short=48, long=420, p_long=0.25,
+                      seed=0).sample(1000)
+    assert set(np.unique(bi)) == {48, 420}
+    frac_long = float(np.mean(bi == 420))
+    assert 0.15 < frac_long < 0.35
+    f = make_lengths("fixed", length=96).sample(10)
+    assert np.array_equal(f, np.full(10, 96))
+
+
+def test_trace_lengths_replay_and_cycle():
+    t = make_lengths("trace", lengths=[64, 128, 256])
+    assert list(t.sample(3)) == [64, 128, 256]
+    assert list(t.sample(7)) == [64, 128, 256, 64, 128, 256, 64]
+    with pytest.raises(ValueError):
+        make_lengths("no_such_sampler")
+
+
+# ---------------------------------------------------------------------------
+# adaptive_batch occupancy feedback
+
+
+def test_adaptive_batch_occupancy_accelerates_widening():
+    """With the p99 comfortably under the SLO, a bound whose dispatches
+    run near-full widens x4; a mostly-idle bound widens x2."""
+    from repro.control import make_admission
+
+    def feed(occupancy):
+        adm = make_admission("adaptive_batch", slo=10.0, min_batch=1,
+                             max_batch=64, interval=8)
+        adm._bound = 4
+        for _ in range(8):
+            adm.observe(0.001, 0.5, occupancy=occupancy)
+        return adm._bound
+
+    assert feed(4.0) == 16      # saturated: 4 -> x4
+    assert feed(1.0) == 8       # idle dispatches: 4 -> x2
+
+
+def test_adaptive_batch_occupancy_default_backward_compatible():
+    """observe() without the occupancy kwarg still works (the sim's
+    vector mode reports occupancy 1.0) and shrink stays occupancy-blind."""
+    from repro.control import make_admission
+    adm = make_admission("adaptive_batch", slo=1.0, min_batch=1,
+                         max_batch=64, interval=4)
+    adm._bound = 16
+    for _ in range(4):
+        adm.observe(5.0, 0.5, occupancy=16.0)   # p99 blown: halve anyway
+    assert adm._bound == 8
+    adm2 = make_admission("adaptive_batch", slo=10.0, min_batch=1,
+                          max_batch=64, interval=4)
+    adm2._bound = 4
+    for _ in range(4):
+        adm2.observe(0.001, 0.5)                # legacy call signature
+    assert adm2._bound == 8
+
+
+# ---------------------------------------------------------------------------
+# live engine: continuous serving on the real JAX pipeline
+
+
+@pytest.fixture(scope="module")
+def live_setup():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), num_layers=8)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                        (1, 64 if rng.random() < 0.3
+                                         else 32)))
+               for _ in range(24)]
+    return cfg, params, queries
+
+
+def _live_schedule(q):
+    slow = [1.0] * 4
+    if 6 <= q < 16:
+        slow[1] = 2.0
+    return slow
+
+
+_LIVE_KW = dict(workload="bursty",
+                workload_kwargs=dict(rate=30.0, burst_rate=300.0,
+                                     burst_prob=0.2, seed=1),
+                batching="continuous", max_batch=4, buckets="pow2:32:64")
+
+
+def test_live_continuous_serve_smoke(live_setup):
+    from repro.serving import ServingEngine
+
+    cfg, params, queries = live_setup
+    eng = ServingEngine(cfg, params, num_eps=4, scheduler="odin", alpha=3)
+    m = eng.serve(queries, _live_schedule, **_LIVE_KW)
+    s = m.summary()
+    assert len(m.latencies) == len(queries)
+    assert s["mean_batch_occupancy"] >= 1.0
+    # sim/live summary parity holds for formed-dispatch runs too
+    sim_s = simulate(synthetic_database("vgg16", seed=0), 8,
+                     batching="continuous", **LOCKED).summary()
+    assert set(s) == set(sim_s)
+    assert np.all(m.queue_delays >= 0)
+    assert np.all(m.service_latencies > 0)
+    # the compiled-shape set is the closed pow2-rows x bucket-edges
+    # family — nothing outside it may have been warmed
+    edges = (32, 64)
+    for rows, seq in eng.executor._warmed:
+        assert seq in edges and rows == next_pow2(rows)
+
+    # regression: a fresh serve over warm shapes must not compile —
+    # any ensure_warm cache miss would call warmup and raise here
+    def no_compiles(*a, **k):
+        raise AssertionError(f"compile requested in warm serve: {a}")
+
+    eng.reset_policy()
+    eng.executor.warmup = no_compiles
+    m2 = eng.serve(queries, _live_schedule, **_LIVE_KW)
+    assert len(m2.latencies) == len(queries)
+
+
+def test_run_batch_typed_error_and_no_copy(live_setup):
+    from repro.pipeline.executor import (LocalPipelineExecutor,
+                                         MixedSequenceLengthError)
+
+    cfg, params, queries = live_setup
+    ex = LocalPipelineExecutor(cfg, params)
+    config = [2, 2, 2, 2]
+
+    q32 = next(q for q in queries if q.shape[-1] == 32)
+    q64 = next(q for q in queries if q.shape[-1] == 64)
+    with pytest.raises(MixedSequenceLengthError) as ei:
+        ex.run_batch([q32, q64, q32], config)
+    assert ei.value.lengths == [32, 64, 32]
+    assert "32" in str(ei.value) and "64" in str(ei.value)
+    assert isinstance(ei.value, ValueError)   # legacy except clauses
+
+    # single-query dispatch forwards the tokens object untouched
+    seen = {}
+    orig = ex.run_query
+
+    def spy(tokens, config, slowdowns=None):
+        seen["tokens"] = tokens
+        return orig(tokens, config, slowdowns=slowdowns)
+
+    ex.run_query = spy
+    try:
+        logits, stage_times = ex.run_batch([q32], config)
+    finally:
+        ex.run_query = orig
+    assert seen["tokens"] is q32
+    assert logits.shape[0] == 1 and stage_times.shape == (4,)
