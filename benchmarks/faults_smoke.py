@@ -1,0 +1,131 @@
+"""CI faults smoke: crash + flaky overload, recovery machinery on/off.
+
+Runs one deterministic fault scenario — a mid-run replica crash
+(time-indexed, so the replica recovers) plus a fleet-wide flaky window —
+through three fleet configurations:
+
+* ``reference``  — the same traffic with no faults at all,
+* ``no_retry``   — faults injected, zero retry budget (failures final),
+* ``recovered``  — faults injected, retry budget + backoff and a
+  sensitive circuit breaker (``failure_threshold=2``).
+
+and gates on the recovery machinery actually paying for itself:
+
+* ``recovered`` availability >= 99% while ``no_retry`` loses queries,
+* ``recovered`` goodput strictly above ``no_retry`` goodput,
+* p99 of *successful* queries within ``P99_MARGIN`` of the fault-free
+  reference (retries must not wreck the tail), and
+* the ``recovered`` run is bit-deterministic (two runs, equal summaries).
+
+Writes one row per configuration to
+``results/benchmarks/faults_smoke.csv``.
+
+    REPRO_FAULTS_QUERIES=600 PYTHONPATH=src python -m benchmarks.faults_smoke
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+from benchmarks.common import db_for, write_csv
+from repro.cluster import simulate_cluster
+from repro.core import simulate
+from repro.faults import FaultEvent, FaultPlan
+
+NUM_QUERIES = int(os.environ.get("REPRO_FAULTS_QUERIES", "600"))
+NUM_REPLICAS = 3
+UTILIZATION = 0.6           # offered load as a fraction of fleet peak
+P99_MARGIN = 1.5            # recovered p99 <= margin * reference p99
+
+COLS = ("availability", "goodput_qps", "p99_latency_s", "num_failed",
+        "num_retried", "num_hedged", "wasted_work_frac", "downtime_s")
+
+
+def fault_plan() -> FaultPlan:
+    """Crash replica 1 mid-run, then a fleet-wide flaky window.
+
+    Time-indexed so the crash window *ends*: the replica restarts,
+    re-warms, and must rejoin the fleet (docs/FAULTS.md)."""
+    return FaultPlan(events=[
+        FaultEvent("crash", start=400.0, duration=800.0, replica=1),
+        FaultEvent("flaky", start=1500.0, duration=900.0, p=0.5),
+    ], seed=0, time_indexed=True)
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    peak = simulate(db, NUM_REPLICAS, scheduler="none", events=[],
+                    num_queries=10).peak_throughput
+    wl = dict(rate=UTILIZATION * NUM_REPLICAS * peak, seed=11)
+    common = dict(scheduler="odin", num_queries=NUM_QUERIES,
+                  workload="poisson", workload_kwargs=wl,
+                  router="least_outstanding")
+    recover_kw = dict(
+        retries=dict(max_retries=4, backoff=1.0, jitter=0.5),
+        health_kwargs=dict(failure_threshold=2, cooldown=50.0))
+
+    runs = {
+        "reference": simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
+                                      **common),
+        "no_retry": simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
+                                     faults=fault_plan(),
+                                     retries=dict(max_retries=0),
+                                     **common),
+        "recovered": simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
+                                      faults=fault_plan(), **recover_kw,
+                                      **common),
+    }
+    rerun = simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
+                             faults=fault_plan(), **recover_kw, **common)
+
+    rows = []
+    for name, ct in runs.items():
+        s = ct.summary()
+        rows.append({"config": name, "num_queries": NUM_QUERIES,
+                     **{c: s[c] for c in COLS}})
+        print(f"{name:10s} avail {s['availability']:.4f}  "
+              f"goodput {s['goodput_qps']:.5f}  "
+              f"p99 {s['p99_latency_s']:8.2f}  "
+              f"failed {s['num_failed']:3.0f}  "
+              f"retried {s['num_retried']:3.0f}  "
+              f"downtime {s['downtime_s']:7.0f}")
+    path = write_csv("faults_smoke", rows)
+
+    ref, bare, rec = (runs[k].summary()
+                      for k in ("reference", "no_retry", "recovered"))
+    failed = []
+    if rec["availability"] < 0.99:
+        failed.append(f"recovered availability {rec['availability']:.4f} "
+                      "< 0.99")
+    if bare["num_failed"] <= 0:
+        failed.append("no_retry run lost no queries — the fault plan "
+                      "never bit; the comparison is vacuous")
+    if not rec["goodput_qps"] > bare["goodput_qps"]:
+        failed.append(f"recovered goodput {rec['goodput_qps']:.5f} not "
+                      f"above no_retry {bare['goodput_qps']:.5f}")
+    if rec["p99_latency_s"] > P99_MARGIN * ref["p99_latency_s"]:
+        failed.append(f"recovered p99 {rec['p99_latency_s']:.2f} > "
+                      f"{P99_MARGIN}x fault-free "
+                      f"{ref['p99_latency_s']:.2f}")
+    s1, s2 = runs["recovered"].summary(), rerun.summary()
+    drift = [k for k in s1
+             if s1[k] != s2[k]
+             and not (isinstance(s1[k], float) and math.isnan(s1[k])
+                      and math.isnan(s2[k]))]
+    if drift:
+        failed.append(f"recovered run not deterministic: {drift}")
+    bad = [(r["config"], c) for r in rows for c in COLS
+           if isinstance(r[c], float) and not math.isfinite(r[c])]
+    if bad:
+        failed.append(f"non-finite columns: {bad}")
+
+    if failed:
+        print("faults_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"faults_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,156 @@
+"""CI soak smoke: diurnal traffic + replica churn at flat memory.
+
+A miniature of the 10M-query soak run (docs/TELEMETRY.md,
+docs/FAULTS.md): a 3-replica fleet serves a sinusoidal diurnal arrival
+process while a deterministic churn plan (:func:`periodic_crashes`)
+takes one replica down after another, with retries + circuit-breaker
+routing carrying the traffic around each outage.  The run uses
+``trace_mode="streaming"`` and drives two sinks:
+
+* a :class:`ThresholdSink` paging on fleet availability dipping below
+  ``AVAIL_PAGE`` (hysteresis-cleared at ``AVAIL_CLEAR``), and
+* an RSS sampler that reads ``/proc/self/statm`` at every snapshot.
+
+Gates:
+
+* fleet availability >= ``AVAIL_GATE`` despite the churn,
+* every query served (replica counts sum to the offered count),
+* RSS growth from the first-quarter sample to the run's end below
+  ``RSS_BOUND_MB`` (flat-memory telemetry — the soak must not
+  accumulate per-query state), and
+* at least ``MIN_WINDOWS`` occupied windowed-rollup buckets.
+
+The summary, ThresholdSink incident log, RSS samples, and the
+windowed offered/achieved rate profile land in
+``results/benchmarks/soak_smoke.json`` for the CI artifact upload.
+
+    REPRO_SOAK_QUERIES=3000 PYTHONPATH=src python -m benchmarks.soak_smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import sys
+
+from benchmarks.common import RESULTS_DIR, db_for
+from repro.cluster import simulate_cluster
+from repro.core import simulate
+from repro.faults import periodic_crashes
+from repro.telemetry import ThresholdSink
+
+NUM_QUERIES = int(os.environ.get("REPRO_SOAK_QUERIES", "3000"))
+NUM_REPLICAS = 3
+UTILIZATION = 0.55        # mean offered load vs fleet peak
+AVAIL_PAGE = 0.95         # ThresholdSink pages below this...
+AVAIL_CLEAR = 0.97        # ...and re-arms above this (hysteresis)
+AVAIL_GATE = 0.99         # hard gate on the final fleet availability
+RSS_BOUND_MB = 64.0       # generous flat-memory bound
+MIN_WINDOWS = 8
+
+
+def _rss_mb() -> float:
+    """Current resident set in MiB (Linux); peak-RSS fallback."""
+    try:
+        with open("/proc/self/statm") as f:
+            pages = int(f.read().split()[1])
+        return pages * resource.getpagesize() / 2**20
+    except (OSError, IndexError, ValueError):
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+class RssSampler:
+    """Forwards snapshots to an inner sink, sampling RSS per emit."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.samples = []
+
+    def emit(self, snapshot):
+        self.samples.append(_rss_mb())
+        self.inner.emit(snapshot)
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    peak = simulate(db, NUM_REPLICAS, scheduler="none", events=[],
+                    num_queries=10).peak_throughput
+    mean_rate = UTILIZATION * NUM_REPLICAS * peak
+    horizon = NUM_QUERIES / mean_rate
+    churn = periodic_crashes(horizon, period=horizon / 8,
+                             duration=horizon / 40,
+                             num_replicas=NUM_REPLICAS, time_indexed=True)
+
+    pager = ThresholdSink()
+    pager.add_rule("repro_availability", AVAIL_PAGE, above=False,
+                   clear=AVAIL_CLEAR)
+    sink = RssSampler(pager)
+
+    ct = simulate_cluster(
+        db, NUM_REPLICAS, NUM_REPLICAS, scheduler="odin",
+        num_queries=NUM_QUERIES, router="least_outstanding",
+        workload="diurnal",
+        workload_kwargs=dict(mean_rate=mean_rate, period=horizon / 2,
+                             amplitude=0.6, seed=13),
+        faults=churn,
+        retries=dict(max_retries=4, backoff=2.0, jitter=0.5),
+        health_kwargs=dict(failure_threshold=1, cooldown=horizon / 160),
+        trace_mode="streaming", metrics_sink=sink,
+        sink_interval=max(50, NUM_QUERIES // 30))
+
+    s = ct.summary()
+    starts, offered, achieved = ct.fleet.load_profile()
+    quarter = sink.samples[max(0, len(sink.samples) // 4 - 1)]
+    rss_growth = sink.samples[-1] - quarter
+    print(f"soak: {NUM_QUERIES} queries, {len(churn.events)} crash "
+          f"windows, avail {s['availability']:.4f}, "
+          f"retried {s['num_retried']:.0f}, "
+          f"downtime {s['downtime_s']:.0f}s, "
+          f"p99 {s['p99_latency_s']:.1f}s, "
+          f"rss growth {rss_growth:+.1f} MiB over "
+          f"{len(sink.samples)} samples, "
+          f"{len(pager.incidents)} availability incidents")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "soak_smoke.json")
+    with open(path, "w") as f:
+        json.dump({
+            "num_queries": NUM_QUERIES,
+            "num_replicas": NUM_REPLICAS,
+            "crash_windows": len(churn.events),
+            "summary": s,
+            "incidents": pager.incidents,
+            "rss_mb": sink.samples,
+            "load_profile": {"window_starts": starts.tolist(),
+                             "offered_qps": offered.tolist(),
+                             "achieved_qps": achieved.tolist()},
+        }, f, indent=2)
+
+    failed = []
+    if s["availability"] < AVAIL_GATE:
+        failed.append(f"availability {s['availability']:.4f} "
+                      f"< {AVAIL_GATE}")
+    served = int(ct.replica_counts.sum())
+    expected = NUM_QUERIES - int(s["num_failed"]) - int(s["num_shed"])
+    if served != expected:
+        failed.append(f"{served} served != {expected} "
+                      "offered - failed - shed")
+    if rss_growth > RSS_BOUND_MB:
+        failed.append(f"RSS grew {rss_growth:.1f} MiB "
+                      f"(bound {RSS_BOUND_MB}) — streaming telemetry "
+                      "is accumulating per-query state")
+    if len(starts) < MIN_WINDOWS:
+        failed.append(f"only {len(starts)} rollup windows "
+                      f"(need >= {MIN_WINDOWS})")
+    if len(sink.samples) < 2:
+        failed.append("metrics sink never fired")
+
+    if failed:
+        print("soak_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"soak_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -31,7 +32,10 @@ from repro.cluster.registry import resolve_router
 from repro.cluster.trace import ClusterTrace
 from repro.control.base import AdmissionView
 from repro.control.registry import resolve_admission, resolve_autoscaler
+from repro.faults.health import OPEN, HealthTracker
+from repro.faults.retry import RetrySpec, resolve_retries
 from repro.schedulers.runtime import RebalanceRuntime
+from repro.util.errors import TransientQueryError
 from repro.telemetry.streaming import (
     DEFAULT_SINK_INTERVAL,
     StreamingClusterTrace,
@@ -77,6 +81,11 @@ class Replica:
     name: str = ""
     peak_throughput: float = float("nan")
     on_assign: Optional[Callable[[int, int, Optional[float]], None]] = None
+    #: optional recovery hook ``on_recover(now)`` — fired once per
+    #: breaker open->probe transition, *before* the probe dispatch: the
+    #: live backend re-warms its XLA shape buckets off the timed path
+    #: (docs/FAULTS.md), the simulator backend needs nothing.
+    on_recover: Optional[Callable[[float], None]] = None
 
 
 class Cluster:
@@ -117,11 +126,36 @@ class Cluster:
                  admission_kwargs: Optional[dict] = None,
                  autoscaler: Union[str, object, None] = None,
                  autoscaler_kwargs: Optional[dict] = None,
-                 max_batch: int = 1):
+                 max_batch: int = 1,
+                 retries: Union[RetrySpec, int, dict, None] = None,
+                 hedge_after: Optional[float] = None,
+                 health_kwargs: Optional[dict] = None,
+                 when_all_unhealthy: str = "wait"):
         if len(replicas) < 1:
             raise ValueError("a cluster needs at least one replica")
+        if when_all_unhealthy not in ("wait", "shed"):
+            raise ValueError(f"when_all_unhealthy must be 'wait' or "
+                             f"'shed', got {when_all_unhealthy!r}")
         self.replicas = list(replicas)
         self.max_batch = max(1, int(max_batch))
+        # -- fault tolerance (repro.faults; docs/FAULTS.md) ------------------
+        self.retries = resolve_retries(retries)
+        self.hedge_after = (None if hedge_after is None
+                            else float(hedge_after))
+        self.health_kwargs = dict(health_kwargs or {})
+        self.when_all_unhealthy = when_all_unhealthy
+        #: the fleet loop arms its recovery machinery when retries are
+        #: configured, hedging is on, or any replica injects faults.
+        self.fault_aware = (self.retries is not None
+                            or self.hedge_after is not None
+                            or any(getattr(rep.executor, "injects_faults",
+                                           False) for rep in self.replicas))
+        if self.fault_aware and self.retries is None:
+            self.retries = RetrySpec()     # default budget (docs/FAULTS.md)
+        if self.fault_aware and self.max_batch > 1:
+            raise ValueError("fleet rebatching (max_batch > 1) is not "
+                             "supported with faults/retries/hedging: "
+                             "retry routing needs per-query dispatch")
         self.router = resolve_router(router, router_kwargs)
         self.router_name = getattr(self.router, "name",
                                    type(self.router).__name__)
@@ -196,6 +230,17 @@ class Cluster:
         # (monotone) decision clock to count in-system queries.
         outstanding: List[List[float]] = [[] for _ in self.replicas]
         last_assign = [-1] * len(self.replicas)
+        # -- fault tolerance (repro.faults; docs/FAULTS.md) ------------------
+        tracker = (HealthTracker(len(runners), **self.health_kwargs)
+                   if self.fault_aware else None)
+        retry = self.retries
+        hedge_after = self.hedge_after
+        if tracker is not None:
+            # The cluster owns retries (routing across replicas), but
+            # the runners still report the fault counters the cluster
+            # stamps into them on every telemetry flush.
+            for runner in runners:
+                runner._fault_aware = True
         # Shed queries keep the sentinel -1 (admission control); the
         # per-arrival ledger is exactly what streaming mode must not
         # materialize.
@@ -241,6 +286,111 @@ class Cluster:
             pend.clear()
             pend_r = -1
 
+        def est_service(v: ReplicaView) -> float:
+            est = v.est_latency
+            return est if est == est else 0.0
+
+        def assign(i: int, r: int, arrival: Optional[float]) -> None:
+            hook = self.replicas[r].on_assign
+            if hook is not None:
+                hook(i, runners[r].total_served, arrival)
+            last_assign[r] = i
+
+        def rewarm(r: int, clock: float) -> None:
+            """Fire the replica's re-warm hook once per open->probe
+            transition, before its probe dispatch (off the timed path)."""
+            if tracker.take_rewarm(r):
+                hook = self.replicas[r].on_recover
+                if hook is not None:
+                    hook(clock)
+
+        def serve_one(i: int, r: int, arrival: Optional[float],
+                      not_before: Optional[float], candidates):
+            """Serve fleet query ``i`` starting on replica ``r``,
+            retrying transient failures across healthy replicas under
+            the retry budget (exponential backoff, least-loaded
+            re-route).  Returns ``(completion, winner)`` on success,
+            ``(None, r)`` when the budget is exhausted.  ``candidates``
+            is the active view list retries/hedges may route over."""
+            attempt = 0
+            hedge_loser = None
+            # Tail-latency hedging: when the chosen replica's backlog
+            # exceeds ``hedge_after``, duplicate the dispatch on the
+            # least-loaded healthy peer; the predicted-faster copy
+            # executes (first one wins), the loser is cancelled at the
+            # winner's completion and charged as wasted work.
+            if (hedge_after is not None and arrival is not None
+                    and runners[r].free_at - arrival > hedge_after):
+                others = [v for v in candidates
+                          if v.index != r
+                          and tracker.healthy(v.index, arrival)]
+                if others:
+                    vr = next(v for v in candidates if v.index == r)
+                    alt = min(others, key=lambda v: (max(v.free_at, arrival),
+                                                     v.index))
+                    prim_eta = max(vr.free_at, arrival) + est_service(vr)
+                    alt_eta = max(alt.free_at, arrival) + est_service(alt)
+                    if alt_eta < prim_eta:
+                        hedge_loser, r = r, alt.index
+                        assign(i, r, arrival)
+                    else:
+                        hedge_loser = alt.index
+                        assign(i, hedge_loser, arrival)
+            while True:
+                rewarm(r, max(arrival or 0.0, not_before or 0.0,
+                              runners[r].free_at))
+                try:
+                    completion = runners[r].step(arrival,
+                                                 not_before=not_before)
+                except TransientQueryError as err:
+                    hedge_loser = None       # hedge abandoned on failure
+                    fail_t = max(runners[r].free_at, arrival or 0.0,
+                                 not_before or 0.0)
+                    tmo = getattr(err, "timeout", None)
+                    if tmo is not None and tmo == tmo:
+                        # A timed-out hang occupied the head for the
+                        # full timeout before cancellation.
+                        runners[r].charge_occupancy(
+                            max(fail_t, arrival or 0.0), float(tmo))
+                        fail_t = runners[r].free_at
+                    tracker.record_failure(r, fail_t,
+                                           until=getattr(err, "until",
+                                                         math.nan))
+                    if attempt >= retry.max_retries:
+                        runners[r].num_failed += 1
+                        return None, r
+                    runners[r].num_retried += 1
+                    hold = fail_t + retry.delay(i, attempt)
+                    attempt += 1
+                    pool = [v for v in candidates
+                            if tracker.healthy(v.index, hold)]
+                    if not pool:
+                        if self.when_all_unhealthy == "shed":
+                            runners[r].num_failed += 1
+                            return None, r
+                        hold = max(hold, min(tracker.ready_at(v.index)
+                                             for v in candidates))
+                        pool = [v for v in candidates
+                                if tracker.healthy(v.index, hold)]
+                    nxt = min(pool, key=lambda v: (max(v.free_at, hold),
+                                                   v.index))
+                    if nxt.index != r:
+                        r = nxt.index
+                        assign(i, r, arrival)
+                    not_before = hold
+                    continue
+                tracker.record_success(r, completion)
+                if hedge_loser is not None:
+                    loser_start = max(runners[hedge_loser].free_at,
+                                      arrival or 0.0)
+                    charge = max(0.0, completion - loser_start)
+                    if charge > 0.0:
+                        runners[hedge_loser].charge_occupancy(arrival,
+                                                              charge)
+                    runners[r].num_hedged += 1
+                return completion, r
+
+        now = 0.0
         for i in range(num_queries):
             if metrics_sink is not None and i and i % interval == 0:
                 metrics_sink.emit(_fleet_snapshot(runners, fleet_extra,
@@ -252,11 +402,15 @@ class Cluster:
                 arrival = None
                 # The closed-loop decision clock advances with the
                 # serving fleet: drained replicas (autoscaling) sit at
-                # a stale free_at and must not hold it back.
-                now = min(runners[r].free_at
-                          for r in (cur_active
-                                    if cur_active is not None
-                                    else range(len(runners))))
+                # a stale free_at and must not hold it back — and
+                # neither must a breaker-open replica (its head stops
+                # advancing while it is down, docs/FAULTS.md).
+                pool = list(cur_active if cur_active is not None
+                            else range(len(runners)))
+                if tracker is not None:
+                    up = [r for r in pool if tracker.state(r) != OPEN]
+                    pool = up or pool
+                now = min(runners[r].free_at for r in pool)
             views = []
             for ridx, (runner, heap) in enumerate(zip(runners,
                                                       outstanding)):
@@ -288,6 +442,29 @@ class Cluster:
                 routed_views = [views[r] for r in active]
             else:
                 routed_views = views
+            candidates = routed_views
+            not_before: Optional[float] = None
+            if tracker is not None:
+                # Health-aware routing: the router only sees replicas
+                # whose breaker admits traffic at ``now``.
+                healthy = [v for v in routed_views
+                           if tracker.healthy(v.index, now)]
+                if not healthy:
+                    if self.when_all_unhealthy == "shed":
+                        if fleet_extra is not None:
+                            fleet_extra.observe_shed(now)
+                        if not streaming:
+                            shed_arrivals.append(now)
+                        continue
+                    # "wait": hold the dispatch until the earliest
+                    # breaker expiry — that replica then admits a
+                    # half-open probe, so the wait always terminates.
+                    floor = min(tracker.ready_at(v.index)
+                                for v in routed_views)
+                    not_before = floor
+                    healthy = [v for v in routed_views
+                               if tracker.healthy(v.index, floor)]
+                routed_views = healthy
             active_sum += len(routed_views)
             num_active = len(routed_views)
             pos = int(self.router.route(i, now, routed_views))
@@ -336,7 +513,26 @@ class Cluster:
                 if len(pend) >= self.max_batch:
                     flush_pending()
                 continue
-            completion = runners[r].step(arrival)
+            if tracker is None:
+                completion = runners[r].step(arrival)
+            else:
+                # Floor every dispatch at the fleet decision clock: a
+                # recovering replica's head is stale (it served nothing
+                # while down), and its probe must not start in the past.
+                nb = now if not_before is None else max(not_before, now)
+                completion, r = serve_one(i, r, arrival, nb, candidates)
+                if completion is None:
+                    # Retry budget exhausted: the query was admitted
+                    # but never completed (sentinel -2 in the dense
+                    # assignment ledger).
+                    if not streaming:
+                        assignments[i] = -2
+                        local_indices[i] = -1
+                    continue
+                if not streaming:
+                    # Retries/hedging may have re-routed the query.
+                    assignments[i] = r
+                    local_indices[i] = runners[r].num_served - 1
             heapq.heappush(outstanding[r], completion)
             if observe is not None:
                 # The row the step just wrote: num_served - 1 (== local
@@ -353,6 +549,21 @@ class Cluster:
                 workload_name=wl_name,
                 peak_throughput=rep.peak_throughput)
             for rep, runner in zip(self.replicas, runners)]
+        if tracker is not None:
+            # Per-replica unavailability: the larger of the fault
+            # plan's crash windows (stamped by runner.finish) and the
+            # breaker's observed open time — the two views of the same
+            # outage, never summed (that would double-count).  The
+            # breaker lives on the routing decision clock, so outages
+            # still open close out at the clock's final reading, not at
+            # the (possibly much later) backlog drain.
+            breaker_down = tracker.finalize(now)
+            for k, t in enumerate(traces):
+                if streaming:
+                    t.collector.downtime = max(t.collector.downtime,
+                                               breaker_down[k])
+                else:
+                    t.downtime = max(t.downtime, breaker_down[k])
         if metrics_sink is not None:
             metrics_sink.emit(_fleet_snapshot(runners, fleet_extra, slo,
                                               num_active))
@@ -391,7 +602,11 @@ def run_cluster(replicas: Sequence[Replica],
                 max_batch: int = 1,
                 trace_mode: str = "dense",
                 metrics_sink=None,
-                sink_interval: Optional[int] = None
+                sink_interval: Optional[int] = None,
+                retries: Union[RetrySpec, int, dict, None] = None,
+                hedge_after: Optional[float] = None,
+                health_kwargs: Optional[dict] = None,
+                when_all_unhealthy: str = "wait"
                 ) -> Union[ClusterTrace, StreamingClusterTrace]:
     """Functional driver: build a :class:`Cluster` and serve one window."""
     cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs,
@@ -399,7 +614,10 @@ def run_cluster(replicas: Sequence[Replica],
                       admission_kwargs=admission_kwargs,
                       autoscaler=autoscaler,
                       autoscaler_kwargs=autoscaler_kwargs,
-                      max_batch=max_batch)
+                      max_batch=max_batch,
+                      retries=retries, hedge_after=hedge_after,
+                      health_kwargs=health_kwargs,
+                      when_all_unhealthy=when_all_unhealthy)
     return cluster.run(num_queries, workload=workload,
                        workload_kwargs=workload_kwargs,
                        scheduler_name=scheduler_name,

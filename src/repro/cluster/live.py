@@ -44,7 +44,12 @@ def serve_cluster(engines: Sequence,
                   max_batch: int = 1,
                   trace_mode: str = "dense",
                   metrics_sink=None,
-                  sink_interval: Optional[int] = None) -> ClusterTrace:
+                  sink_interval: Optional[int] = None,
+                  faults=None,
+                  retries=None,
+                  hedge_after: Optional[float] = None,
+                  health_kwargs: Optional[dict] = None,
+                  when_all_unhealthy: str = "wait") -> ClusterTrace:
     """Serve fleet ``queries`` through N live engines behind a router.
 
     ``engines`` — one :class:`~repro.serving.ServingEngine` per
@@ -64,6 +69,15 @@ def serve_cluster(engines: Sequence,
     same-replica routing streaks of open-loop arrivals stack through
     each engine's ``run_batch`` (one set of stage dispatches per
     streak) instead of executing query-by-query.
+
+    ``faults`` / ``retries`` / ``hedge_after`` / ``health_kwargs`` /
+    ``when_all_unhealthy`` arm the fleet's fault machinery
+    (docs/FAULTS.md): each engine's executor is wrapped with its slice
+    of the fault plan, failed dispatches are retried with backoff
+    across healthy replicas, and a recovering replica re-warms its XLA
+    dispatch shapes (``warm_buckets``) off the timed path before its
+    half-open probe.  All default off — fault-free serving is
+    unchanged.
     """
     if len(engines) < 1:
         raise ValueError("serve_cluster needs at least one engine")
@@ -72,18 +86,50 @@ def serve_cluster(engines: Sequence,
     if len(schedules) != len(engines):
         raise ValueError(f"{len(engines)} engines but "
                          f"{len(schedules)} slowdown schedules")
+    plan = None
+    if faults is not None:
+        from repro.faults import resolve_faults
+        plan = resolve_faults(faults, time_indexed=True)
 
     replicas = []
-    for eng, schedule in zip(engines, schedules):
+    for r, (eng, schedule) in enumerate(zip(engines, schedules)):
         local_queries: List = []
         executor = eng.query_executor(local_queries, schedule,
                                       max_batch=max_batch)
+        clock: List[Optional[float]] = []
+        if plan is not None:
+            from repro.faults import FaultingExecutor
+            from repro.faults.retry import resolve_retries
+            spec = resolve_retries(retries)
+            executor = FaultingExecutor(
+                executor, plan, replica=r,
+                timeout=(spec.timeout if spec is not None else None))
+            # Fault windows anchor on the workload's arrival clock;
+            # the per-replica feed is maintained by on_assign below.
+            executor.set_arrivals(clock)
 
-        def on_assign(fleet_q, local_q, arrival, _lq=local_queries):
-            _lq.append(queries[fleet_q])
+        def on_assign(fleet_q, local_q, arrival, _lq=local_queries,
+                      _clock=clock):
+            # Keyed on the local index, not appended: a failed
+            # dispatch serves no row, so a retry re-assigns the same
+            # slot (docs/FAULTS.md) and must overwrite it.
+            if local_q < len(_lq):
+                _lq[local_q] = queries[fleet_q]
+                _clock[local_q] = arrival
+            else:
+                pad = local_q + 1 - len(_lq)
+                _lq.extend([queries[fleet_q]] * pad)
+                _clock.extend([arrival] * pad)
+
+        def on_recover(now, _eng=eng, _lq=local_queries):
+            # Cold restart: re-warm the engine's dispatch shapes off
+            # the timed path before the half-open probe takes traffic.
+            seqs = sorted({int(t.shape[-1]) for t in _lq}) or [1]
+            _eng.executor.warm_buckets(seqs, max_batch)
 
         replicas.append(Replica(executor=executor, runtime=eng.runtime,
-                                on_assign=on_assign))
+                                on_assign=on_assign,
+                                on_recover=on_recover))
 
     trace = run_cluster(replicas, len(queries), workload=workload,
                         workload_kwargs=workload_kwargs, router=router,
@@ -95,7 +141,10 @@ def serve_cluster(engines: Sequence,
                         autoscaler_kwargs=autoscaler_kwargs,
                         max_batch=max_batch,
                         trace_mode=trace_mode, metrics_sink=metrics_sink,
-                        sink_interval=sink_interval)
+                        sink_interval=sink_interval,
+                        retries=retries, hedge_after=hedge_after,
+                        health_kwargs=health_kwargs,
+                        when_all_unhealthy=when_all_unhealthy)
     # Peak references only exist after measurement — stamp post-hoc,
     # exactly like ServingEngine.serve does for a single pipeline.
     for rep_trace, eng in zip(trace.replicas, engines):

@@ -54,7 +54,12 @@ def simulate_cluster(db: LayerDatabase,
                      max_batch: int = 1,
                      trace_mode: str = "dense",
                      metrics_sink=None,
-                     sink_interval: Optional[int] = None
+                     sink_interval: Optional[int] = None,
+                     faults=None,
+                     retries=None,
+                     hedge_after: Optional[float] = None,
+                     health_kwargs: Optional[dict] = None,
+                     when_all_unhealthy: str = "wait"
                      ) -> ClusterTrace:
     """Run one (scheduler, router, workload, events) fleet simulation.
 
@@ -81,11 +86,30 @@ def simulate_cluster(db: LayerDatabase,
     same-replica routing streaks of open-loop arrivals flush through
     the replica's vectorized ``step_many`` instead of query-by-query
     steps.  Default 1 is the exact per-query path.
+
+    ``faults`` injects deterministic failures (docs/FAULTS.md): a
+    :class:`~repro.faults.FaultPlan`, a spec string such as
+    ``"crash@100+50:r=1"``, or a list of either; each replica's
+    executor is wrapped with its slice of the plan
+    (``FaultEvent.replica`` targets one replica, ``None`` all).
+    ``retries`` / ``hedge_after`` / ``health_kwargs`` /
+    ``when_all_unhealthy`` configure the fleet's recovery machinery
+    (retry budget + backoff, tail-latency hedging, circuit-breaker
+    routing).  All default off — bit-identical to a fault-free build.
     """
     if num_replicas < 1:
         raise ValueError("num_replicas must be >= 1")
+    plan = None
+    if faults is not None:
+        from repro.faults import resolve_faults
+        plan = resolve_faults(faults, time_indexed=events_time_indexed)
     fleet_events = list(events) if events is not None else []
-    if events_time_indexed:
+    # A time-indexed fault plan anchors its windows on the arrival
+    # clock, exactly like time-indexed interference events — both need
+    # the per-replica arrival feed (and an open-loop workload).
+    time_anchored = events_time_indexed or (plan is not None
+                                            and plan.time_indexed)
+    if time_anchored:
         # Resolve once so the misuse fails here with the same clear
         # error the single-pipeline path gives, not deep in the
         # timeline on the first routed query.
@@ -120,6 +144,13 @@ def simulate_cluster(db: LayerDatabase,
         executor = DatabaseQueryExecutor(
             db, num_eps, events_for_replica(fleet_events, r), _oracle,
             time_indexed=events_time_indexed)
+        if plan is not None:
+            from repro.faults import FaultingExecutor
+            from repro.faults.retry import resolve_retries
+            spec = resolve_retries(retries)
+            executor = FaultingExecutor(
+                executor, plan, replica=r,
+                timeout=(spec.timeout if spec is not None else None))
 
         def solver(cfg, src, _ex=executor) -> List[int]:
             return list(_oracle(tuple(_ex.scenarios))[0])
@@ -129,12 +160,18 @@ def simulate_cluster(db: LayerDatabase,
         runtime = RebalanceRuntime(policy, config0)
 
         on_assign = None
-        if events_time_indexed:
+        if time_anchored:
             clock: List[Optional[float]] = []
             executor.set_arrivals(clock)
 
             def on_assign(fq, lq, arrival, _clock=clock):
-                _clock.append(arrival)
+                # Keyed on the local index, not appended: a failed
+                # dispatch serves no row, so a retry re-assigns the
+                # same slot (docs/FAULTS.md) and must overwrite it.
+                if lq < len(_clock):
+                    _clock[lq] = arrival
+                else:
+                    _clock.extend([arrival] * (lq + 1 - len(_clock)))
 
         replicas.append(Replica(executor=executor, runtime=runtime,
                                 peak_throughput=peak,
@@ -150,4 +187,7 @@ def simulate_cluster(db: LayerDatabase,
                        autoscaler_kwargs=autoscaler_kwargs,
                        max_batch=max_batch,
                        trace_mode=trace_mode, metrics_sink=metrics_sink,
-                       sink_interval=sink_interval)
+                       sink_interval=sink_interval,
+                       retries=retries, hedge_after=hedge_after,
+                       health_kwargs=health_kwargs,
+                       when_all_unhealthy=when_all_unhealthy)

@@ -29,7 +29,9 @@ class ClusterTrace:
     #: One finished trace per replica (local query order).
     replicas: List[PipelineTrace]
     #: Fleet arrival order -> replica index that served the query
-    #: (``-1`` = shed by the admission policy; docs/CONTROL.md).
+    #: (``-1`` = shed by the admission policy, docs/CONTROL.md;
+    #: ``-2`` = admitted but failed after exhausting its retry budget,
+    #: docs/FAULTS.md — no per-query row exists for either).
     assignments: np.ndarray
     #: Fleet arrival order -> index within that replica's trace
     #: (``-1`` for shed queries).
@@ -152,6 +154,11 @@ class ClusterTrace:
             admission=self.admission,
             slo_latency=self.slo_latency,
             shed_arrivals=self.shed_arrivals,
+            num_failed=sum(t.num_failed for t in self.replicas),
+            num_retried=sum(t.num_retried for t in self.replicas),
+            num_hedged=sum(t.num_hedged for t in self.replicas),
+            wasted_time=sum(t.wasted_time for t in self.replicas),
+            downtime=sum(t.downtime for t in self.replicas),
         )
 
     # -- fleet metrics (one metric implementation: PipelineTrace's) ----------

@@ -402,7 +402,9 @@ def simulate(db: LayerDatabase,
              lengths=None,
              lengths_kwargs: Optional[dict] = None,
              batch_overhead: float = 0.0,
-             length_ref: Optional[float] = None) -> PipelineTrace:
+             length_ref: Optional[float] = None,
+             faults=None,
+             retries=None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -445,6 +447,13 @@ def simulate(db: LayerDatabase,
     database times were profiled at (defaults to the largest bucket
     edge, else the largest sampled length).  ``batching=None`` (the
     default) bypasses all of it — bit-identical to pre-batching runs.
+
+    ``faults`` injects deterministic failures (docs/FAULTS.md): a
+    :class:`~repro.faults.FaultPlan`, a spec string such as
+    ``"crash@100+50"``, or a list of either; ``retries`` configures the
+    transient-failure retry budget (``RetrySpec``, int, or dict).
+    ``faults=None`` leaves every trace bit-identical to a fault-free
+    build.
     """
     if events is None:
         if events_time_indexed:
@@ -507,7 +516,8 @@ def simulate(db: LayerDatabase,
                         trace_mode=trace_mode, metrics_sink=metrics_sink,
                         sink_interval=sink_interval,
                         former=former, lengths=lengths,
-                        lengths_kwargs=lengths_kwargs)
+                        lengths_kwargs=lengths_kwargs,
+                        faults=faults, retries=retries)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

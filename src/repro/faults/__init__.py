@@ -1,0 +1,37 @@
+"""Fault injection and recovery machinery (docs/FAULTS.md).
+
+The fault model generalizes the interference timeline into hard
+failures — ``crash`` / ``hang`` / ``slowdown`` / ``flaky`` — realized
+deterministically by :class:`FaultingExecutor` over any query
+executor (simulator or live engine).  Recovery lives in the serving
+loops: :func:`~repro.workloads.run_pipeline` retries transient
+failures under a :class:`RetrySpec` budget; the fleet layer
+(:func:`~repro.cluster.run_cluster`) adds health-aware routing via
+:class:`HealthTracker` circuit breakers, tail-latency hedging, and
+graceful re-warm on recovery.
+"""
+from repro.faults.health import HealthTracker  # noqa: F401
+from repro.faults.inject import FaultingExecutor, FaultInjector  # noqa: F401
+from repro.faults.plan import (  # noqa: F401
+    FAULT_KINDS,
+    FaultEvent,
+    FaultPlan,
+    parse_fault_spec,
+    periodic_crashes,
+    resolve_faults,
+)
+from repro.faults.retry import RetrySpec, resolve_retries  # noqa: F401
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultingExecutor",
+    "FaultInjector",
+    "HealthTracker",
+    "RetrySpec",
+    "parse_fault_spec",
+    "periodic_crashes",
+    "resolve_faults",
+    "resolve_retries",
+]

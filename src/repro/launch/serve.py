@@ -91,6 +91,25 @@ def main() -> None:
                          "the run (.prom/.txt Prometheus text exposition, "
                          "anything else JSON; needs --trace-mode "
                          "streaming; docs/TELEMETRY.md)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve a fleet of N engine replicas behind a "
+                         "round-robin router (docs/CLUSTER.md); hedging "
+                         "and health-aware routing need N >= 2")
+    ap.add_argument("--faults", default="", metavar="SPEC",
+                    help="fault plan spec, e.g. 'crash@50+20:r=0,"
+                         "flaky@0+1000:p=0.05' (docs/FAULTS.md); windows "
+                         "are query-indexed on a single engine and "
+                         "wall-clock (open-loop workloads only) on a "
+                         "--replicas fleet")
+    ap.add_argument("--retries", type=int, default=-1, metavar="N",
+                    help="per-query retry budget with exponential "
+                         "backoff (docs/FAULTS.md); -1 leaves the fault "
+                         "machinery unarmed")
+    ap.add_argument("--hedge-after", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="hedge a dispatch to a healthy peer when its "
+                         "projected wait exceeds this (docs/FAULTS.md; "
+                         "needs --replicas >= 2)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
 
@@ -152,18 +171,56 @@ def main() -> None:
         ap.error("--metrics-export needs --trace-mode streaming (the "
                  "dense trace has no metrics registry)")
     adm_kwargs = {"slo": args.slo} if args.slo > 0 else None
-    metrics = eng.serve(queries, schedule, workload=args.workload,
-                        workload_kwargs=wl_kwargs,
-                        max_batch=args.max_batch,
-                        batching=(None if args.batching == "none"
-                                  else args.batching),
-                        buckets=(args.buckets or None),
-                        admission=args.admission,
-                        admission_kwargs=adm_kwargs,
-                        trace_mode=args.trace_mode)
-    s = metrics.summary()
-    configs = metrics.configs
-    s["final_config"] = configs[-1] if configs else None
+    faults = args.faults or None
+    retries = None if args.retries < 0 else args.retries
+    hedge_after = args.hedge_after if args.hedge_after > 0 else None
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if hedge_after is not None and args.replicas < 2:
+        ap.error("--hedge-after needs --replicas >= 2 (hedging "
+                 "dispatches to a healthy peer)")
+    if args.replicas > 1:
+        # Fleet path: the extra replicas share the jitted executor but
+        # keep their own runtime/detector/estimates (docs/CLUSTER.md).
+        if args.batching != "none" or args.max_batch > 1:
+            ap.error("--replicas > 1 serves per-query; drop --batching "
+                     "/ --max-batch")
+        if args.metrics_export:
+            ap.error("--metrics-export is single-engine only (the "
+                     "fleet trace has no one registry to export)")
+        if faults is not None and args.workload == "closed":
+            ap.error("fleet fault windows are wall-clock "
+                     "(docs/FAULTS.md); pick an open-loop --workload")
+        from repro.cluster import serve_cluster
+        engines = [eng] + [
+            ServingEngine(cfg, params, num_eps=args.eps,
+                          scheduler=args.scheduler, alpha=args.alpha,
+                          executor=eng.executor)
+            for _ in range(args.replicas - 1)]
+        metrics = serve_cluster(engines, queries, schedule,
+                                workload=args.workload,
+                                workload_kwargs=wl_kwargs,
+                                admission=args.admission,
+                                admission_kwargs=adm_kwargs,
+                                trace_mode=args.trace_mode,
+                                faults=faults, retries=retries,
+                                hedge_after=hedge_after)
+        s = metrics.summary()
+        s["final_config"] = None
+    else:
+        metrics = eng.serve(queries, schedule, workload=args.workload,
+                            workload_kwargs=wl_kwargs,
+                            max_batch=args.max_batch,
+                            batching=(None if args.batching == "none"
+                                      else args.batching),
+                            buckets=(args.buckets or None),
+                            admission=args.admission,
+                            admission_kwargs=adm_kwargs,
+                            trace_mode=args.trace_mode,
+                            faults=faults, retries=retries)
+        s = metrics.summary()
+        configs = metrics.configs
+        s["final_config"] = configs[-1] if configs else None
     if args.metrics_export:
         from repro.telemetry import export_path_format, render_export
         path, fmt = export_path_format(args.metrics_export)

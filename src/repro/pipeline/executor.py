@@ -24,6 +24,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import blocks as blk
 from repro.models.layers import embed, rms_norm, unembed
+# Canonical home is the typed serving-error hierarchy
+# (repro.util.errors); re-exported here for backward compatibility.
+from repro.util.errors import MixedSequenceLengthError  # noqa: F401
 
 
 def stage_bounds(config: Sequence[int]) -> List[tuple]:
@@ -38,23 +41,6 @@ def stage_bounds(config: Sequence[int]) -> List[tuple]:
 def next_pow2(n: int) -> int:
     """Smallest power of two >= n (n >= 1)."""
     return 1 << (max(int(n), 1) - 1).bit_length()
-
-
-class MixedSequenceLengthError(ValueError):
-    """A batched dispatch mixed incompatible sequence lengths.
-
-    Subclasses ``ValueError`` so pre-existing callers catching the old
-    untyped error keep working; the message names the offending
-    per-query lengths so the caller can see *which* queries to pad or
-    re-bucket.
-    """
-
-    def __init__(self, lengths: Sequence[int]):
-        self.lengths = [int(s) for s in lengths]
-        super().__init__(
-            "run_batch queries must share one sequence length "
-            f"(pad or group by length upstream); got per-query "
-            f"lengths {self.lengths}")
 
 
 class LocalPipelineExecutor:

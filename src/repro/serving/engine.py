@@ -58,6 +58,7 @@ from repro.pipeline.executor import (
 from repro.schedulers.base import SchedulerPolicy
 from repro.schedulers.defaults import DEFAULT_ALPHA, MEASURED_DETECTOR_MODE
 from repro.schedulers.registry import make_scheduler
+from repro.util.errors import QueryError
 from repro.schedulers.runtime import RebalanceRuntime, RuntimeStep
 from repro.workloads import (
     BatchRecord,
@@ -369,7 +370,7 @@ class _LiveDispatchBuilder:
 
     def join(self, q: int) -> None:
         if not 0 < self._stage < self._S:
-            raise RuntimeError("join() is only valid at a stage boundary")
+            raise QueryError("join() is only valid at a stage boundary")
         live, ex = self._live, self._ex
         tokens = live._dispatch_tokens(q)
         jrows = int(tokens.shape[0])
@@ -538,7 +539,9 @@ class ServingEngine:
               admission_kwargs: Optional[dict] = None,
               trace_mode: str = "dense",
               metrics_sink=None,
-              sink_interval: Optional[int] = None) -> PipelineTrace:
+              sink_interval: Optional[int] = None,
+              faults=None,
+              retries=None) -> PipelineTrace:
         """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
         slowdown factors (>= 1.0)``.
 
@@ -583,6 +586,12 @@ class ServingEngine:
         the simulator: streaming runs return a
         :class:`~repro.telemetry.StreamingTrace`, sinks receive
         periodic snapshots in either mode.
+
+        ``faults`` / ``retries`` inject deterministic failures and arm
+        the retry budget (docs/FAULTS.md) — the same surface as the
+        simulator, realized by wrapping this engine's executor in a
+        :class:`~repro.faults.FaultingExecutor`.  Both default off
+        (fault-free serving is unchanged).
         """
         seq_max = max((int(t.shape[-1]) for t in queries), default=1)
         former = resolve_batching(batching, max_batch=max_batch,
@@ -610,7 +619,8 @@ class ServingEngine:
                              metrics_sink=metrics_sink,
                              sink_interval=sink_interval,
                              former=former,
-                             lengths=lengths)
+                             lengths=lengths,
+                             faults=faults, retries=retries)
         # The peak reference only exists after measurement: stamp it
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()

@@ -16,6 +16,7 @@ from repro.telemetry.metrics import (
     SUMMARY_QUANTILES,
     Counter,
     Gauge,
+    Histogram,
     MetricsRegistry,
     Summary,
     export_path_format,
@@ -27,6 +28,8 @@ from repro.telemetry.sink import (
     JsonLinesSink,
     MemorySink,
     MetricsSink,
+    ThresholdRule,
+    ThresholdSink,
 )
 from repro.telemetry.sketch import (
     DEFAULT_BUFFER,
@@ -48,6 +51,7 @@ __all__ = [
     "DEFAULT_MAX_WINDOWS",
     "Counter",
     "Gauge",
+    "Histogram",
     "Summary",
     "MetricsRegistry",
     "SUMMARY_QUANTILES",
@@ -57,6 +61,8 @@ __all__ = [
     "MemorySink",
     "CallbackSink",
     "JsonLinesSink",
+    "ThresholdRule",
+    "ThresholdSink",
     "StreamingCollector",
     "StreamingTrace",
     "StreamingClusterTrace",

@@ -1,12 +1,15 @@
 """Constant-memory metric primitives and the registry/exporter layer.
 
-Three metric kinds, mirroring the Prometheus data model:
+Four metric kinds, mirroring the Prometheus data model:
 
 * :class:`Counter` — monotone float count (queries served, shed, ...).
 * :class:`Gauge` — last-written value (queue depth, active replicas).
 * :class:`Summary` — a :class:`~repro.telemetry.sketch.QuantileSketch`
   exposed with Prometheus summary semantics (quantile series plus
   ``_sum`` / ``_count``).
+* :class:`Histogram` — fixed-bucket counts with cumulative
+  ``_bucket{le=...}`` exposition; aggregates across hosts by plain
+  addition, no sketch merge required.
 
 :class:`MetricsRegistry` is the get-or-create namespace for them, with
 two exposition formats:
@@ -30,6 +33,8 @@ import json
 import math
 import re
 from typing import Dict, Optional, Tuple
+
+import numpy as np
 
 from .sketch import QuantileSketch
 
@@ -116,6 +121,77 @@ class Summary:
         return self.sketch.sum
 
 
+class Histogram:
+    """Fixed-bucket counts with Prometheus histogram exposition.
+
+    Unlike a :class:`Summary` (whose t-digest sketch needs the custom
+    merge in this package), fixed buckets aggregate across hosts with
+    plain addition — any Prometheus-compatible backend can sum the
+    ``_bucket`` series.  ``buckets`` are the finite upper bounds; the
+    implicit ``+Inf`` bucket is always present.  Exposition is
+    cumulative (``{le="x"}``), per the Prometheus data model.
+    """
+
+    __slots__ = ("name", "help", "buckets", "_counts", "_sum")
+    kind = "histogram"
+
+    #: Default latency-style buckets (seconds), roughly log-spaced.
+    DEFAULT_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+                       1.0, 2.5, 5.0, 10.0)
+
+    def __init__(self, name: str, help: str = "", buckets=None):
+        self.name = _check_name(name)
+        self.help = help
+        b = tuple(float(x) for x in
+                  (buckets if buckets is not None else self.DEFAULT_BUCKETS))
+        if not b or any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError("histogram buckets must be strictly "
+                             "increasing and non-empty")
+        if any(math.isinf(x) for x in b):
+            raise ValueError("the +Inf bucket is implicit; pass finite "
+                             "upper bounds only")
+        self.buckets = b
+        self._counts = [0] * (len(b) + 1)   # last = +Inf overflow
+        self._sum = 0.0
+
+    def observe(self, values) -> None:
+        """Fold one value or an array of values into the buckets."""
+        arr = np.atleast_1d(np.asarray(values, dtype=float))
+        if arr.size == 0:
+            return
+        idx = np.searchsorted(np.asarray(self.buckets), arr, side="left")
+        for i, c in zip(*np.unique(idx, return_counts=True)):
+            self._counts[int(i)] += int(c)
+        self._sum += float(arr.sum())
+
+    @property
+    def count(self) -> int:
+        return sum(self._counts)
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def cumulative(self) -> Dict[str, int]:
+        """``{le: cumulative count}`` including the ``+Inf`` bucket."""
+        out: Dict[str, int] = {}
+        running = 0
+        for le, c in zip(self.buckets, self._counts):
+            running += c
+            out[f"{le:g}"] = running
+        out["+Inf"] = running + self._counts[-1]
+        return out
+
+    def merge_from(self, other: "Histogram") -> None:
+        if other.buckets != self.buckets:
+            raise ValueError(
+                f"cannot merge histogram {self.name!r}: bucket bounds "
+                f"differ ({self.buckets} vs {other.buckets})")
+        for i, c in enumerate(other._counts):
+            self._counts[i] += c
+        self._sum += other._sum
+
+
 class MetricsRegistry:
     """Namespace of metrics with get-or-create accessors and export."""
 
@@ -146,6 +222,18 @@ class MetricsRegistry:
     def summary(self, name: str, help: str = "") -> Summary:
         return self._get(Summary, name, help)
 
+    def histogram(self, name: str, help: str = "",
+                  buckets=None) -> Histogram:
+        metric = self._metrics.get(name)
+        if metric is None:
+            metric = Histogram(name, help, buckets=buckets)
+            self._metrics[name] = metric
+        elif not isinstance(metric, Histogram):
+            raise TypeError(
+                f"metric {name!r} already registered as "
+                f"{type(metric).__name__}, not Histogram")
+        return metric
+
     def __contains__(self, name: str) -> bool:
         return name in self._metrics
 
@@ -168,6 +256,9 @@ class MetricsRegistry:
             elif isinstance(metric, Summary):
                 mine = self.summary(metric.name, metric.help)
                 mine.sketch.merge(metric.sketch)
+            elif isinstance(metric, Histogram):
+                self.histogram(metric.name, metric.help,
+                               buckets=metric.buckets).merge_from(metric)
         return self
 
     # -- export --------------------------------------------------------------
@@ -185,6 +276,12 @@ class MetricsRegistry:
                     "sum": metric.sum,
                     "quantiles": {f"{q:g}": metric.quantile(q)
                                   for q in SUMMARY_QUANTILES},
+                }
+            elif isinstance(metric, Histogram):
+                out[name] = {
+                    "count": metric.count,
+                    "sum": metric.sum,
+                    "buckets": metric.cumulative(),
                 }
             else:
                 out[name] = metric.value
@@ -205,6 +302,11 @@ class MetricsRegistry:
                 for q in SUMMARY_QUANTILES:
                     lines.append(f'{name}{{quantile="{q:g}"}} '
                                  f"{_fmt(metric.quantile(q))}")
+                lines.append(f"{name}_sum {_fmt(metric.sum)}")
+                lines.append(f"{name}_count {metric.count}")
+            elif isinstance(metric, Histogram):
+                for le, c in metric.cumulative().items():
+                    lines.append(f'{name}_bucket{{le="{le}"}} {c}')
                 lines.append(f"{name}_sum {_fmt(metric.sum)}")
                 lines.append(f"{name}_count {metric.count}")
             else:

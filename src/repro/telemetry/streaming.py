@@ -59,8 +59,10 @@ class StreamingCollector:
                  sink_interval: int = DEFAULT_SINK_INTERVAL,
                  compression: int = DEFAULT_COMPRESSION,
                  max_windows: int = DEFAULT_MAX_WINDOWS,
-                 namespace: str = "repro"):
+                 namespace: str = "repro",
+                 latency_buckets=None):
         self.slo = float(slo)
+        self.latency_buckets = latency_buckets
         self.latency = QuantileSketch(compression)
         self.queue_delay = QuantileSketch(compression)
         self.throughput = QuantileSketch(compression)
@@ -79,6 +81,13 @@ class StreamingCollector:
         self.max_shed_arrival = 0.0
         self.last_queue_depth = 0.0
         self.max_queue_depth = 0.0
+        # -- fault tolerance (repro.faults; docs/FAULTS.md) ------------------
+        self.num_failed = 0            # admitted queries that never completed
+        self.num_retried = 0           # retry attempts made
+        self.num_hedged = 0            # hedged dispatches won
+        self.wasted_time = 0.0         # cancelled/timed-out occupancy
+        self.downtime = 0.0            # crash + breaker-open time
+        self.busy_sum = 0.0            # useful occupancy (sum of 1/thr)
         self.sink = sink
         self.sink_interval = max(1, int(sink_interval))
         self.num_emits = 0
@@ -117,6 +126,24 @@ class StreamingCollector:
         reg.gauge("offered_qps", "arrival rate so far")
         reg.gauge("achieved_qps", "completion rate so far")
         reg.gauge("goodput_qps", "SLO-met completion rate so far")
+        # -- fault tolerance (docs/FAULTS.md) --------------------------------
+        reg.counter("queries_failed_total", "admitted queries that "
+                                            "exhausted their retry budget")
+        reg.counter("queries_retried_total", "retry attempts made")
+        reg.counter("queries_hedged_total", "hedged dispatches won")
+        reg.counter("wasted_seconds_total", "occupancy charged for work "
+                                            "that produced no completion")
+        reg.counter("downtime_seconds_total", "replica crash/breaker-open "
+                                              "time")
+        reg.gauge("availability", "completed / admitted so far")
+        # Optional fixed-bucket mirror of the latency summary: external
+        # tooling aggregates _bucket series by addition, no sketch merge.
+        if self.latency_buckets is not None:
+            self._lat_hist = reg.histogram(
+                "latency_seconds_hist", "per-query latency (fixed-bucket "
+                "histogram mirror)", buckets=self.latency_buckets)
+        else:
+            self._lat_hist = None
 
     # -- ingest --------------------------------------------------------------
     def observe_chunk(self, latencies: np.ndarray,
@@ -138,8 +165,12 @@ class StreamingCollector:
         if n == 0:
             return
         self.latency.add(latencies)
+        if self._lat_hist is not None:
+            self._lat_hist.observe(latencies)
         self.queue_delay.add(queue_delays)
         self.throughput.add(throughputs)
+        self.busy_sum += float(np.sum(np.where(
+            throughputs > 0, 1.0 / np.maximum(throughputs, 1e-12), 0.0)))
         self.occupancy.add(batch_sizes if batch_sizes is not None
                            else np.ones(n))
         if padded_tokens is not None:
@@ -210,6 +241,14 @@ class StreamingCollector:
         self.last_queue_depth = other.last_queue_depth
         self.max_queue_depth = max(self.max_queue_depth,
                                    other.max_queue_depth)
+        self.num_failed += other.num_failed
+        self.num_retried += other.num_retried
+        self.num_hedged += other.num_hedged
+        self.wasted_time += other.wasted_time
+        self.downtime += other.downtime
+        self.busy_sum += other.busy_sum
+        if self._lat_hist is not None and other._lat_hist is not None:
+            self._lat_hist.merge_from(other._lat_hist)
         return self
 
     # -- derived rates --------------------------------------------------------
@@ -263,6 +302,35 @@ class StreamingCollector:
             return 0.0
         return 1.0 - self.actual_tok_sum / self.padded_tok_sum
 
+    # -- fault accounting (repro.faults; docs/FAULTS.md) ---------------------
+    def note_faults(self, num_failed: int = 0, num_retried: int = 0,
+                    num_hedged: int = 0, wasted_time: float = 0.0,
+                    downtime: float = 0.0) -> None:
+        """Set the run's fault counters to their current absolute
+        values (the runner is the source of truth; called on every
+        telemetry flush and at :meth:`finish`)."""
+        self.num_failed = int(num_failed)
+        self.num_retried = int(num_retried)
+        self.num_hedged = int(num_hedged)
+        self.wasted_time = float(wasted_time)
+        self.downtime = float(downtime)
+
+    @property
+    def availability(self) -> float:
+        """Completed ÷ admitted (sheds excluded — they are an
+        admission decision, not a failure)."""
+        admitted = self.num_admitted + self.num_failed
+        if not admitted:
+            return math.nan
+        return self.num_admitted / admitted
+
+    @property
+    def wasted_work_frac(self) -> float:
+        if self.wasted_time <= 0.0:
+            return 0.0
+        total = self.busy_sum + self.wasted_time
+        return self.wasted_time / total if total > 0 else 0.0
+
     # -- export --------------------------------------------------------------
     def _refresh_registry(self) -> None:
         reg = self._registry
@@ -284,6 +352,12 @@ class StreamingCollector:
         reg.gauge("offered_qps").set(self.offered_qps)
         reg.gauge("achieved_qps").set(self.achieved_qps)
         reg.gauge("goodput_qps").set(self.goodput_qps)
+        reg.counter("queries_failed_total")._value = float(self.num_failed)
+        reg.counter("queries_retried_total")._value = float(self.num_retried)
+        reg.counter("queries_hedged_total")._value = float(self.num_hedged)
+        reg.counter("wasted_seconds_total")._value = self.wasted_time
+        reg.counter("downtime_seconds_total")._value = self.downtime
+        reg.gauge("availability").set(self.availability)
 
     @property
     def registry(self) -> MetricsRegistry:
@@ -309,8 +383,14 @@ class StreamingCollector:
                admission: str = "none",
                num_rebalances: int = 0, total_trials: int = 0,
                mitigation_lengths: Optional[List[int]] = None,
-               final_config: Optional[List[int]] = None) -> "StreamingTrace":
+               final_config: Optional[List[int]] = None,
+               num_failed: int = 0, num_retried: int = 0,
+               num_hedged: int = 0, wasted_time: float = 0.0,
+               downtime: float = 0.0) -> "StreamingTrace":
         """Final sink emission + freeze into a :class:`StreamingTrace`."""
+        if num_failed or num_retried or num_hedged or wasted_time or downtime:
+            self.note_faults(num_failed, num_retried, num_hedged,
+                             wasted_time, downtime)
         self.emit()
         return StreamingTrace(
             scheduler=scheduler, workload=workload, collector=self,
@@ -497,6 +577,13 @@ class StreamingTrace:
             "mean_batch_occupancy": c.occupancy.mean,
             "p99_batch_occupancy": c.occupancy.percentile(99),
             "padded_token_frac": c.padded_token_frac,
+            # -- fault tolerance (docs/FAULTS.md) ----------------------------
+            "num_failed": float(c.num_failed),
+            "num_retried": float(c.num_retried),
+            "num_hedged": float(c.num_hedged),
+            "availability": c.availability,
+            "wasted_work_frac": c.wasted_work_frac,
+            "downtime_s": float(c.downtime),
         }
 
     @classmethod

@@ -1,2 +1,10 @@
 """Small shared infrastructure with no repro.* dependencies."""
+from repro.util.errors import (  # noqa: F401
+    DispatchTimeoutError,
+    MixedSequenceLengthError,
+    QueryError,
+    ReplicaUnavailableError,
+    TransientQueryError,
+    is_transient,
+)
 from repro.util.registry import Registry  # noqa: F401

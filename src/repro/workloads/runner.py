@@ -84,6 +84,7 @@ import numpy as np
 
 from repro.control.base import AdmissionView
 from repro.telemetry.streaming import StreamingCollector, StreamingTrace
+from repro.util.errors import DispatchTimeoutError, TransientQueryError
 from repro.workloads.base import QueryExecutor, Workload
 from repro.workloads.lengths import resolve_lengths
 from repro.workloads.registry import make_workload
@@ -273,7 +274,8 @@ class PipelineRunner:
                  telemetry: Optional[StreamingCollector] = None,
                  former: Optional[BatchFormer] = None,
                  lengths: Optional[np.ndarray] = None,
-                 padded: Optional[np.ndarray] = None):
+                 padded: Optional[np.ndarray] = None,
+                 retry=None):
         if trace_mode not in ("dense", "streaming"):
             raise ValueError(f"unknown trace_mode {trace_mode!r}; "
                              f"expected 'dense' or 'streaming'")
@@ -313,6 +315,20 @@ class PipelineRunner:
                              if admission is not None else None)
         self.shed_arrivals: List[float] = []
         self.shed_indices: List[int] = []
+
+        # Fault tolerance (repro.faults; docs/FAULTS.md): a RetrySpec
+        # arms requeue-on-failure in :meth:`run`; a fault-injecting
+        # executor arms the failure accounting even with no budget
+        # (every transient failure is then terminal).  Neither present
+        # = every guard below is a dead branch — pre-faults runs are
+        # bit-identical.
+        self._retry = retry
+        self._fault_aware = (retry is not None
+                             or getattr(executor, "injects_faults", False))
+        self.num_failed = 0            # queries that exhausted the budget
+        self.num_retried = 0           # retry attempts made
+        self.num_hedged = 0            # hedged dispatches won here
+        self.wasted_time = 0.0         # cancelled/hedged occupancy charged
 
         self._rebalances0 = runtime.num_rebalances
         self._trials0 = runtime.total_trials
@@ -424,14 +440,17 @@ class PipelineRunner:
         self.capacity = new
 
     # -- ticks (shared by both driving modes) -------------------------------
-    def _scalar_tick(self, gq: int, step, arrival: Optional[float]) -> float:
+    def _scalar_tick(self, gq: int, step, arrival: Optional[float],
+                     not_before: Optional[float] = None) -> float:
         """One query through the per-query (compatibility) path.
 
         ``gq`` is the global query index (what the executor sees);
         results land at the dense index :attr:`num_served`, which the
         tick advances.  ``arrival = None`` means closed-loop: the query
-        arrives exactly when the pipeline can take it.  Returns the
-        completion time.
+        arrives exactly when the pipeline can take it.  ``not_before``
+        floors the start time (retry backoff holds, all-unhealthy
+        waits); the extra wait lands in the query's queue delay.
+        Returns the completion time.
         """
         s = self.num_served
         rec = self.executor.execute(gq, step)
@@ -449,6 +468,8 @@ class PipelineRunner:
             arrival = ready
         self.queue_depth[s] = self._pending.depth_at(arrival)
         start = max(arrival, ready)
+        if not_before is not None and not_before > start:
+            start = not_before
         occupancy = (rec.service_latency if step.serial
                      else (1.0 / rec.throughput if rec.throughput > 0
                            else 0.0))
@@ -470,6 +491,53 @@ class PipelineRunner:
             self.actual_tok[s] = 0.0
         self.num_served = s + 1
         return completion
+
+    def _retry_tick(self, gq: int, step, arrival: Optional[float],
+                    err: TransientQueryError) -> Optional[float]:
+        """Failure handling for the single-pipeline driver.
+
+        Query ``gq``'s first execution attempt raised ``err``.  Charge
+        the failure (a timed-out hang occupied the head for the full
+        timeout before cancellation), then retry under the budget with
+        exponential-backoff start holds.  Returns the completion time
+        on eventual success, None when the budget is exhausted (the
+        query is counted failed and writes no row).
+        """
+        retry = self._retry
+        attempt = 0
+        hold = None
+        while True:
+            ready = (max(self.free_at, self.drain_at) if step.serial
+                     else self.free_at)
+            fail_t = ready if arrival is None else max(float(arrival), ready)
+            if hold is not None and hold > fail_t:
+                fail_t = hold
+            if isinstance(err, DispatchTimeoutError):
+                self.free_at = fail_t + err.timeout
+                self.wasted_time += err.timeout
+                fail_t = self.free_at
+            if retry is None or attempt >= retry.max_retries:
+                self.num_failed += 1
+                return None
+            hold = fail_t + retry.delay(gq, attempt)
+            attempt += 1
+            self.num_retried += 1
+            try:
+                return self._scalar_tick(gq, step, arrival,
+                                         not_before=hold)
+            except TransientQueryError as e:
+                err = e
+
+    def charge_occupancy(self, arrival: Optional[float],
+                         occupancy: float) -> float:
+        """Occupy the admission head without recording a row — a hedge
+        loser's cancelled dispatch (docs/FAULTS.md).  The occupancy is
+        charged as wasted work; returns the new ``free_at``."""
+        start = (self.free_at if arrival is None
+                 else max(self.free_at, float(arrival)))
+        self.free_at = start + float(occupancy)
+        self.wasted_time += float(occupancy)
+        return self.free_at
 
     def _chunk_tick(self, gq0: int, steps,
                     arr_chunk: Optional[np.ndarray]) -> None:
@@ -844,6 +912,10 @@ class PipelineRunner:
                 batch_sizes=self.batch_sizes[s0:s1],
                 padded_tokens=self.padded_tok[s0:s1],
                 actual_tokens=self.actual_tok[s0:s1])
+        if self._fault_aware:
+            tel.note_faults(self.num_failed, self.num_retried,
+                            self.num_hedged, self.wasted_time,
+                            self.fault_downtime())
         if self._streaming:
             self.num_flushed += s1
             self.num_served = 0
@@ -852,7 +924,8 @@ class PipelineRunner:
             self._stream_pos = s1
 
     # -- incremental driving (one query at a time) --------------------------
-    def step(self, arrival: Optional[float] = None) -> float:
+    def step(self, arrival: Optional[float] = None,
+             not_before: Optional[float] = None) -> float:
         """Serve the next query, arriving at ``arrival`` (None = the
         instant this pipeline can take it — closed loop).
 
@@ -861,6 +934,14 @@ class PipelineRunner:
         execute, account the arrival ledger.  Returns the query's
         completion time, which callers (the cluster's routers) use for
         outstanding-work accounting.
+
+        ``not_before`` floors the start time (the cluster's retry
+        backoff and all-unhealthy waits).  With a fault-injecting
+        executor this may raise a
+        :class:`~repro.util.errors.TransientQueryError`; the ledger is
+        untouched in that case (no row, ``num_offered`` unchanged) and
+        the *caller* owns the retry/failure decision — the cluster
+        catches here so retries can re-route across replicas.
         """
         if self.telemetry is not None and self._should_flush():
             self.flush_telemetry()
@@ -872,7 +953,7 @@ class PipelineRunner:
             self.rc_thr[s] = self.executor.reference_throughput(gq)
         step = (self.runtime.poll(source) if source is not None
                 else self.runtime.steady_step())
-        completion = self._scalar_tick(gq, step, arrival)
+        completion = self._scalar_tick(gq, step, arrival, not_before)
         self.num_offered = gq + 1
         return completion
 
@@ -961,6 +1042,7 @@ class PipelineRunner:
         rc_thr = self.rc_thr
         shed_check, observe = self._shed_check, self._observe
         telemetry = self.telemetry
+        fault_aware = self._fault_aware
 
         q = self.num_offered
         end = q + num_queries
@@ -1010,7 +1092,13 @@ class PipelineRunner:
                 continue
 
             if mode is None or step.serial:
-                self._scalar_tick(q, step, arrival)
+                if fault_aware:
+                    try:
+                        self._scalar_tick(q, step, arrival)
+                    except TransientQueryError as err:
+                        self._retry_tick(q, step, arrival, err)
+                else:
+                    self._scalar_tick(q, step, arrival)
                 if observe is not None:
                     self._observe_span(s0)
                 q += 1
@@ -1025,9 +1113,18 @@ class PipelineRunner:
                               if arrivals is not None else self.free_at)
                 if (arrivals is None or q + 1 >= end
                         or arrivals[q + 1] > dispatch_t):
-                    self._chunk_tick(q, [step],
-                                     arrivals[q:q + 1]
-                                     if arrivals is not None else None)
+                    if fault_aware:
+                        try:
+                            self._chunk_tick(q, [step],
+                                             arrivals[q:q + 1]
+                                             if arrivals is not None
+                                             else None)
+                        except TransientQueryError as err:
+                            self._retry_tick(q, step, arrival, err)
+                    else:
+                        self._chunk_tick(q, [step],
+                                         arrivals[q:q + 1]
+                                         if arrivals is not None else None)
                     if observe is not None:
                         self._observe_span(s0)
                     q += 1
@@ -1049,9 +1146,20 @@ class PipelineRunner:
                 n = limit
                 if rc_thr is not None:
                     rc_thr[s0:s0 + n] = rc_thr[s0]
-                self._chunk_tick(q, [step] * n,
-                                 arrivals[q:q + n]
-                                 if arrivals is not None else None)
+                if fault_aware:
+                    # A faultable chunk is single-query by construction
+                    # (the injector's steady_horizon forces 1 inside
+                    # fault windows), so the retry path stays scalar.
+                    try:
+                        self._chunk_tick(q, [step] * n,
+                                         arrivals[q:q + n]
+                                         if arrivals is not None else None)
+                    except TransientQueryError as err:
+                        self._retry_tick(q, step, arrival, err)
+                else:
+                    self._chunk_tick(q, [step] * n,
+                                     arrivals[q:q + n]
+                                     if arrivals is not None else None)
                 if observe is not None:
                     self._observe_span(s0)
                 q += n
@@ -1082,9 +1190,17 @@ class PipelineRunner:
                     break
                 steps.append(step_j)
                 j += 1
-            self._chunk_tick(q, steps,
-                             arrivals[q:q + len(steps)]
-                             if arrivals is not None else None)
+            if fault_aware:
+                try:
+                    self._chunk_tick(q, steps,
+                                     arrivals[q:q + len(steps)]
+                                     if arrivals is not None else None)
+                except TransientQueryError as err:
+                    self._retry_tick(q, step, arrival, err)
+            else:
+                self._chunk_tick(q, steps,
+                                 arrivals[q:q + len(steps)]
+                                 if arrivals is not None else None)
             q += len(steps)
             if leftover is not None:
                 # Already polled (the trial/commit is charged to this
@@ -1115,6 +1231,7 @@ class PipelineRunner:
                     if self.admission is not None else float("inf"))
         if self.telemetry is not None:
             self.flush_telemetry()
+        downtime = self.fault_downtime()
         if self._streaming:
             return self.telemetry.finish(
                 scheduler=scheduler_name, workload=workload_name,
@@ -1124,7 +1241,10 @@ class PipelineRunner:
                 total_trials=self.runtime.total_trials - self._trials0,
                 mitigation_lengths=list(
                     self.runtime.mitigation_lengths[self._mitigations0:]),
-                final_config=self._last_config)
+                final_config=self._last_config,
+                num_failed=self.num_failed, num_retried=self.num_retried,
+                num_hedged=self.num_hedged, wasted_time=self.wasted_time,
+                downtime=downtime)
         if self.telemetry is not None:
             self.telemetry.emit()     # final sink snapshot (dense+sink)
         n = self.num_served
@@ -1153,7 +1273,20 @@ class PipelineRunner:
             batch_sizes=self.batch_sizes[:n],
             padded_tokens=self.padded_tok[:n],
             actual_tokens=self.actual_tok[:n],
+            num_failed=self.num_failed,
+            num_retried=self.num_retried,
+            num_hedged=self.num_hedged,
+            wasted_time=self.wasted_time,
+            downtime=downtime,
         )
+
+    def fault_downtime(self) -> float:
+        """Crash downtime the executor's fault plan accumulated over
+        this run (0.0 without an injecting executor)."""
+        hook = getattr(self.executor, "fault_downtime", None)
+        if callable(hook):
+            return float(hook(self.num_offered, self.drain_at))
+        return 0.0
 
 
 def run_pipeline(executor: QueryExecutor,
@@ -1172,7 +1305,9 @@ def run_pipeline(executor: QueryExecutor,
                  sink_interval: Optional[int] = None,
                  former: Optional[BatchFormer] = None,
                  lengths=None,
-                 lengths_kwargs: Optional[dict] = None
+                 lengths_kwargs: Optional[dict] = None,
+                 faults=None,
+                 retries=None
                  ) -> Union[PipelineTrace, StreamingTrace]:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
@@ -1212,6 +1347,22 @@ def run_pipeline(executor: QueryExecutor,
     # use; the run loop itself only needs the resolver.
     from repro.control.registry import resolve_admission
     policy = resolve_admission(admission, admission_kwargs)
+
+    # Fault tolerance (repro.faults; docs/FAULTS.md): wrap the executor
+    # in a fault injector and arm the runner's retry budget.  Both
+    # default off — the wrapped/armed branches are then never taken and
+    # pre-faults traces stay bit-identical.
+    retry_spec = None
+    if faults is not None or retries is not None:
+        from repro.faults import (FaultingExecutor, resolve_faults,
+                                  resolve_retries)
+        retry_spec = resolve_retries(retries)
+        plan = resolve_faults(faults)
+        if plan is not None:
+            executor = FaultingExecutor(
+                executor, plan,
+                timeout=(retry_spec.timeout if retry_spec is not None
+                         else None))
 
     telemetry = None
     if trace_mode == "streaming" or metrics_sink is not None:
@@ -1254,7 +1405,8 @@ def run_pipeline(executor: QueryExecutor,
                             chunking=chunking, max_chunk=max_chunk,
                             admission=policy, trace_mode=trace_mode,
                             telemetry=telemetry, former=former,
-                            lengths=lengths_arr, padded=padded)
+                            lengths=lengths_arr, padded=padded,
+                            retry=retry_spec)
     runner.run(num_queries, arrivals)
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,

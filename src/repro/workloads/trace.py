@@ -62,6 +62,23 @@ class PipelineTrace:
     padded_tokens: Optional[np.ndarray] = None
     #: Useful tokens per query (actual sequence length).
     actual_tokens: Optional[np.ndarray] = None
+    # -- fault tolerance (repro.faults; docs/FAULTS.md) ----------------------
+    #: Admitted queries that exhausted their retry budget (the
+    #: per-query arrays never hold failed queries — they complete
+    #: nothing).  ``availability = admitted-and-completed / admitted``.
+    num_failed: int = 0
+    #: Retry attempts made across the run (a query retried twice
+    #: counts 2).
+    num_retried: int = 0
+    #: Dispatches that were hedged on a second replica (counted on the
+    #: winning replica's trace).
+    num_hedged: int = 0
+    #: Occupancy charged for work that produced no completion: timed-out
+    #: hangs and cancelled hedge losers (driver time units).
+    wasted_time: float = 0.0
+    #: Time this pipeline was crash-down (fault-plan clock units) plus,
+    #: on cluster traces, breaker-open time stamped by the fleet loop.
+    downtime: float = 0.0
 
     def __post_init__(self):
         n = len(self.latencies)
@@ -182,6 +199,30 @@ class PipelineTrace:
     def shed_rate(self) -> float:
         """Fraction of offered queries that were shed."""
         return self.num_shed / self.num_offered if self.num_offered else 0.0
+
+    # -- fault accounting (repro.faults; docs/FAULTS.md) ---------------------
+    @property
+    def availability(self) -> float:
+        """Completed ÷ admitted.  1.0 for a fault-free run; admitted
+        queries that exhausted their retry budget lower it.  Shed
+        queries are an admission decision, not a failure — they do not
+        count against availability."""
+        admitted = self.num_admitted + self.num_failed
+        if not admitted:
+            return float("nan")
+        return self.num_admitted / admitted
+
+    @property
+    def wasted_work_frac(self) -> float:
+        """Fraction of total pipeline occupancy that produced no
+        completion (timed-out hangs, cancelled hedge losers)."""
+        if self.wasted_time <= 0.0:
+            return 0.0
+        useful = float(np.sum(np.where(self.throughputs > 0,
+                                       1.0 / np.maximum(self.throughputs,
+                                                        1e-12), 0.0)))
+        total = useful + self.wasted_time
+        return self.wasted_time / total if total > 0 else 0.0
 
     @property
     def slo_attainment(self) -> float:
@@ -310,4 +351,11 @@ class PipelineTrace:
             "mean_batch_occupancy": self.mean_batch_occupancy,
             "p99_batch_occupancy": self.percentile(99, "batch_sizes"),
             "padded_token_frac": self.padded_token_frac,
+            # -- fault tolerance (repro.faults; docs/FAULTS.md) -------------
+            "num_failed": float(self.num_failed),
+            "num_retried": float(self.num_retried),
+            "num_hedged": float(self.num_hedged),
+            "availability": self.availability,
+            "wasted_work_frac": self.wasted_work_frac,
+            "downtime_s": float(self.downtime),
         }

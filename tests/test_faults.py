@@ -1,0 +1,394 @@
+"""Fault injection + recovery machinery (docs/FAULTS.md).
+
+Covers the plan/spec layer (parsing, validation, determinism), the
+retry/backoff and circuit-breaker units, the simulator integrations
+(single pipeline and fleet, dense and chunked), and the live-engine
+crash/recover acceptance path.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import simulate_cluster
+from repro.core import simulate, synthetic_database
+from repro.faults import (
+    FaultEvent,
+    FaultPlan,
+    HealthTracker,
+    RetrySpec,
+    parse_fault_spec,
+    periodic_crashes,
+    resolve_faults,
+    resolve_retries,
+)
+from repro.faults.health import CLOSED, HALF_OPEN, OPEN
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+SIM_KW = dict(num_queries=300, freq_period=2, duration=100, seed=0)
+
+
+def _same_summary(a: dict, b: dict) -> bool:
+    return all(a[k] == b[k]
+               or (isinstance(a[k], float) and math.isnan(a[k])
+                   and math.isnan(b[k]))
+               for k in a) and a.keys() == b.keys()
+
+
+# -- plans + specs -----------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meltdown", 0, 10)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent("crash", 0, 0)
+    with pytest.raises(ValueError, match="probability"):
+        FaultEvent("flaky", 0, 10, p=1.5)
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent("slowdown", 0, 10, factor=0.0)
+    ev = FaultEvent("crash", 5, 10)
+    assert ev.end == 15 and ev.active_at(5) and not ev.active_at(15)
+
+
+def test_parse_fault_spec_grammar():
+    plan = parse_fault_spec(
+        "crash@200+100:r=0,flaky@0+1000:p=0.05,hang@400+20:s=0.5:r=1")
+    kinds = [e.kind for e in plan.events]
+    assert sorted(kinds) == ["crash", "flaky", "hang"]
+    hang = next(e for e in plan.events if e.kind == "hang")
+    assert hang.stall == 0.5 and hang.replica == 1
+    with pytest.raises(ValueError, match="expected"):
+        parse_fault_spec("crash200+100")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        parse_fault_spec("crash@0+10:z=3")
+
+
+def test_resolve_faults_forms():
+    assert resolve_faults(None) is None
+    plan = FaultPlan([FaultEvent("crash", 0, 10)])
+    assert resolve_faults(plan) is plan
+    # list mixing FaultEvent objects, spec strings and bare tuples
+    mixed = resolve_faults([FaultEvent("crash", 0, 10),
+                            "flaky@5+10:p=0.2",
+                            ("slowdown", 3.0, 4.0)])
+    assert sorted(e.kind for e in mixed.events) == \
+        ["crash", "flaky", "slowdown"]
+    with pytest.raises(TypeError):
+        resolve_faults(42)
+
+
+def test_periodic_crashes_rotates_replicas():
+    plan = periodic_crashes(1000.0, period=200.0, duration=50.0,
+                            num_replicas=3, time_indexed=True)
+    assert plan.time_indexed
+    assert [e.replica for e in plan.events] == [0, 1, 2, 0]
+    assert all(e.kind == "crash" for e in plan.events)
+    assert plan.for_replica(1).events == [plan.events[1]]
+
+
+# -- retry / backoff ---------------------------------------------------------
+
+def test_retry_spec_backoff_and_jitter():
+    spec = RetrySpec(max_retries=3, backoff=0.5, multiplier=2.0)
+    assert [spec.delay(7, a) for a in range(3)] == [0.5, 1.0, 2.0]
+    jit = RetrySpec(backoff=0.5, jitter=0.4, seed=3)
+    d = jit.delay(11, 1)
+    assert d == jit.delay(11, 1)           # deterministic redraw
+    assert 1.0 <= d <= 1.4                 # base * (1 + jitter*[0,1))
+    assert jit.delay(12, 1) != d           # queries de-synchronize
+
+
+def test_resolve_retries_forms():
+    assert resolve_retries(None) is None
+    assert resolve_retries(2).max_retries == 2
+    assert resolve_retries(dict(max_retries=1, timeout=3.0)).timeout == 3.0
+    spec = RetrySpec()
+    assert resolve_retries(spec) is spec
+    with pytest.raises(TypeError):
+        resolve_retries(True)
+    with pytest.raises(ValueError):
+        RetrySpec(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetrySpec(timeout=0.0)
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+def test_breaker_opens_on_streak_and_probes_closed():
+    hb = HealthTracker(2, failure_threshold=2, cooldown=10.0)
+    assert hb.state(0) == CLOSED and hb.healthy(0, 0.0)
+    hb.record_failure(0, 1.0)
+    assert hb.state(0) == CLOSED           # streak 1 < threshold
+    hb.record_failure(0, 2.0)
+    assert hb.state(0) == OPEN
+    assert not hb.healthy(0, 5.0)          # cooling down
+    assert hb.ready_at(0) == 12.0
+    assert hb.healthy(0, 12.0)             # expiry -> half-open probe
+    assert hb.state(0) == HALF_OPEN
+    assert hb.take_rewarm(0) and not hb.take_rewarm(0)   # one-shot
+    hb.record_success(0, 13.0)
+    assert hb.state(0) == CLOSED
+    assert hb.downtime[0] == pytest.approx(11.0)
+    assert hb.state(1) == CLOSED           # untouched replica
+
+
+def test_breaker_known_downtime_and_reopen():
+    hb = HealthTracker(1, failure_threshold=3, cooldown=1.0)
+    # a known recovery time opens immediately, ignoring the streak
+    hb.record_failure(0, 5.0, until=50.0)
+    assert hb.state(0) == OPEN and hb.ready_at(0) == 50.0
+    assert hb.healthy(0, 50.0) and hb.state(0) == HALF_OPEN
+    hb.record_failure(0, 51.0)             # failed probe -> re-open
+    assert hb.state(0) == OPEN
+    down = hb.finalize(60.0)
+    assert down[0] == pytest.approx(55.0)  # 45 + 9, open time only
+
+
+# -- simulator: single pipeline ----------------------------------------------
+
+@pytest.mark.parametrize("spec", ["crash@60+40", "hang@50+30:s=50",
+                                  "slowdown@40+60:f=3",
+                                  "flaky@30+120:p=0.5"])
+def test_seeded_determinism_per_kind(db, spec):
+    a = simulate(db, 4, scheduler="odin", faults=spec, retries=2, **SIM_KW)
+    b = simulate(db, 4, scheduler="odin", faults=spec, retries=2, **SIM_KW)
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.throughputs, b.throughputs)
+    assert _same_summary(a.summary(), b.summary())
+
+
+def test_flaky_draws_depend_on_plan_seed(db):
+    runs = [simulate(db, 4, scheduler="none", retries=2,
+                     faults=FaultPlan([FaultEvent("flaky", 30, 120, p=0.5)],
+                                      seed=s), **SIM_KW)
+            for s in (1, 2)]
+    assert not np.array_equal(runs[0].latencies, runs[1].latencies)
+
+
+def test_no_faults_bit_identity(db):
+    """An empty fault plan + a retry budget must not perturb a run."""
+    base = simulate(db, 4, scheduler="odin", **SIM_KW)
+    wrapped = simulate(db, 4, scheduler="odin", retries=3,
+                       faults=FaultPlan(events=[]), **SIM_KW)
+    assert np.array_equal(base.latencies, wrapped.latencies)
+    assert np.array_equal(base.throughputs, wrapped.throughputs)
+    assert base.configs_trace == wrapped.configs_trace
+    s = wrapped.summary()
+    assert s["num_failed"] == 0 and s["num_retried"] == 0
+    assert s["availability"] == 1.0 and s["wasted_work_frac"] == 0.0
+
+
+@pytest.mark.parametrize("scheduler", ["odin", "lls", "none"])
+def test_chunked_equals_scalar_with_faults(db, scheduler):
+    kw = dict(faults=["flaky@50+100:p=0.3", "slowdown@120+60:f=2"],
+              retries=2, **SIM_KW)
+    a = simulate(db, 4, scheduler=scheduler, chunking=False, **kw)
+    b = simulate(db, 4, scheduler=scheduler, chunking=True, **kw)
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.throughputs, b.throughputs)
+    assert a.configs_trace == b.configs_trace
+    assert _same_summary(a.summary(), b.summary())
+
+
+def test_flaky_retries_recover_queries(db):
+    t = simulate(db, 4, scheduler="none", faults="flaky@50+100:p=0.4",
+                 retries=3, **SIM_KW)
+    s = t.summary()
+    assert s["num_retried"] > 0
+    assert 0.9 < s["availability"] <= 1.0
+    # availability is completed / admitted
+    admitted = SIM_KW["num_queries"]
+    assert s["availability"] == pytest.approx(
+        (admitted - s["num_failed"]) / admitted)
+
+
+def test_hang_timeout_converts_stall_to_retry(db):
+    timed = simulate(db, 4, scheduler="none", faults="hang@50+80:s=500",
+                     retries=dict(max_retries=2, timeout=200.0), **SIM_KW)
+    free = simulate(db, 4, scheduler="none", faults="hang@50+80:s=500",
+                    **SIM_KW)
+    st, sf = timed.summary(), free.summary()
+    assert st["num_retried"] > 0 and st["wasted_work_frac"] > 0.0
+    # without a timeout the stall surfaces as latency, not failures
+    assert sf["num_retried"] == 0 and sf["num_failed"] == 0
+    assert sf["p99_latency_s"] > st["p99_latency_s"]
+
+
+# -- fleet -------------------------------------------------------------------
+
+def test_cluster_no_faults_bit_identity_with_retries(db):
+    kw = dict(scheduler="odin", num_queries=200, workload="poisson",
+              workload_kwargs=dict(rate=0.01, seed=3),
+              router="least_outstanding")
+    base = simulate_cluster(db, 3, 2, **kw)
+    armed = simulate_cluster(db, 3, 2, retries=2, hedge_after=None, **kw)
+    assert np.array_equal(base.assignments, armed.assignments)
+    assert np.array_equal(base.fleet.latencies, armed.fleet.latencies)
+    assert _same_summary(base.summary(), armed.summary())
+
+
+def test_cluster_summaries_grow_fault_keys(db):
+    keys = ("num_failed", "num_retried", "num_hedged", "availability",
+            "wasted_work_frac", "downtime_s")
+    kw = dict(scheduler="none", num_queries=60)
+    for mode in ("dense", "streaming"):
+        s = simulate_cluster(db, 3, 2, trace_mode=mode, **kw).summary()
+        assert all(k in s for k in keys), mode
+    t = simulate(db, 4, scheduler="none", num_queries=60)
+    assert all(k in t.summary() for k in keys)
+
+
+def test_time_indexed_crash_recovery(db):
+    """The crashed replica rejoins the fleet after its window: the
+    breaker opens on the known outage, holds until the recovery time,
+    then a successful probe closes it and later arrivals land there."""
+    plan = FaultPlan([FaultEvent("crash", 2000.0, 4000.0, replica=1)],
+                     seed=0, time_indexed=True)
+    kw = dict(scheduler="none", num_queries=250, workload="poisson",
+              workload_kwargs=dict(rate=0.01, seed=3),
+              router="least_outstanding", faults=plan,
+              retries=dict(max_retries=3, backoff=50.0),
+              health_kwargs=dict(failure_threshold=1, cooldown=500.0))
+    ct = simulate_cluster(db, 3, 2, **kw)
+    s = ct.summary()
+    assert s["availability"] == 1.0
+    assert s["num_retried"] >= 1
+    assert s["downtime_s"] >= 4000.0            # at least the window
+    post = (ct.assignments == 1) & (ct.fleet.arrival_times > 8000.0)
+    assert post.sum() > 0                       # replica 1 rejoined
+    rerun = simulate_cluster(db, 3, 2, **kw)
+    assert np.array_equal(ct.assignments, rerun.assignments)
+
+
+def test_hedging_first_wins_and_charges_loser(db):
+    """One permanently slow replica: hedged dispatches run on the fast
+    peer (first projected finisher wins), the loser's reserved
+    occupancy is charged as wasted work, and the tail collapses."""
+    plan = FaultPlan([FaultEvent("slowdown", 0.0, 1e9, replica=0,
+                                 factor=5.0)], seed=0)
+    kw = dict(scheduler="none", num_queries=150, workload="poisson",
+              workload_kwargs=dict(rate=0.008, seed=2),
+              router="round_robin", faults=plan, retries=1)
+    hedged = simulate_cluster(db, 3, 2, hedge_after=50.0, **kw)
+    straight = simulate_cluster(db, 3, 2, **kw)
+    sh, ss = hedged.summary(), straight.summary()
+    assert sh["num_hedged"] > 0
+    assert sh["wasted_work_frac"] > 0.0 and ss["wasted_work_frac"] == 0.0
+    assert sh["availability"] == 1.0
+    assert sh["p99_latency_s"] < ss["p99_latency_s"]
+
+
+@pytest.mark.parametrize("mode", ["wait", "shed"])
+def test_all_replicas_unhealthy_no_deadlock(db, mode):
+    """A fleet-wide crash window: both replicas' breakers open at once.
+    ``wait`` holds arrivals for the earliest recovery (in-window
+    arrivals stay doomed — windows anchor on the arrival clock — and
+    fail after their budget); ``shed`` turns them away up front.
+    Either way the run must terminate, deterministically."""
+    plan = FaultPlan([FaultEvent("crash", 3000.0, 2000.0)],
+                     seed=0, time_indexed=True)
+    kw = dict(scheduler="none", num_queries=120, workload="poisson",
+              workload_kwargs=dict(rate=0.012, seed=5),
+              router="least_outstanding", faults=plan,
+              retries=dict(max_retries=5, backoff=100.0),
+              health_kwargs=dict(failure_threshold=1, cooldown=400.0),
+              when_all_unhealthy=mode)
+    ct = simulate_cluster(db, 3, 2, **kw)
+    s = ct.summary()
+    served = int(ct.replica_counts.sum())
+    assert served == 120 - int(s["num_failed"]) - int(s["num_shed"])
+    if mode == "shed":
+        assert s["num_shed"] > 0
+    else:
+        assert s["num_shed"] == 0 and s["num_failed"] > 0
+    rerun = simulate_cluster(db, 3, 2, **kw)
+    assert _same_summary(s, rerun.summary())
+
+
+def test_faults_reject_fleet_rebatching(db):
+    with pytest.raises(ValueError, match="max_batch"):
+        simulate_cluster(db, 3, 2, scheduler="none", num_queries=20,
+                         workload="poisson",
+                         workload_kwargs=dict(rate=0.01, seed=0),
+                         max_batch=4, retries=2)
+
+
+def test_when_all_unhealthy_validated(db):
+    with pytest.raises(ValueError, match="when_all_unhealthy"):
+        simulate_cluster(db, 3, 2, scheduler="none", num_queries=20,
+                         retries=1, when_all_unhealthy="explode")
+
+
+# -- live acceptance ---------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_setup():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), num_layers=4)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 32)))
+               for _ in range(36)]
+    engines = [ServingEngine(cfg, params, num_eps=4, scheduler="none")
+               for _ in range(2)]
+    for eng in engines:
+        eng.executor.warmup(1, 32)
+    probe = engines[0].serve(queries[:4], lambda q: [1.0] * 4)
+    service = float(probe.service_latencies[1:].mean())
+    return engines, queries, service
+
+
+def test_live_crash_recover_acceptance(live_setup):
+    """Acceptance (ISSUE): live fleet, replica 1 crashes mid-run and
+    recovers — retries + health routing carry every query, the
+    recovering replica re-warms (warm_buckets) before taking traffic,
+    and it serves again after the window."""
+    from repro.cluster import serve_cluster
+
+    engines, queries, service = live_setup
+    rate = 0.5 / service                    # fleet-wide arrival rate
+    horizon = len(queries) / rate
+    plan = FaultPlan([FaultEvent("crash", 0.2 * horizon, 0.3 * horizon,
+                                 replica=1)], seed=0, time_indexed=True)
+
+    rewarmed = []
+    orig = engines[1].executor.warm_buckets
+
+    def tracking_warm(seqs, max_batch):
+        rewarmed.append(list(seqs))
+        return orig(seqs, max_batch)
+
+    engines[1].executor.warm_buckets = tracking_warm
+    try:
+        ct = serve_cluster(
+            engines, queries, lambda q: [1.0] * 4,
+            workload="poisson", workload_kwargs=dict(rate=rate, seed=4),
+            router="least_outstanding", faults=plan,
+            retries=dict(max_retries=3, backoff=0.25 * horizon,
+                         jitter=0.1),
+            health_kwargs=dict(failure_threshold=1,
+                               cooldown=0.05 * horizon))
+    finally:
+        engines[1].executor.warm_buckets = orig
+
+    s = ct.summary()
+    assert s["availability"] >= 0.9
+    assert s["num_retried"] >= 1
+    assert s["downtime_s"] > 0.0
+    assert rewarmed and rewarmed[0] == [32]  # re-warm before the probe
+    post = (ct.assignments == 1) & \
+        (ct.fleet.arrival_times > 0.5 * horizon)
+    assert post.sum() > 0                    # replica 1 took traffic again

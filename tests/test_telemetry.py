@@ -15,6 +15,7 @@ from repro.cluster import simulate_cluster
 from repro.core import generate_events, simulate, synthetic_database
 from repro.telemetry import (
     CallbackSink,
+    Histogram,
     JsonLinesSink,
     MemorySink,
     MetricsRegistry,
@@ -22,6 +23,7 @@ from repro.telemetry import (
     QuantileSketch,
     StreamingCollector,
     StreamingTrace,
+    ThresholdSink,
     WindowedRollup,
     export_path_format,
     render_export,
@@ -341,6 +343,55 @@ def test_sinks(tmp_path):
     buf = io.StringIO()
     JsonLinesSink(buf).emit({"d": 6})
     assert json.loads(buf.getvalue())["d"] == 6
+
+
+def test_histogram_metric():
+    reg = MetricsRegistry("t")
+    h = reg.histogram("latency_seconds", "per-query latency",
+                      buckets=(0.1, 1.0, 10.0))
+    assert isinstance(h, Histogram)
+    for v in (0.05, 0.5, 5.0, 50.0):
+        h.observe(v)
+    cum = h.cumulative()
+    assert cum["0.1"] == 1 and cum["1"] == 2 and cum["10"] == 3
+    assert cum["+Inf"] == 4 and h.count == 4
+    assert h.sum == pytest.approx(55.55)
+    snap = reg.snapshot()["t_latency_seconds"]
+    assert snap["count"] == 4 and "buckets" in snap
+    # merge conserves counts bucket-by-bucket
+    other = MetricsRegistry("t")
+    other.histogram("latency_seconds", buckets=(0.1, 1.0, 10.0)) \
+         .observe(0.5)
+    reg.merge(other)
+    assert h.cumulative()["1"] == 3 and h.count == 5
+    assert "t_latency_seconds_bucket" in reg.prometheus()
+
+
+def test_threshold_sink_fires_with_hysteresis():
+    hits = []
+    sink = ThresholdSink()
+    sink.add_rule("avail", 0.99, above=False, clear=0.995,
+                  callback=hits.append)
+    for v in (1.0, 0.98, 0.97, 0.992, 0.996, 0.98):
+        sink.emit({"avail": v})
+    # fires entering the breach, re-arms only after clearing 0.995
+    assert [i["snapshot_index"] for i in sink.incidents] == [1, 5]
+    assert [i["value"] for i in sink.incidents] == [0.98, 0.98]
+    assert hits == sink.incidents
+    assert isinstance(sink, MetricsSink)
+
+
+def test_threshold_sink_quantile_rule_and_validation():
+    sink = ThresholdSink()
+    sink.add_rule("lat", 1.0, quantile="0.99", clear=0.8)
+    summary = {"count": 1, "sum": 1.0, "quantiles": {"0.99": 2.0}}
+    sink.emit({"lat": summary})
+    assert sink.incidents[0]["rule"] == "lat{q=0.99}"
+    sink.emit({"lat": {"quantiles": {"0.99": float("nan")}}})
+    sink.emit({})                           # missing metric: no signal
+    assert len(sink.incidents) == 1
+    with pytest.raises(ValueError, match="never reset"):
+        sink.add_rule("x", 1.0, clear=2.0)
 
 
 # ---------------------------------------------------------------------------
