@@ -1,0 +1,142 @@
+"""CI QoS smoke: 2 tiers, bursty overload, heterogeneous 4-replica fleet.
+
+Runs the QoS acceptance scenario (docs/QOS.md): a gold tier (priority
+2, value 10, 800 time-unit deadline) and a batch tier (priority 0,
+value 1, loose deadline) over a fleet of two full-model and two
+small-model replicas under bursty (MMPP) overload.  Three control
+configurations are compared:
+
+* ``qos`` — downgrade routing + expected-value shedding,
+* ``slo_shed`` — the same router with tier-blind latency shedding,
+* ``round_robin`` — a fleet-blind router, no admission control.
+
+Writes the per-configuration per-tier metrics to
+``results/benchmarks/qos_smoke.csv`` and fails unless the tier-aware
+control plane pays off:
+
+* ``qos`` gold-tier deadline attainment >= 0.99 while the fleet-blind
+  baseline violates it,
+* ``qos`` realized value strictly above *both* baselines,
+* dense vs streaming per-tier p99 within 1%, and the run is
+  deterministic (identical summary on a rerun).
+
+    REPRO_QOS_QUERIES=600 PYTHONPATH=src python -m benchmarks.qos_smoke
+"""
+from __future__ import annotations
+
+import csv
+import math
+import os
+import sys
+
+from benchmarks.common import RESULTS_DIR
+from repro.cluster import simulate_cluster
+from repro.core.database import synthetic_database
+
+NUM_QUERIES = int(os.environ.get("REPRO_QOS_QUERIES", "600"))
+
+TIERS = [dict(name="gold", priority=2, value=10.0, deadline=800.0),
+         dict(name="batch", priority=0, value=1.0, deadline=6000.0)]
+
+TIER_COLS = ("num", "shed", "p50_latency_s", "p99_latency_s",
+             "deadline_attainment", "downgraded")
+
+
+def run(full, small, name, router, admission, rk=None, ak=None,
+        trace_mode="dense"):
+    ct = simulate_cluster(
+        full, 4, num_replicas=4,
+        databases=[full, full, small, small],
+        pools=["default", "default", "small", "small"],
+        scheduler="none",
+        router=router, router_kwargs=rk,
+        admission=admission, admission_kwargs=ak,
+        num_queries=NUM_QUERIES,
+        tiers=TIERS, tiers_kwargs=dict(shares=[0.15, 0.85], seed=5),
+        workload="bursty",
+        workload_kwargs=dict(burst_rate=0.16, base_rate=0.004,
+                             mean_burst=400.0, mean_gap=400.0, seed=7),
+        trace_mode=trace_mode)
+    s = ct.summary()
+    row = {"config": name, "trace_mode": trace_mode,
+           "num_queries": NUM_QUERIES, "router": router,
+           "admission": admission or "none",
+           "offered_value": s["offered_value"],
+           "realized_value": s["realized_value"],
+           "num_shed": s["num_shed"]}
+    for tier in ("gold", "batch"):
+        for col in TIER_COLS:
+            key = f"tier_{tier}_{col}"
+            row[key] = s.get(key, 0.0)
+    return row
+
+
+def main() -> int:
+    full = synthetic_database("vgg16", base_time=10.0, seed=0)
+    small = synthetic_database("vgg16", base_time=5.0, seed=0)
+
+    configs = [
+        ("qos", "downgrade", "value_shed",
+         dict(pressure=0.0, priority_max=0), dict(theta=0.5)),
+        ("slo_shed", "downgrade", "slo_shed",
+         dict(pressure=0.0, priority_max=0), dict(slo=800.0)),
+        ("round_robin", "round_robin", None, None, None),
+    ]
+    rows, by_name = [], {}
+    for name, router, admission, rk, ak in configs:
+        row = run(full, small, name, router, admission, rk=rk, ak=ak)
+        rows.append(row)
+        by_name[name] = row
+        print(f"{name:12s} realized value {row['realized_value']:8.1f}  "
+              f"gold attainment {row['tier_gold_deadline_attainment']:.4f}  "
+              f"shed {row['num_shed']:.0f}  "
+              f"downgraded {row['tier_batch_downgraded']:.0f}")
+    stream = run(full, small, "qos", "downgrade", "value_shed",
+                 rk=dict(pressure=0.0, priority_max=0),
+                 ak=dict(theta=0.5), trace_mode="streaming")
+    rows.append(stream)
+    rerun = run(full, small, "qos", "downgrade", "value_shed",
+                rk=dict(pressure=0.0, priority_max=0), ak=dict(theta=0.5))
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "qos_smoke.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+    qos = by_name["qos"]
+    failed = []
+    bad = [(r["config"], k) for r in rows for k, v in r.items()
+           if isinstance(v, float) and not math.isfinite(v)]
+    if bad:
+        failed.append(f"non-finite columns: {bad}")
+    if qos["tier_gold_deadline_attainment"] < 0.99:
+        failed.append(f"qos gold attainment "
+                      f"{qos['tier_gold_deadline_attainment']:.4f} < 0.99")
+    if by_name["round_robin"]["tier_gold_deadline_attainment"] >= 0.99:
+        failed.append("fleet-blind round_robin unexpectedly met the "
+                      "gold objective — the scenario is not an overload")
+    for base in ("slo_shed", "round_robin"):
+        if qos["realized_value"] <= by_name[base]["realized_value"]:
+            failed.append(
+                f"qos realized value {qos['realized_value']:.1f} <= "
+                f"{base} {by_name[base]['realized_value']:.1f}")
+    for tier in ("gold", "batch"):
+        k = f"tier_{tier}_p99_latency_s"
+        if abs(stream[k] - qos[k]) > 0.01 * qos[k]:
+            failed.append(f"dense/streaming {k} diverge: "
+                          f"{qos[k]:.2f} vs {stream[k]:.2f}")
+    drift = [k for k, v in qos.items() if rerun[k] != v]
+    if drift:
+        failed.append(f"non-deterministic columns: {drift}")
+
+    if failed:
+        print("qos_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"qos_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

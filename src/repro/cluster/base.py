@@ -36,14 +36,20 @@ class ReplicaView:
     (``round_robin`` ignores all of them) never pay for it.
     """
 
-    __slots__ = ("index", "outstanding", "now", "since_assign", "_runner")
+    __slots__ = ("index", "outstanding", "now", "since_assign", "pool",
+                 "_runner")
 
     def __init__(self, index: int, runner: "PipelineRunner",
                  outstanding: int, now: float,
-                 since_assign: float = float("inf")):
+                 since_assign: float = float("inf"),
+                 pool: str = "default"):
         self.index = index
         self.outstanding = outstanding
         self.now = now
+        #: Replica pool label (heterogeneous fleets, docs/QOS.md):
+        #: ``"small"`` marks small-model replicas the ``downgrade``
+        #: router may send best-effort traffic to under pressure.
+        self.pool = pool
         #: Fleet queries since this replica last served one (``inf`` if
         #: never).  Detector/estimate signals only advance when the
         #: replica serves, so this is the *staleness* of every probed
@@ -107,6 +113,13 @@ class Router(Protocol):
         views may cover only the fleet's *active* subset (autoscaling,
         docs/CONTROL.md); the cluster resolves the position to a fleet
         replica via ``views[pos].index``.
+
+        Tier-aware routers (``edf``, ``downgrade``; docs/QOS.md) may
+        additionally accept a ``request`` keyword — the cluster
+        detects the parameter by signature and passes the arrival's
+        :class:`~repro.qos.QosRequest` when tiers are armed, ``None``
+        otherwise; routers without the parameter are called exactly as
+        before.
         """
         ...
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import inspect
 import math
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
@@ -34,6 +35,7 @@ from repro.control.base import AdmissionView
 from repro.control.registry import resolve_admission, resolve_autoscaler
 from repro.faults.health import OPEN, HealthTracker
 from repro.faults.retry import RetrySpec, resolve_retries
+from repro.qos import QosRequest, TierPlan, resolve_tiers
 from repro.schedulers.runtime import RebalanceRuntime
 from repro.util.errors import TransientQueryError
 from repro.telemetry.streaming import (
@@ -80,6 +82,10 @@ class Replica:
     runtime: RebalanceRuntime
     name: str = ""
     peak_throughput: float = float("nan")
+    #: Replica pool label (heterogeneous fleets, docs/QOS.md):
+    #: ``"small"`` marks a small-model replica the ``downgrade`` router
+    #: may send best-effort traffic to under pressure.
+    pool: str = "default"
     on_assign: Optional[Callable[[int, int, Optional[float]], None]] = None
     #: optional recovery hook ``on_recover(now)`` — fired once per
     #: breaker open->probe transition, *before* the probe dispatch: the
@@ -130,7 +136,9 @@ class Cluster:
                  retries: Union[RetrySpec, int, dict, None] = None,
                  hedge_after: Optional[float] = None,
                  health_kwargs: Optional[dict] = None,
-                 when_all_unhealthy: str = "wait"):
+                 when_all_unhealthy: str = "wait",
+                 tiers=None,
+                 tiers_kwargs: Optional[dict] = None):
         if len(replicas) < 1:
             raise ValueError("a cluster needs at least one replica")
         if when_all_unhealthy not in ("wait", "shed"):
@@ -152,10 +160,20 @@ class Cluster:
                                            False) for rep in self.replicas))
         if self.fault_aware and self.retries is None:
             self.retries = RetrySpec()     # default budget (docs/FAULTS.md)
-        if self.fault_aware and self.max_batch > 1:
+        # Faults + rebatching compose: a failure inside a flushed batch
+        # is attributed to a single query (fault-window chunks are
+        # single-query by construction) and handled per
+        # ``RetrySpec.batch_policy`` (docs/FAULTS.md).  Hedging still
+        # needs per-query dispatch — a buffered batch has no single
+        # "predicted-slow dispatch" to duplicate.
+        if self.hedge_after is not None and self.max_batch > 1:
             raise ValueError("fleet rebatching (max_batch > 1) is not "
-                             "supported with faults/retries/hedging: "
-                             "retry routing needs per-query dispatch")
+                             "supported with hedging: hedged dispatch "
+                             "duplication is per-query")
+        # QoS tiers (repro.qos, docs/QOS.md): the spec is resolved into
+        # a fleet TierPlan per run (stamping needs the run length).
+        self._tiers_spec = tiers
+        self._tiers_kwargs = tiers_kwargs
         self.router = resolve_router(router, router_kwargs)
         self.router_name = getattr(self.router, "name",
                                    type(self.router).__name__)
@@ -217,6 +235,28 @@ class Cluster:
         # own collector (merged into the fleet view at read time).
         fleet_extra = StreamingCollector(slo=slo) if use_telemetry else None
 
+        # QoS tiers (docs/QOS.md): one fleet plan indexed by fleet
+        # arrival; each replica gets an empty local plan its assigned
+        # queries are stamped into (keyed overwrite, like on_assign).
+        tier_plan = None
+        if self._tiers_spec is not None or self._tiers_kwargs:
+            tier_plan = resolve_tiers(self._tiers_spec,
+                                      self._tiers_kwargs, num_queries)
+        if tier_plan is not None and fleet_extra is not None:
+            fleet_extra.configure_tiers(tier_plan.names)
+        # Tier-aware routers take the arrival's QoS context through an
+        # optional ``request`` keyword, detected once by signature
+        # (routers without it are called exactly as before).
+        try:
+            wants_request = "request" in inspect.signature(
+                self.router.route).parameters
+        except (TypeError, ValueError):
+            wants_request = False
+        # Downgrade accounting is read as a per-run delta: the router
+        # object persists across serving windows.
+        dg_before = dict(getattr(self.router, "downgrade_counts", None)
+                         or {})
+
         # Pre-size each runner at its balanced share; a skewed router
         # just grows that replica's arrays (doubling) as it serves —
         # streaming runners stay at their fixed recycling capacity.
@@ -224,7 +264,11 @@ class Cluster:
         runners = [PipelineRunner(rep.executor, rep.runtime, share,
                                   trace_mode=trace_mode,
                                   telemetry=(StreamingCollector(slo=slo)
-                                             if use_telemetry else None))
+                                             if use_telemetry else None),
+                                  tiers=(TierPlan.empty(tier_plan.tiers,
+                                                        share)
+                                         if tier_plan is not None
+                                         else None))
                    for rep in self.replicas]
         # Outstanding completions per replica: popped against the
         # (monotone) decision clock to count in-system queries.
@@ -259,6 +303,11 @@ class Cluster:
         if scaler is not None:
             scaler.reset()
         shed_arrivals: List[float] = []
+        # Fleet-level per-tier shed accounting (replicas never shed —
+        # admission happens here, before the runner sees the query).
+        shed_tier_counts = (np.zeros(len(tier_plan.tiers), dtype=np.int64)
+                            if tier_plan is not None else None)
+        shed_value = 0.0
         active_timeline: List[Tuple[int, Tuple[int, ...]]] = []
         cur_active: Optional[List[int]] = None
         active_sum = 0.0
@@ -269,11 +318,15 @@ class Cluster:
         # Fleet rebatching (max_batch > 1): same-replica routing streaks
         # buffer here and flush through step_many as one formed backlog.
         pend: List[float] = []         # buffered arrival times
+        pend_q: List[int] = []         # their fleet indices
         pend_r = -1                    # replica the buffer belongs to
 
         def flush_pending() -> None:
             nonlocal pend_r
             if not pend:
+                return
+            if tracker is not None:
+                flush_faulty()
                 return
             runner = runners[pend_r]
             s_before = runner.num_served
@@ -284,6 +337,7 @@ class Cluster:
                     observe(float(runner.queue_delay[s]),
                             float(runner.service_lat[s]))
             pend.clear()
+            pend_q.clear()
             pend_r = -1
 
         def est_service(v: ReplicaView) -> float:
@@ -294,7 +348,180 @@ class Cluster:
             hook = self.replicas[r].on_assign
             if hook is not None:
                 hook(i, runners[r].total_served, arrival)
+            if tier_plan is not None:
+                runners[r].stamp_tier(runners[r].total_served,
+                                      tier_plan, i)
             last_assign[r] = i
+
+        def fleet_views(at: float) -> List[ReplicaView]:
+            """Fresh fleet-wide views for batch-retry routing (the
+            buffered batch was admitted long before the flush, so
+            retries route over the whole fleet like serve_one's)."""
+            return [ReplicaView(ridx, runner, len(outstanding[ridx]), at,
+                                pool=self.replicas[ridx].pool)
+                    for ridx, runner in enumerate(runners)]
+
+        def flush_batch(r: int, batch: List[Tuple[int, float]],
+                        floor: Optional[float]):
+            """Flush ``batch`` of ``(fleet_q, arrival)`` through replica
+            ``r``'s vectorized path.  Every member is (re-)stamped into
+            its local slot first — retries shift slots, and the keyed
+            backend hooks must agree with where the rows land.  Returns
+            ``(completions, err)``: the in-order completion times of the
+            prefix that executed, and the failing dispatch's error
+            (``None`` = the whole batch completed)."""
+            runner = runners[r]
+            if floor is not None and floor > runner.free_at:
+                # Backoff hold: the arrivals are already in the past, so
+                # holding the admission head delays every retried start
+                # exactly like step(not_before=...) would.
+                runner.free_at = floor
+            base = runner.total_served
+            for off, (fq, a) in enumerate(batch):
+                hook = self.replicas[r].on_assign
+                if hook is not None:
+                    hook(fq, base + off, a)
+                if tier_plan is not None:
+                    runner.stamp_tier(base + off, tier_plan, fq)
+            rewarm(r, max(batch[0][1], floor or 0.0, runner.free_at))
+            s_before = runner.num_served
+            err = None
+            try:
+                comps = runner.step_many([a for (_, a) in batch])
+            except TransientQueryError as e:
+                err = e
+                comps = list(getattr(e, "partial_completions", []))
+            for c in comps:
+                heapq.heappush(outstanding[r], c)
+            if observe is not None:
+                for s in range(s_before, runner.num_served):
+                    observe(float(runner.queue_delay[s]),
+                            float(runner.service_lat[s]))
+            if not streaming:
+                for off, (fq, _a) in enumerate(batch[:len(comps)]):
+                    assignments[fq] = r
+                    local_indices[fq] = base + off
+            return comps, err
+
+        def finalize_single(fq: int, comp: Optional[float],
+                            win: int) -> None:
+            """Ledger bookkeeping for one batch member that finished
+            (or exhausted its budget) on the single-query path."""
+            if comp is None:
+                if not streaming:
+                    assignments[fq] = -2
+                    local_indices[fq] = -1
+                return
+            heapq.heappush(outstanding[win], comp)
+            if not streaming:
+                assignments[fq] = win
+                local_indices[fq] = runners[win].num_served - 1
+            if observe is not None:
+                s = runners[win].num_served - 1
+                observe(float(runners[win].queue_delay[s]),
+                        float(runners[win].service_lat[s]))
+
+        def retry_as_single(fq: int, arrival: float, r: int,
+                            fail_t: float):
+            """Continue a batch member's retry loop as a single after
+            its first failure (mirrors serve_one's failure branch:
+            backoff, healthy re-route, per-query budget)."""
+            if retry.max_retries < 1:
+                runners[r].num_failed += 1
+                return None, r
+            runners[r].num_retried += 1
+            hold = fail_t + retry.delay(fq, 0)
+            cand = fleet_views(hold)
+            pool = [v for v in cand if tracker.healthy(v.index, hold)]
+            if not pool:
+                if self.when_all_unhealthy == "shed":
+                    runners[r].num_failed += 1
+                    return None, r
+                hold = max(hold, min(tracker.ready_at(v.index)
+                                     for v in cand))
+                pool = [v for v in cand
+                        if tracker.healthy(v.index, hold)]
+            nxt = min(pool, key=lambda v: (max(v.free_at, hold), v.index))
+            if nxt.index != r:
+                r = nxt.index
+                assign(fq, r, arrival)
+            return serve_one(fq, r, arrival, hold, cand, attempt=1)
+
+        def flush_faulty() -> None:
+            """Fault-aware flush of the rebatch buffer: failures are
+            attributed to single queries (fault-window chunks are
+            single-query by construction) and handled per
+            ``RetrySpec.batch_policy`` (docs/FAULTS.md)."""
+            nonlocal pend_r
+            policy = retry.batch_policy
+            r = pend_r
+            batch = list(zip(pend_q, pend))
+            pend.clear()
+            pend_q.clear()
+            pend_r = -1
+            attempt = 0                      # shared budget ("all")
+            floor: Optional[float] = None
+            while batch:
+                comps, err = flush_batch(r, batch, floor)
+                batch = batch[len(comps):]
+                if err is None:
+                    return
+                fq, arrival = batch[0]
+                fail_t = max(runners[r].free_at, arrival, floor or 0.0)
+                tmo = getattr(err, "timeout", None)
+                if tmo is not None and tmo == tmo:
+                    runners[r].charge_occupancy(max(fail_t, arrival),
+                                                float(tmo))
+                    fail_t = runners[r].free_at
+                tracker.record_failure(r, fail_t,
+                                       until=getattr(err, "until",
+                                                     math.nan))
+                if policy == "all":
+                    # Fail-whole-batch: the failing query and the tail
+                    # re-flush together under one attempt budget.
+                    if attempt >= retry.max_retries:
+                        runners[r].num_failed += len(batch)
+                        if not streaming:
+                            for fq2, _a in batch:
+                                assignments[fq2] = -2
+                                local_indices[fq2] = -1
+                        return
+                    runners[r].num_retried += len(batch)
+                    hold = fail_t + retry.delay(fq, attempt)
+                    attempt += 1
+                    cand = fleet_views(hold)
+                    pool = [v for v in cand
+                            if tracker.healthy(v.index, hold)]
+                    if not pool:
+                        if self.when_all_unhealthy == "shed":
+                            runners[r].num_failed += len(batch)
+                            if not streaming:
+                                for fq2, _a in batch:
+                                    assignments[fq2] = -2
+                                    local_indices[fq2] = -1
+                            return
+                        hold = max(hold, min(tracker.ready_at(v.index)
+                                             for v in cand))
+                        pool = [v for v in cand
+                                if tracker.healthy(v.index, hold)]
+                    r = min(pool, key=lambda v: (max(v.free_at, hold),
+                                                 v.index)).index
+                    floor = hold
+                    continue
+                comp, win = retry_as_single(fq, arrival, r, fail_t)
+                finalize_single(fq, comp, win)
+                batch = batch[1:]
+                floor = None
+                if policy == "subset":
+                    # Only the failing query left the batch; the
+                    # untouched tail re-flushes as a batch.
+                    continue
+                # "resplit": the batch dissolves into singles.
+                for fq2, a2 in batch:
+                    comp, win = serve_one(fq2, r, a2, None,
+                                          fleet_views(a2))
+                    finalize_single(fq2, comp, win)
+                return
 
         def rewarm(r: int, clock: float) -> None:
             """Fire the replica's re-warm hook once per open->probe
@@ -305,14 +532,16 @@ class Cluster:
                     hook(clock)
 
         def serve_one(i: int, r: int, arrival: Optional[float],
-                      not_before: Optional[float], candidates):
+                      not_before: Optional[float], candidates,
+                      attempt: int = 0):
             """Serve fleet query ``i`` starting on replica ``r``,
             retrying transient failures across healthy replicas under
             the retry budget (exponential backoff, least-loaded
             re-route).  Returns ``(completion, winner)`` on success,
             ``(None, r)`` when the budget is exhausted.  ``candidates``
-            is the active view list retries/hedges may route over."""
-            attempt = 0
+            is the active view list retries/hedges may route over;
+            ``attempt`` pre-spends budget a batch member's first
+            failure already consumed (docs/FAULTS.md)."""
             hedge_loser = None
             # Tail-latency hedging: when the chosen replica's backlog
             # exceeds ``hedge_after``, duplicate the dispatch on the
@@ -422,7 +651,8 @@ class Cluster:
                 in_system = len(heap) + (len(pend) if ridx == pend_r
                                          else 0)
                 views.append(ReplicaView(ridx, runner, in_system, now,
-                                         since_assign=since))
+                                         since_assign=since,
+                                         pool=self.replicas[ridx].pool))
             if scaler is not None:
                 active = sorted(set(int(r) for r in
                                     scaler.active(i, now, views)))
@@ -444,6 +674,21 @@ class Cluster:
                 routed_views = views
             candidates = routed_views
             not_before: Optional[float] = None
+            # QoS context (docs/QOS.md): the arrival's tier stamp, with
+            # the relative deadline anchored at the decision clock so
+            # deadline-aware routers compare etas against an absolute
+            # time.  ``None`` whenever tiers are off — tier-aware
+            # routers then fall through to their untier-ed behaviour.
+            if tier_plan is not None:
+                tid = int(tier_plan.tier_ids[i])
+                rel_dl = float(tier_plan.deadlines[i])
+                tval = float(tier_plan.values[i])
+                tier_ctx = QosRequest(query=i, tier=tid,
+                                      priority=int(
+                                          tier_plan.priorities[i]),
+                                      deadline=now + rel_dl, value=tval)
+            else:
+                tier_ctx = None
             if tracker is not None:
                 # Health-aware routing: the router only sees replicas
                 # whose breaker admits traffic at ``now``.
@@ -452,9 +697,16 @@ class Cluster:
                 if not healthy:
                     if self.when_all_unhealthy == "shed":
                         if fleet_extra is not None:
-                            fleet_extra.observe_shed(now)
+                            if tier_ctx is not None:
+                                fleet_extra.observe_shed(now, tier=tid,
+                                                         value=tval)
+                            else:
+                                fleet_extra.observe_shed(now)
                         if not streaming:
                             shed_arrivals.append(now)
+                        if tier_ctx is not None:
+                            shed_tier_counts[tid] += 1
+                            shed_value += tval
                         continue
                     # "wait": hold the dispatch until the earliest
                     # breaker expiry — that replica then admits a
@@ -467,7 +719,11 @@ class Cluster:
                 routed_views = healthy
             active_sum += len(routed_views)
             num_active = len(routed_views)
-            pos = int(self.router.route(i, now, routed_views))
+            if wants_request:
+                pos = int(self.router.route(i, now, routed_views,
+                                            request=tier_ctx))
+            else:
+                pos = int(self.router.route(i, now, routed_views))
             if not 0 <= pos < len(routed_views):
                 raise ValueError(f"router {self.router_name!r} returned "
                                  f"position {pos} for "
@@ -482,16 +738,32 @@ class Cluster:
                 # router already picked the cheapest dispatch, so if
                 # that one cannot meet the SLO, nobody can.
                 v = views[r]
-                view = AdmissionView(
-                    query=i, arrival=arrival,
-                    wait=0.0 if arrival is None else v.backlog,
-                    est_service=v.est_bottleneck,
-                    est_latency=v.est_latency)
+                if tier_ctx is not None:
+                    view = AdmissionView(
+                        query=i, arrival=arrival,
+                        wait=0.0 if arrival is None else v.backlog,
+                        est_service=v.est_bottleneck,
+                        est_latency=v.est_latency,
+                        tier=tid, priority=tier_ctx.priority,
+                        deadline=rel_dl, value=tval)
+                else:
+                    view = AdmissionView(
+                        query=i, arrival=arrival,
+                        wait=0.0 if arrival is None else v.backlog,
+                        est_service=v.est_bottleneck,
+                        est_latency=v.est_latency)
                 if not adm.admit(view):
                     if fleet_extra is not None:
-                        fleet_extra.observe_shed(now)
+                        if tier_ctx is not None:
+                            fleet_extra.observe_shed(now, tier=tid,
+                                                     value=tval)
+                        else:
+                            fleet_extra.observe_shed(now)
                     if not streaming:
                         shed_arrivals.append(now)
+                    if tier_ctx is not None:
+                        shed_tier_counts[tid] += 1
+                        shed_value += tval
                     continue
             # total_served == num_served in dense mode; in streaming it
             # keeps counting across the runner's array recycling, so
@@ -503,12 +775,15 @@ class Cluster:
             hook = self.replicas[r].on_assign
             if hook is not None:
                 hook(i, local, arrival)
+            if tier_plan is not None:
+                runners[r].stamp_tier(local, tier_plan, i)
             last_assign[r] = i
             if not streaming:
                 assignments[i] = r
                 local_indices[i] = local
             if self.max_batch > 1 and arrival is not None:
                 pend.append(float(arrival))
+                pend_q.append(i)
                 pend_r = r
                 if len(pend) >= self.max_batch:
                     flush_pending()
@@ -564,6 +839,25 @@ class Cluster:
                                                breaker_down[k])
                 else:
                     t.downtime = max(t.downtime, breaker_down[k])
+        # Downgrade accounting (docs/QOS.md): per-run delta of the
+        # router's counters (the router object persists across serving
+        # windows), threaded into whichever trace surface is active.
+        downgrade_tier_counts = None
+        if tier_plan is not None:
+            dg_after = getattr(self.router, "downgrade_counts", None)
+            if dg_after is not None:
+                downgrade_tier_counts = np.zeros(len(tier_plan.tiers),
+                                                 dtype=np.int64)
+                for t, c in dg_after.items():
+                    delta = int(c) - int(dg_before.get(t, 0))
+                    if delta:
+                        downgrade_tier_counts[int(t)] += delta
+                if fleet_extra is not None:
+                    fleet_extra.track_downgrades = True
+                    for t in range(len(tier_plan.tiers)):
+                        if downgrade_tier_counts[t]:
+                            fleet_extra.note_downgrade(
+                                t, int(downgrade_tier_counts[t]))
         if metrics_sink is not None:
             metrics_sink.emit(_fleet_snapshot(runners, fleet_extra, slo,
                                               num_active))
@@ -585,7 +879,13 @@ class Cluster:
                             slo_latency=slo,
                             shed_arrivals=np.asarray(shed_arrivals,
                                                      dtype=float),
-                            active_timeline=active_timeline)
+                            active_timeline=active_timeline,
+                            tier_names=(tier_plan.names
+                                        if tier_plan is not None
+                                        else None),
+                            shed_tier_counts=shed_tier_counts,
+                            shed_value=shed_value,
+                            downgrade_tier_counts=downgrade_tier_counts)
 
 
 def run_cluster(replicas: Sequence[Replica],
@@ -606,7 +906,9 @@ def run_cluster(replicas: Sequence[Replica],
                 retries: Union[RetrySpec, int, dict, None] = None,
                 hedge_after: Optional[float] = None,
                 health_kwargs: Optional[dict] = None,
-                when_all_unhealthy: str = "wait"
+                when_all_unhealthy: str = "wait",
+                tiers=None,
+                tiers_kwargs: Optional[dict] = None
                 ) -> Union[ClusterTrace, StreamingClusterTrace]:
     """Functional driver: build a :class:`Cluster` and serve one window."""
     cluster = Cluster(replicas, router=router, router_kwargs=router_kwargs,
@@ -617,7 +919,8 @@ def run_cluster(replicas: Sequence[Replica],
                       max_batch=max_batch,
                       retries=retries, hedge_after=hedge_after,
                       health_kwargs=health_kwargs,
-                      when_all_unhealthy=when_all_unhealthy)
+                      when_all_unhealthy=when_all_unhealthy,
+                      tiers=tiers, tiers_kwargs=tiers_kwargs)
     return cluster.run(num_queries, workload=workload,
                        workload_kwargs=workload_kwargs,
                        scheduler_name=scheduler_name,

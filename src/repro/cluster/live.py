@@ -49,7 +49,10 @@ def serve_cluster(engines: Sequence,
                   retries=None,
                   hedge_after: Optional[float] = None,
                   health_kwargs: Optional[dict] = None,
-                  when_all_unhealthy: str = "wait") -> ClusterTrace:
+                  when_all_unhealthy: str = "wait",
+                  pools: Optional[Sequence[str]] = None,
+                  tiers=None,
+                  tiers_kwargs: Optional[dict] = None) -> ClusterTrace:
     """Serve fleet ``queries`` through N live engines behind a router.
 
     ``engines`` — one :class:`~repro.serving.ServingEngine` per
@@ -78,9 +81,25 @@ def serve_cluster(engines: Sequence,
     dispatch shapes (``warm_buckets``) off the timed path before its
     half-open probe.  All default off — fault-free serving is
     unchanged.
+
+    Heterogeneous fleets (docs/QOS.md): ``engines`` may wrap distinct
+    :class:`~repro.models.PipelineModel` builds (each engine keeps its
+    own jitted executor and warmed-shape caches; all models must accept
+    the shared ``queries`` token arrays).  ``pools`` labels replicas
+    for pool-aware routers (``"small"`` marks downgrade targets), and
+    ``tiers`` / ``tiers_kwargs`` arm QoS tier stamping over the fleet
+    arrivals — the stamping runs in the shared fleet loop, so a sim run
+    with the same seed sees the identical tier sequence.
     """
     if len(engines) < 1:
         raise ValueError("serve_cluster needs at least one engine")
+    if pools is not None:
+        pools = [str(p) for p in pools]
+        if len(pools) != len(engines):
+            raise ValueError(f"pools must label every replica: got "
+                             f"{len(pools)} for {len(engines)} engines")
+    else:
+        pools = ["default"] * len(engines)
     if callable(schedules):
         schedules = [schedules] * len(engines)
     if len(schedules) != len(engines):
@@ -128,6 +147,7 @@ def serve_cluster(engines: Sequence,
             _eng.executor.warm_buckets(seqs, max_batch)
 
         replicas.append(Replica(executor=executor, runtime=eng.runtime,
+                                pool=pools[r],
                                 on_assign=on_assign,
                                 on_recover=on_recover))
 
@@ -144,7 +164,8 @@ def serve_cluster(engines: Sequence,
                         sink_interval=sink_interval,
                         retries=retries, hedge_after=hedge_after,
                         health_kwargs=health_kwargs,
-                        when_all_unhealthy=when_all_unhealthy)
+                        when_all_unhealthy=when_all_unhealthy,
+                        tiers=tiers, tiers_kwargs=tiers_kwargs)
     # Peak references only exist after measurement — stamp post-hoc,
     # exactly like ServingEngine.serve does for a single pipeline.
     for rep_trace, eng in zip(trace.replicas, engines):

@@ -1,4 +1,5 @@
-"""Built-in routers: round_robin, least_outstanding, odin_aware.
+"""Built-in routers: round_robin, least_outstanding, odin_aware, edf,
+downgrade.
 
 All three are deterministic (ties break toward the lowest replica
 index) so per-replica assignment sequences are reproducible from
@@ -25,6 +26,17 @@ so position and index coincide.
   reports an active bottleneck shift and replicas mid-exploration
   (serial trials drain the pipeline).  Proactive — it diverts the
   moment a detector fires, before a backlog forms.
+* ``edf`` — ``odin_aware`` plus an earliest-deadline-first / value-
+  density term (docs/QOS.md): a replica whose projected completion
+  misses the arrival's deadline pays its value-weighted lateness, so
+  high-value near-deadline traffic jumps to the replica that can
+  still make it.  Tier-blind arrivals fall through to plain
+  ``odin_aware``.
+* ``downgrade`` — heterogeneous-fleet QoS routing (docs/QOS.md):
+  best-effort traffic routes to the ``"small"`` replica pool when the
+  full-model pool is under pressure, instead of shedding; higher
+  tiers keep the full-model pool.  Falls through to ``odin_aware``
+  within whichever pool is chosen.
 """
 from __future__ import annotations
 
@@ -146,3 +158,113 @@ class OdinAwareRouter:
 
     def reset(self) -> None:
         pass
+
+
+@register_router("edf")
+class EdfRouter(OdinAwareRouter):
+    """``odin_aware`` + an EDF / value-density lateness term.
+
+    For a tiered arrival (``request`` carries its absolute deadline
+    and SLO value, docs/QOS.md) each replica's cost grows by
+    ``value_weight x value x max(0, eta - deadline)`` where ``eta``
+    is the projected completion on that replica (now + backlog + one
+    estimated service latency).  Replicas that can still make the
+    deadline pay nothing extra — the interference-aware base cost
+    decides between them exactly as ``odin_aware`` would — while a
+    high-value query facing lateness is pushed hard toward whichever
+    replica minimizes its value-weighted tardiness (earliest-deadline-
+    first pressure, expressed as routing cost rather than queue
+    reordering, so group-synchronous dispatch semantics are
+    untouched).  Arrivals without a finite deadline — and runs with no
+    tiers configured at all — fall through to plain ``odin_aware``.
+    """
+
+    def __init__(self, value_weight: float = 1.0, **kwargs):
+        super().__init__(**kwargs)
+        if value_weight < 0:
+            raise ValueError(f"value_weight must be >= 0, "
+                             f"got {value_weight}")
+        self.value_weight = float(value_weight)
+
+    def route(self, q: int, now: float, views: Sequence[ReplicaView],
+              request=None) -> int:
+        if request is None or not math.isfinite(request.deadline):
+            return super().route(q, now, views)
+        best, best_cost = 0, self._edf_cost(views[0], now, request)
+        for p in range(1, len(views)):
+            c = self._edf_cost(views[p], now, request)
+            if c < best_cost:
+                best, best_cost = p, c
+        return best
+
+    def _edf_cost(self, v: ReplicaView, now: float, request) -> float:
+        est = v.est_latency
+        if not math.isfinite(est):
+            est = v.est_bottleneck
+        if not math.isfinite(est):
+            est = 0.0
+        eta = now + v.backlog + est
+        lateness = max(0.0, eta - request.deadline)
+        return (self._cost(v)
+                + self.value_weight * request.value * lateness)
+
+
+@register_router("downgrade")
+class DowngradeRouter(OdinAwareRouter):
+    """Best-effort traffic downgrades to small-model replicas under
+    pressure instead of shedding (docs/QOS.md).
+
+    The fleet partitions into pools by :attr:`ReplicaView.pool`:
+    ``"small"`` replicas serve a cheaper model (heterogeneous fleets);
+    everything else is the full-model pool.  Arrivals with priority
+    above ``priority_max`` always route within the full-model pool
+    (when one is in the view set).  An arrival at or below
+    ``priority_max`` routes to the small pool when the full-model
+    pool's cheapest backlog exceeds ``pressure`` (time units) — the
+    answer quality degrades, the deadline survives, and the full
+    models keep their headroom for the traffic that values it.  Each
+    downgrade is counted per tier in :attr:`downgrade_counts`, which
+    the cluster folds into the run's per-tier accounting.
+
+    Within the chosen pool the decision is plain ``odin_aware`` cost;
+    untier-ed runs (``request`` always ``None``) never downgrade.
+    """
+
+    def __init__(self, pressure: float = 0.0, priority_max: int = 0,
+                 **kwargs):
+        super().__init__(**kwargs)
+        if pressure < 0:
+            raise ValueError(f"pressure must be >= 0, got {pressure}")
+        self.pressure = float(pressure)
+        self.priority_max = int(priority_max)
+        self.downgrade_counts: dict = {}
+
+    def route(self, q: int, now: float, views: Sequence[ReplicaView],
+              request=None) -> int:
+        small = [p for p in range(len(views))
+                 if views[p].pool == "small"]
+        full = [p for p in range(len(views))
+                if views[p].pool != "small"]
+        if request is not None and small and full:
+            if request.priority > self.priority_max:
+                return self._cheapest(views, full)
+            if min(views[p].backlog for p in full) > self.pressure:
+                pos = self._cheapest(views, small)
+                self.downgrade_counts[request.tier] = (
+                    self.downgrade_counts.get(request.tier, 0) + 1)
+                return pos
+        pool = full or list(range(len(views)))
+        return self._cheapest(views, pool)
+
+    def _cheapest(self, views: Sequence[ReplicaView],
+                  positions: Sequence[int]) -> int:
+        best = positions[0]
+        best_cost = self._cost(views[best])
+        for p in positions[1:]:
+            c = self._cost(views[p])
+            if c < best_cost:
+                best, best_cost = p, c
+        return best
+
+    def reset(self) -> None:
+        self.downgrade_counts = {}

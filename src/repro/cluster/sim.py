@@ -59,7 +59,11 @@ def simulate_cluster(db: LayerDatabase,
                      retries=None,
                      hedge_after: Optional[float] = None,
                      health_kwargs: Optional[dict] = None,
-                     when_all_unhealthy: str = "wait"
+                     when_all_unhealthy: str = "wait",
+                     databases: Optional[Sequence[LayerDatabase]] = None,
+                     pools: Optional[Sequence[str]] = None,
+                     tiers=None,
+                     tiers_kwargs: Optional[dict] = None
                      ) -> ClusterTrace:
     """Run one (scheduler, router, workload, events) fleet simulation.
 
@@ -96,9 +100,33 @@ def simulate_cluster(db: LayerDatabase,
     ``when_all_unhealthy`` configure the fleet's recovery machinery
     (retry budget + backoff, tail-latency hedging, circuit-breaker
     routing).  All default off — bit-identical to a fault-free build.
+
+    Heterogeneous fleets (docs/QOS.md): ``databases`` gives replica
+    ``r`` its own :class:`LayerDatabase` (cost model) — each distinct
+    database gets its own clean-optimum starting configuration, peak
+    throughput and DP-oracle cache, so a fleet can mix full-model and
+    small-model replicas.  ``pools`` labels replicas for pool-aware
+    routers (``"small"`` marks downgrade targets).  ``tiers`` /
+    ``tiers_kwargs`` arm QoS tier stamping over the fleet arrivals
+    (:func:`repro.qos.resolve_tiers` forms); all default off.
     """
     if num_replicas < 1:
         raise ValueError("num_replicas must be >= 1")
+    if databases is not None:
+        databases = list(databases)
+        if len(databases) != num_replicas:
+            raise ValueError(f"databases must give one LayerDatabase per "
+                             f"replica: got {len(databases)} for "
+                             f"{num_replicas} replicas")
+    else:
+        databases = [db] * num_replicas
+    if pools is not None:
+        pools = [str(p) for p in pools]
+        if len(pools) != num_replicas:
+            raise ValueError(f"pools must label every replica: got "
+                             f"{len(pools)} for {num_replicas} replicas")
+    else:
+        pools = ["default"] * num_replicas
     plan = None
     if faults is not None:
         from repro.faults import resolve_faults
@@ -121,28 +149,39 @@ def simulate_cluster(db: LayerDatabase,
                 "the event windows on")
         workload, workload_kwargs = wl, None
 
-    config0 = (list(initial_config) if initial_config is not None
-               else balanced_config(db.num_layers, num_eps))
-    clean = SimTimeSource(db, [0] * num_eps)
-    if initial_config is None:
-        opt_cfg, _ = optimal_partition(db, [0] * num_eps, num_eps)
-        config0 = opt_cfg
-    peak = throughput(clean.stage_times(config0))
+    # One oracle cache + clean-optimum reference *per distinct
+    # database*: the optimum only depends on the scenario vector and
+    # the database, so homogeneous fleets share everything exactly as
+    # before, while a heterogeneous fleet's small-model replicas get
+    # their own configurations and peaks.
+    per_db: dict = {}
 
-    # One oracle cache for the whole fleet: the optimum only depends on
-    # the scenario vector, and every replica reads the same database.
-    oracle_cache = {}
+    def _db_state(d: LayerDatabase):
+        key = id(d)
+        if key not in per_db:
+            cfg = (list(initial_config) if initial_config is not None
+                   else balanced_config(d.num_layers, num_eps))
+            clean = SimTimeSource(d, [0] * num_eps)
+            if initial_config is None:
+                cfg, _ = optimal_partition(d, [0] * num_eps, num_eps)
+            cache: dict = {}
 
-    def _oracle(scen_key):
-        if scen_key not in oracle_cache:
-            oracle_cache[scen_key] = optimal_partition(db, list(scen_key),
-                                                       num_eps)
-        return oracle_cache[scen_key]
+            def _oracle(scen_key, _d=d, _cache=cache):
+                if scen_key not in _cache:
+                    _cache[scen_key] = optimal_partition(
+                        _d, list(scen_key), num_eps)
+                return _cache[scen_key]
+
+            per_db[key] = (cfg, throughput(clean.stage_times(cfg)),
+                           _oracle)
+        return per_db[key]
 
     replicas = []
     for r in range(num_replicas):
+        rdb = databases[r]
+        config0, peak, _oracle = _db_state(rdb)
         executor = DatabaseQueryExecutor(
-            db, num_eps, events_for_replica(fleet_events, r), _oracle,
+            rdb, num_eps, events_for_replica(fleet_events, r), _oracle,
             time_indexed=events_time_indexed)
         if plan is not None:
             from repro.faults import FaultingExecutor
@@ -152,7 +191,7 @@ def simulate_cluster(db: LayerDatabase,
                 executor, plan, replica=r,
                 timeout=(spec.timeout if spec is not None else None))
 
-        def solver(cfg, src, _ex=executor) -> List[int]:
+        def solver(cfg, src, _ex=executor, _oracle=_oracle) -> List[int]:
             return list(_oracle(tuple(_ex.scenarios))[0])
 
         policy = make_scheduler(scheduler, alpha=alpha,
@@ -175,6 +214,7 @@ def simulate_cluster(db: LayerDatabase,
 
         replicas.append(Replica(executor=executor, runtime=runtime,
                                 peak_throughput=peak,
+                                pool=pools[r],
                                 on_assign=on_assign))
 
     return run_cluster(replicas, num_queries, workload=workload,
@@ -190,4 +230,5 @@ def simulate_cluster(db: LayerDatabase,
                        sink_interval=sink_interval,
                        retries=retries, hedge_after=hedge_after,
                        health_kwargs=health_kwargs,
-                       when_all_unhealthy=when_all_unhealthy)
+                       when_all_unhealthy=when_all_unhealthy,
+                       tiers=tiers, tiers_kwargs=tiers_kwargs)

@@ -48,6 +48,17 @@ class ClusterTrace:
     #: Change points of the active replica set: ``(fleet query index,
     #: active indices)`` — empty when no autoscaler ran (all active).
     active_timeline: Optional[List[Tuple[int, Tuple[int, ...]]]] = None
+    # -- QoS tiers (repro.qos, docs/QOS.md) ----------------------------------
+    #: Tier names in tier-id order (``None`` = run had no tiers).
+    tier_names: Optional[List[str]] = None
+    #: Fleet-level sheds per tier (replicas never shed; admission
+    #: happens at the fleet layer before any runner sees the query).
+    shed_tier_counts: Optional[np.ndarray] = None
+    #: Total SLO value of the shed arrivals.
+    shed_value: float = 0.0
+    #: Per-tier downgrade counts (``downgrade`` router, heterogeneous
+    #: fleets); ``None`` when the router keeps no downgrade ledger.
+    downgrade_tier_counts: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.assignments = np.asarray(self.assignments, dtype=int)
@@ -131,8 +142,32 @@ class ClusterTrace:
         rc = None
         if all(t.rc_throughputs is not None for t in self.replicas):
             rc = self.gather("rc_throughputs")
-        peak = (self.replicas[0].peak_throughput
-                if self.num_replicas == 1 else float("nan"))
+        if self.num_replicas == 1:
+            peak = self.replicas[0].peak_throughput
+        else:
+            # Served-share-weighted mean of the known per-replica peaks:
+            # the interference-free rate the fleet's actual dispatch mix
+            # would sustain.  A plain mean misreads heterogeneous fleets
+            # (docs/QOS.md) — a small-model replica serving 5% of the
+            # traffic must not drag the reference down as if it served
+            # half.  NaN when no serving replica has a known peak.
+            acc = w = 0.0
+            for t, cnt in zip(self.replicas, self.replica_counts):
+                if cnt and np.isfinite(t.peak_throughput):
+                    acc += float(cnt) * t.peak_throughput
+                    w += float(cnt)
+            peak = acc / w if w else float("nan")
+        tier_cols: Dict[str, object] = {}
+        if self.tier_names is not None:
+            tier_cols = dict(
+                tier_names=list(self.tier_names),
+                tier_ids=self.gather("tier_ids"),
+                tier_deadlines=self.gather("tier_deadlines"),
+                tier_values=self.gather("tier_values"),
+                shed_tier_counts=self.shed_tier_counts,
+                shed_value=self.shed_value,
+                downgrade_tier_counts=self.downgrade_tier_counts,
+            )
         return PipelineTrace(
             scheduler=self.scheduler,
             latencies=self.gather("latencies"),
@@ -159,6 +194,7 @@ class ClusterTrace:
             num_hedged=sum(t.num_hedged for t in self.replicas),
             wasted_time=sum(t.wasted_time for t in self.replicas),
             downtime=sum(t.downtime for t in self.replicas),
+            **tier_cols,
         )
 
     # -- fleet metrics (one metric implementation: PipelineTrace's) ----------

@@ -64,6 +64,17 @@ class AdmissionView:
     #: configuration (the runtime's ``estimated_service_latency()``:
     #: occupied stages x bottleneck beat); NaN before the first poll.
     est_latency: float = float("nan")
+    #: QoS tier index of the arrival (``repro.qos``); ``None`` when the
+    #: run has no tiers configured.  The remaining QoS fields default
+    #: to "one anonymous tier of unit value with no deadline", so
+    #: tier-blind policies and pre-QoS call sites are unaffected.
+    tier: Optional[int] = None
+    #: Priority class (higher preempts lower at batch formation).
+    priority: int = 0
+    #: Relative deadline in seconds from arrival (``inf`` = none).
+    deadline: float = float("inf")
+    #: SLO value: what completing this query within deadline is worth.
+    value: float = 1.0
 
     @property
     def queue_length(self) -> float:

@@ -1,4 +1,5 @@
-"""Built-in admission policies: none, queue_cap, slo_shed, adaptive_batch.
+"""Built-in admission policies: none, queue_cap, slo_shed, value_shed,
+adaptive_batch.
 
 All decisions are pure functions of the :class:`AdmissionView` and the
 policy's own (deterministic) state, so a run is reproducible from
@@ -14,6 +15,10 @@ policy's own (deterministic) state, so a run is reproducible from
   predicted queueing delay plus the runtime's estimated end-to-end
   service latency would already breach the latency objective.  A query
   that cannot meet its SLO only delays the ones behind it.
+* ``value_shed`` — expected-value shedding over QoS tiers
+  (docs/QOS.md): admit iff ``value x predicted attainment >= theta``,
+  so high-value traffic survives deeper overload than best-effort
+  traffic instead of everyone shedding at the same queue depth.
 * ``adaptive_batch`` — never sheds; instead shrinks the run loop's
   batch/chunk bound as the observed p99 queueing delay approaches the
   SLO and grows it back while the tail is comfortable (batching
@@ -108,6 +113,64 @@ class SloShedAdmission:
         if not math.isfinite(est):
             est = 0.0
         return view.wait + self.margin * est <= self.slo
+
+    def reset(self) -> None:
+        pass
+
+
+@register_admission("value_shed")
+class ValueShedAdmission:
+    """Shed by *expected value*, not binary feasibility (docs/QOS.md).
+
+    Estimates the probability the arrival would still meet its
+    deadline if admitted now, as a linear ramp in the predicted wait:
+    attainment is 1 while ``wait + est_latency <= deadline``, 0 once
+    the wait alone has consumed the deadline, and
+    ``(deadline - wait) / est_latency`` in between.  The query is
+    admitted iff ``value x attainment >= theta``.
+
+    Against tier-blind ``slo_shed`` the difference is exactly the
+    QoS premise: a value-10 query is still worth serving at a 10%
+    attainment estimate (expected value 1.0 >= theta), while a
+    value-1 best-effort query sheds as soon as its odds dip below
+    ``theta`` — under overload the cheap traffic clears the queue for
+    the valuable traffic instead of starving it blindly.
+
+    Queries without a deadline (``view.deadline`` infinite) fall back
+    to the constructor ``slo`` if one is given, else their attainment
+    estimate is 1 and they are admitted whenever ``value >= theta``.
+    Pure function of the view, so the chunked admission pre-pass and
+    the scalar tick decide identically.
+    """
+
+    admits_all = False
+
+    def __init__(self, theta: float = 0.5, slo: float = 0.0):
+        if not theta > 0.0:
+            raise ValueError(f"value_shed needs theta > 0, got {theta}")
+        if slo < 0.0:
+            raise ValueError(f"slo must be >= 0, got {slo}")
+        self.theta = float(theta)
+        self.slo = float(slo)
+
+    def expected_value(self, view: AdmissionView) -> float:
+        """``value x estimated attainment`` for this arrival."""
+        deadline = view.deadline
+        if not math.isfinite(deadline) and self.slo > 0.0:
+            deadline = self.slo
+        if not math.isfinite(deadline):
+            return view.value
+        est = view.est_latency
+        if not math.isfinite(est):
+            est = view.est_service
+        if not math.isfinite(est) or est <= 0.0:
+            attain = 1.0 if view.wait <= deadline else 0.0
+        else:
+            attain = min(1.0, max(0.0, (deadline - view.wait) / est))
+        return view.value * attain
+
+    def admit(self, view: AdmissionView) -> bool:
+        return self.expected_value(view) >= self.theta
 
     def reset(self) -> None:
         pass

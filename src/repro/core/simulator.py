@@ -404,7 +404,9 @@ def simulate(db: LayerDatabase,
              batch_overhead: float = 0.0,
              length_ref: Optional[float] = None,
              faults=None,
-             retries=None) -> PipelineTrace:
+             retries=None,
+             tiers=None,
+             tiers_kwargs: Optional[dict] = None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -454,6 +456,14 @@ def simulate(db: LayerDatabase,
     transient-failure retry budget (``RetrySpec``, int, or dict).
     ``faults=None`` leaves every trace bit-identical to a fault-free
     build.
+
+    ``tiers`` stamps every arrival with a QoS tier (docs/QOS.md): a
+    :class:`~repro.qos.TierAssigner`, pre-built
+    :class:`~repro.qos.TierPlan`, preset-name string such as
+    ``"interactive,best_effort"``, or a sequence of tier specs
+    (``tiers_kwargs`` feeds the assignment mixture/seed).  Tiered
+    traces grow per-tier accounting; ``tiers=None`` (the default)
+    leaves every trace bit-identical to an untier-ed build.
     """
     if events is None:
         if events_time_indexed:
@@ -517,7 +527,8 @@ def simulate(db: LayerDatabase,
                         sink_interval=sink_interval,
                         former=former, lengths=lengths,
                         lengths_kwargs=lengths_kwargs,
-                        faults=faults, retries=retries)
+                        faults=faults, retries=retries,
+                        tiers=tiers, tiers_kwargs=tiers_kwargs)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

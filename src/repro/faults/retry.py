@@ -34,6 +34,21 @@ class RetrySpec:
     stall exceeds it fails the dispatch (charging ``timeout`` as wasted
     occupancy) instead of inflating its latency.  ``None`` disables
     timeouts — hangs then surface as latency.
+
+    ``batch_policy`` governs what a failure inside a *rebatched* fleet
+    flush (``max_batch > 1``, docs/CLUSTER.md) takes down with it.
+    Queries already completed before the failing dispatch always keep
+    their rows; the policy decides the fate of the failing query and
+    the buffered tail behind it:
+
+    * ``"resplit"`` (default) — the batch dissolves: the failing query
+      and the untouched tail each retry through the single-query path
+      (per-query budget, backoff, healthy re-route).
+    * ``"subset"`` — only the failing query leaves the batch (it
+      retries as a single); the untouched tail re-flushes as a batch.
+    * ``"all"`` — fail-whole-batch: the failing query and the tail
+      share one attempt budget and re-flush together on a healthy
+      replica after the backoff; exhausting the budget fails them all.
     """
     max_retries: int = 3
     backoff: float = 0.05
@@ -41,6 +56,7 @@ class RetrySpec:
     jitter: float = 0.0
     seed: int = 0
     timeout: Optional[float] = None
+    batch_policy: str = "resplit"
 
     def __post_init__(self):
         if self.max_retries < 0:
@@ -50,6 +66,9 @@ class RetrySpec:
                              "required")
         if self.timeout is not None and self.timeout <= 0:
             raise ValueError("timeout must be > 0 (or None)")
+        if self.batch_policy not in ("all", "subset", "resplit"):
+            raise ValueError(f"batch_policy must be 'all', 'subset' or "
+                             f"'resplit', got {self.batch_policy!r}")
 
     def delay(self, query: int, attempt: int) -> float:
         base = self.backoff * self.multiplier ** attempt

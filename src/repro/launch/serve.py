@@ -21,6 +21,7 @@ from repro.configs import ARCH_IDS, get_smoke_config
 from repro.control import available_admission_policies
 from repro.core.database import paper_scenarios
 from repro.models import Model
+from repro.qos import available_tiers
 from repro.schedulers import available_schedulers
 from repro.serving import ServingEngine
 from repro.workloads import available_workloads, make_lengths
@@ -93,8 +94,24 @@ def main() -> None:
                          "streaming; docs/TELEMETRY.md)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve a fleet of N engine replicas behind a "
-                         "round-robin router (docs/CLUSTER.md); hedging "
-                         "and health-aware routing need N >= 2")
+                         "router (docs/CLUSTER.md); hedging and "
+                         "health-aware routing need N >= 2")
+    ap.add_argument("--router", default="round_robin",
+                    help="fleet router registry name (docs/CLUSTER.md; "
+                         "'edf' and 'downgrade' are tier-aware, "
+                         "docs/QOS.md); needs --replicas >= 2 or "
+                         "--configs")
+    ap.add_argument("--tiers", default="", metavar="NAMES",
+                    help="comma list of QoS tier presets, e.g. "
+                         "'interactive,best_effort' (docs/QOS.md): "
+                         "arrivals are stamped with tier/deadline/value "
+                         "and the trace grows per-tier accounting")
+    ap.add_argument("--configs", default="", metavar="ARCHS",
+                    help="comma list of arch ids, one per replica — a "
+                         "heterogeneous fleet (docs/QOS.md); replicas "
+                         "whose arch differs from the first are labeled "
+                         "pool 'small' (the --router downgrade targets); "
+                         "overrides --replicas")
     ap.add_argument("--faults", default="", metavar="SPEC",
                     help="fault plan spec, e.g. 'crash@50+20:r=0,"
                          "flaky@0+1000:p=0.05' (docs/FAULTS.md); windows "
@@ -112,6 +129,25 @@ def main() -> None:
                          "needs --replicas >= 2)")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args()
+
+    configs_list = [c.strip() for c in args.configs.split(",")
+                    if c.strip()]
+    if configs_list:
+        unknown = [c for c in configs_list if c not in ARCH_IDS]
+        if unknown:
+            ap.error(f"--configs has unknown arch ids {unknown}; "
+                     f"pick from {ARCH_IDS}")
+        if args.replicas > 1 and args.replicas != len(configs_list):
+            ap.error(f"--configs names {len(configs_list)} replicas but "
+                     f"--replicas says {args.replicas}")
+        args.replicas = len(configs_list)
+        args.arch = configs_list[0]
+    if args.tiers:
+        bad = [t.strip() for t in args.tiers.split(",")
+               if t.strip() not in available_tiers()]
+        if bad:
+            ap.error(f"--tiers has unknown presets {bad}; pick from "
+                     f"{available_tiers()}")
 
     cfg = get_smoke_config(args.arch)
     if args.blocks:
@@ -132,7 +168,12 @@ def main() -> None:
                         p_long=0.2))
         lens = make_lengths(args.lengths, seed=args.seed,
                             **kw).sample(args.queries)
-    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, int(L))))
+    # Heterogeneous fleets share the query stream, so token ids must be
+    # valid for every replica's model: draw below the smallest vocab.
+    vocab = cfg.vocab_size
+    if configs_list:
+        vocab = min(get_smoke_config(c).vocab_size for c in configs_list)
+    queries = [jnp.asarray(rng.integers(0, vocab, (1, int(L))))
                for L in lens]
 
     scens = paper_scenarios()
@@ -180,8 +221,10 @@ def main() -> None:
         ap.error("--hedge-after needs --replicas >= 2 (hedging "
                  "dispatches to a healthy peer)")
     if args.replicas > 1:
-        # Fleet path: the extra replicas share the jitted executor but
-        # keep their own runtime/detector/estimates (docs/CLUSTER.md).
+        # Fleet path: same-arch replicas share the jitted executor but
+        # keep their own runtime/detector/estimates (docs/CLUSTER.md);
+        # --configs replicas of a different arch get their own model,
+        # executor and warmed-shape caches (docs/QOS.md).
         if args.batching != "none" or args.max_batch > 1:
             ap.error("--replicas > 1 serves per-query; drop --batching "
                      "/ --max-batch")
@@ -192,22 +235,54 @@ def main() -> None:
             ap.error("fleet fault windows are wall-clock "
                      "(docs/FAULTS.md); pick an open-loop --workload")
         from repro.cluster import serve_cluster
-        engines = [eng] + [
-            ServingEngine(cfg, params, num_eps=args.eps,
-                          scheduler=args.scheduler, alpha=args.alpha,
-                          executor=eng.executor)
-            for _ in range(args.replicas - 1)]
+        archs = configs_list or [args.arch] * args.replicas
+        # First engine per arch owns that arch's jitted executor and
+        # warmed shapes; same-arch replicas share it, distinct archs
+        # compile their own.
+        lead = {args.arch: (cfg, params, eng)}
+        engines, pools = [], []
+        for arch in archs:
+            if arch not in lead:
+                c2 = get_smoke_config(arch)
+                if args.blocks:
+                    per = len(c2.layer_pattern)
+                    c2 = dataclasses.replace(c2,
+                                             num_layers=args.blocks * per)
+                p2 = Model(c2).init_params(jax.random.PRNGKey(args.seed),
+                                           jnp.float32)
+                e2 = ServingEngine(c2, p2, num_eps=args.eps,
+                                   scheduler=args.scheduler,
+                                   alpha=args.alpha)
+                for length in sorted({int(x) for x in lens}):
+                    e2.executor.ensure_warm(1, length)
+                lead[arch] = (c2, p2, e2)
+            acfg, aparams, first = lead[arch]
+            if not any(x is first for x in engines):
+                e = first
+            else:
+                e = ServingEngine(acfg, aparams, num_eps=args.eps,
+                                  scheduler=args.scheduler,
+                                  alpha=args.alpha,
+                                  executor=first.executor)
+            engines.append(e)
+            pools.append("default" if arch == archs[0] else "small")
         metrics = serve_cluster(engines, queries, schedule,
                                 workload=args.workload,
                                 workload_kwargs=wl_kwargs,
+                                router=args.router,
                                 admission=args.admission,
                                 admission_kwargs=adm_kwargs,
                                 trace_mode=args.trace_mode,
                                 faults=faults, retries=retries,
-                                hedge_after=hedge_after)
+                                hedge_after=hedge_after,
+                                pools=pools,
+                                tiers=(args.tiers or None))
         s = metrics.summary()
         s["final_config"] = None
     else:
+        if args.router != "round_robin":
+            ap.error("--router needs a fleet: pass --replicas >= 2 or "
+                     "--configs")
         metrics = eng.serve(queries, schedule, workload=args.workload,
                             workload_kwargs=wl_kwargs,
                             max_batch=args.max_batch,
@@ -217,7 +292,8 @@ def main() -> None:
                             admission=args.admission,
                             admission_kwargs=adm_kwargs,
                             trace_mode=args.trace_mode,
-                            faults=faults, retries=retries)
+                            faults=faults, retries=retries,
+                            tiers=(args.tiers or None))
         s = metrics.summary()
         configs = metrics.configs
         s["final_config"] = configs[-1] if configs else None

@@ -1,0 +1,34 @@
+"""QoS tiers: priorities, per-request deadlines, SLO value (docs/QOS.md)."""
+from repro.qos.tiers import (
+    FixedDeadlines,
+    QosRequest,
+    QosTier,
+    TierAssigner,
+    TierPlan,
+    UniformDeadlines,
+    available_deadlines,
+    available_tiers,
+    get_tier,
+    make_deadlines,
+    register_deadlines,
+    register_tier,
+    resolve_tiers,
+    unregister_tier,
+)
+
+__all__ = [
+    "FixedDeadlines",
+    "QosRequest",
+    "QosTier",
+    "TierAssigner",
+    "TierPlan",
+    "UniformDeadlines",
+    "available_deadlines",
+    "available_tiers",
+    "get_tier",
+    "make_deadlines",
+    "register_deadlines",
+    "register_tier",
+    "resolve_tiers",
+    "unregister_tier",
+]

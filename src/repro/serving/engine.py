@@ -541,7 +541,9 @@ class ServingEngine:
               metrics_sink=None,
               sink_interval: Optional[int] = None,
               faults=None,
-              retries=None) -> PipelineTrace:
+              retries=None,
+              tiers=None,
+              tiers_kwargs: Optional[dict] = None) -> PipelineTrace:
         """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
         slowdown factors (>= 1.0)``.
 
@@ -592,6 +594,11 @@ class ServingEngine:
         simulator, realized by wrapping this engine's executor in a
         :class:`~repro.faults.FaultingExecutor`.  Both default off
         (fault-free serving is unchanged).
+
+        ``tiers`` / ``tiers_kwargs`` stamp arrivals with QoS tiers
+        (docs/QOS.md) exactly as in the simulator — the resolution and
+        the per-arrival draws live in the shared run loop, so a sim
+        and a live run of the same seed see identical tier plans.
         """
         seq_max = max((int(t.shape[-1]) for t in queries), default=1)
         former = resolve_batching(batching, max_batch=max_batch,
@@ -620,7 +627,8 @@ class ServingEngine:
                              sink_interval=sink_interval,
                              former=former,
                              lengths=lengths,
-                             faults=faults, retries=retries)
+                             faults=faults, retries=retries,
+                             tiers=tiers, tiers_kwargs=tiers_kwargs)
         # The peak reference only exists after measurement: stamp it
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()

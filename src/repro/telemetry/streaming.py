@@ -43,6 +43,25 @@ SUMMARY_SLO_LEVEL = 0.9
 DEFAULT_SINK_INTERVAL = 10_000
 
 
+class _TierStats:
+    """Per-QoS-tier accumulator (docs/QOS.md): a latency sketch plus
+    exact counters for served/met/shed/downgraded and offered vs.
+    realized SLO value.  One per tier, keyed by tier index."""
+
+    __slots__ = ("name", "latency", "count", "met", "shed",
+                 "value_offered", "value_realized", "downgraded")
+
+    def __init__(self, name: str, compression: int = DEFAULT_COMPRESSION):
+        self.name = name
+        self.latency = QuantileSketch(compression)
+        self.count = 0             # queries served in this tier
+        self.met = 0               # served within their deadline
+        self.shed = 0              # turned away by admission
+        self.value_offered = 0.0   # summed value, served + shed
+        self.value_realized = 0.0  # summed value of deadline-met queries
+        self.downgraded = 0        # routed to a small-model replica
+
+
 class StreamingCollector:
     """Online accumulator for one pipeline's run.
 
@@ -88,12 +107,29 @@ class StreamingCollector:
         self.wasted_time = 0.0         # cancelled/timed-out occupancy
         self.downtime = 0.0            # crash + breaker-open time
         self.busy_sum = 0.0            # useful occupancy (sum of 1/thr)
+        # -- QoS tiers (docs/QOS.md) -----------------------------------------
+        self.tier_stats: Optional[List[_TierStats]] = None
+        self.track_downgrades = False
+        self._compression = compression
         self.sink = sink
         self.sink_interval = max(1, int(sink_interval))
         self.num_emits = 0
         self._since_emit = 0
         self._registry = MetricsRegistry(namespace)
         self._init_registry()
+
+    def configure_tiers(self, names) -> None:
+        """Arm per-tier accounting for the given tier names (idempotent
+        when re-configured with the same names; tier columns fed to
+        :meth:`observe_chunk` / :meth:`observe_shed` require this)."""
+        names = tuple(names)
+        if self.tier_stats is not None:
+            if tuple(t.name for t in self.tier_stats) != names:
+                raise ValueError(
+                    f"collector already configured with tiers "
+                    f"{tuple(t.name for t in self.tier_stats)}, got {names}")
+            return
+        self.tier_stats = [_TierStats(n, self._compression) for n in names]
 
     def _init_registry(self) -> None:
         reg = self._registry
@@ -156,11 +192,16 @@ class StreamingCollector:
                       queue_depths: np.ndarray,
                       batch_sizes: Optional[np.ndarray] = None,
                       padded_tokens: Optional[np.ndarray] = None,
-                      actual_tokens: Optional[np.ndarray] = None) -> None:
+                      actual_tokens: Optional[np.ndarray] = None,
+                      tier_ids: Optional[np.ndarray] = None,
+                      deadlines: Optional[np.ndarray] = None,
+                      values: Optional[np.ndarray] = None) -> None:
         """Fold one span of index-aligned per-query rows (the runner's
         flushed arrays; the caller recycles them afterwards).  The
         batching columns are optional — a feeder without them reads as
-        all-solo dispatch (occupancy 1) with no token accounting."""
+        all-solo dispatch (occupancy 1) with no token accounting.  The
+        QoS columns (tier index, relative deadline, value per query)
+        require a prior :meth:`configure_tiers`."""
         n = len(latencies)
         if n == 0:
             return
@@ -196,11 +237,28 @@ class StreamingCollector:
                                    float(queue_depths.max()))
         self.rollup.observe_arrivals(arrival_times)
         self.rollup.observe_completions(completion_times, latencies)
+        if tier_ids is not None:
+            if self.tier_stats is None:
+                raise ValueError(
+                    "tier columns require configure_tiers() first")
+            met_mask = latencies <= deadlines
+            for i, ts in enumerate(self.tier_stats):
+                m = tier_ids == i
+                k = int(np.count_nonzero(m))
+                if not k:
+                    continue
+                ts.latency.add(latencies[m])
+                ts.count += k
+                ts.met += int(np.count_nonzero(met_mask & m))
+                ts.value_offered += float(values[m].sum())
+                ts.value_realized += float(values[m & met_mask].sum())
         self._tick_sink(n)
 
-    def observe_shed(self, arrivals) -> None:
+    def observe_shed(self, arrivals, tier: Optional[int] = None,
+                     value: float = 1.0) -> None:
         """Record shed arrival time(s) — counters and rollup only, no
-        per-query storage."""
+        per-query storage.  With ``tier`` the shed also counts against
+        that tier's offered value (``value`` is per shed arrival)."""
         times = np.atleast_1d(np.asarray(arrivals, dtype=np.float64))
         if times.size == 0:
             return
@@ -208,7 +266,22 @@ class StreamingCollector:
         self.max_shed_arrival = max(self.max_shed_arrival,
                                     float(times.max()))
         self.rollup.observe_shed(times)
+        if tier is not None:
+            if self.tier_stats is None:
+                raise ValueError(
+                    "tiered sheds require configure_tiers() first")
+            ts = self.tier_stats[int(tier)]
+            ts.shed += times.size
+            ts.value_offered += float(value) * times.size
         self._tick_sink(times.size)
+
+    def note_downgrade(self, tier: int, n: int = 1) -> None:
+        """Count ``n`` queries of ``tier`` routed to a small-model
+        replica instead of shed (the ``downgrade`` router)."""
+        if self.tier_stats is None:
+            raise ValueError("downgrades require configure_tiers() first")
+        self.track_downgrades = True
+        self.tier_stats[int(tier)].downgraded += int(n)
 
     def _tick_sink(self, n: int) -> None:
         if self.sink is None:
@@ -249,6 +322,18 @@ class StreamingCollector:
         self.busy_sum += other.busy_sum
         if self._lat_hist is not None and other._lat_hist is not None:
             self._lat_hist.merge_from(other._lat_hist)
+        if other.tier_stats is not None:
+            self.configure_tiers([t.name for t in other.tier_stats])
+            for mine, theirs in zip(self.tier_stats, other.tier_stats):
+                mine.latency.merge(theirs.latency)
+                mine.count += theirs.count
+                mine.met += theirs.met
+                mine.shed += theirs.shed
+                mine.value_offered += theirs.value_offered
+                mine.value_realized += theirs.value_realized
+                mine.downgraded += theirs.downgraded
+            self.track_downgrades = (self.track_downgrades
+                                     or other.track_downgrades)
         return self
 
     # -- derived rates --------------------------------------------------------
@@ -551,7 +636,7 @@ class StreamingTrace:
         c = self.collector
         n = c.num_admitted
         peak_known = math.isfinite(self.peak_throughput)
-        return {
+        out = {
             "mean_latency_s": c.latency.mean,
             "p50_latency_s": c.latency.percentile(50),
             "p99_latency_s": c.latency.percentile(99),
@@ -585,6 +670,32 @@ class StreamingTrace:
             "wasted_work_frac": c.wasted_work_frac,
             "downtime_s": float(c.downtime),
         }
+        if c.tier_stats is not None:
+            out.update(self.tier_summary())
+        return out
+
+    def tier_summary(self) -> Dict[str, float]:
+        """Per-QoS-tier keys (docs/QOS.md), matching the dense
+        ``PipelineTrace.tier_summary()`` key set; empty when the run
+        had no tiers configured."""
+        c = self.collector
+        if c.tier_stats is None:
+            return {}
+        out = {
+            "offered_value": sum(t.value_offered for t in c.tier_stats),
+            "realized_value": sum(t.value_realized for t in c.tier_stats),
+        }
+        for t in c.tier_stats:
+            offered = t.count + t.shed
+            out[f"tier_{t.name}_num"] = float(t.count)
+            out[f"tier_{t.name}_shed"] = float(t.shed)
+            out[f"tier_{t.name}_p50_latency_s"] = t.latency.percentile(50)
+            out[f"tier_{t.name}_p99_latency_s"] = t.latency.percentile(99)
+            out[f"tier_{t.name}_deadline_attainment"] = (
+                t.met / offered if offered else math.nan)
+            if c.track_downgrades:
+                out[f"tier_{t.name}_downgraded"] = float(t.downgraded)
+        return out
 
     @classmethod
     def merged(cls, traces: Iterable["StreamingTrace"],
@@ -673,9 +784,23 @@ class StreamingClusterTrace:
     @property
     def fleet(self) -> StreamingTrace:
         """The fleet as one StreamingTrace (merged on access, so
-        post-run stamping of replica peaks is picked up)."""
-        peak = (self.replicas[0].peak_throughput
-                if self.num_replicas == 1 else float("nan"))
+        post-run stamping of replica peaks is picked up).
+
+        A heterogeneous fleet has no single interference-free peak, so
+        for n > 1 the fleet reference is the served-share-weighted mean
+        of the per-replica peaks: the expected peak of the replica a
+        uniformly chosen *served* query ran on.  Per-replica SLO
+        accounting (:meth:`slo_violations`) still uses each replica's
+        own peak exactly."""
+        if self.num_replicas == 1:
+            peak = self.replicas[0].peak_throughput
+        else:
+            acc = w = 0.0
+            for t in self.replicas:
+                if t.num_admitted and math.isfinite(t.peak_throughput):
+                    acc += t.num_admitted * t.peak_throughput
+                    w += t.num_admitted
+            peak = acc / w if w else float("nan")
         return StreamingTrace.merged(
             self.replicas, scheduler=self.scheduler,
             workload=self.workload, admission=self.admission,

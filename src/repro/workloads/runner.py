@@ -275,7 +275,8 @@ class PipelineRunner:
                  former: Optional[BatchFormer] = None,
                  lengths: Optional[np.ndarray] = None,
                  padded: Optional[np.ndarray] = None,
-                 retry=None):
+                 retry=None,
+                 tiers=None):
         if trace_mode not in ("dense", "streaming"):
             raise ValueError(f"unknown trace_mode {trace_mode!r}; "
                              f"expected 'dense' or 'streaming'")
@@ -315,6 +316,27 @@ class PipelineRunner:
                              if admission is not None else None)
         self.shed_arrivals: List[float] = []
         self.shed_indices: List[int] = []
+
+        # QoS tiers (repro.qos; docs/QOS.md): a TierPlan stamps every
+        # query this runner sees (indexed by the global query id) with
+        # a priority class, a relative deadline, and an SLO value.
+        # None = every tier branch below is dead code — no-tier runs
+        # are bit-identical to pre-QoS runs.
+        self._tiers = tiers
+        if tiers is not None:
+            self._tier_ids = tiers.tier_ids
+            self._tier_pri = tiers.priorities
+            self._tier_deadline = tiers.deadlines
+            self._tier_value = tiers.values
+            self.shed_tier_counts = np.zeros(len(tiers.tiers),
+                                             dtype=np.int64)
+        else:
+            self._tier_ids = None
+            self._tier_pri = None
+            self._tier_deadline = None
+            self._tier_value = None
+            self.shed_tier_counts = None
+        self.shed_value = 0.0          # offered value lost to shedding
 
         # Fault tolerance (repro.faults; docs/FAULTS.md): a RetrySpec
         # arms requeue-on-failure in :meth:`run`; a fault-injecting
@@ -412,6 +434,16 @@ class PipelineRunner:
         self.batch_sizes = np.zeros(n)   # dispatch size each row rode in
         self.padded_tok = np.zeros(n)    # padded tokens charged to the row
         self.actual_tok = np.zeros(n)    # useful tokens (actual length)
+        if tiers is not None:
+            self.tier_row = np.zeros(n)      # tier id the row was stamped
+            self.deadline_row = np.zeros(n)  # relative deadline, seconds
+            self.value_row = np.zeros(n)     # SLO value of the row
+        else:
+            self.tier_row = None
+            self.deadline_row = None
+            self.value_row = None
+        if tiers is not None and self.telemetry is not None:
+            self.telemetry.configure_tiers(tiers.names)
         self.configs_trace: List[List[int]] = []
 
         self.free_at = 0.0             # when the admission head frees up
@@ -423,7 +455,8 @@ class PipelineRunner:
     #: Result arrays grown together when the run outlives ``capacity``.
     _ARRAYS = ("latencies", "service_lat", "queue_delay", "throughputs",
                "serial_mask", "arrival_t", "completion_t", "queue_depth",
-               "rc_thr", "batch_sizes", "padded_tok", "actual_tok")
+               "rc_thr", "batch_sizes", "padded_tok", "actual_tok",
+               "tier_row", "deadline_row", "value_row")
 
     def _ensure_capacity(self, n: int) -> None:
         """Grow the result arrays (doubling) to hold ``n`` queries."""
@@ -489,6 +522,10 @@ class PipelineRunner:
         else:
             self.padded_tok[s] = 0.0
             self.actual_tok[s] = 0.0
+        if self._tier_ids is not None:
+            self.tier_row[s] = self._tier_ids[gq]
+            self.deadline_row[s] = self._tier_deadline[gq]
+            self.value_row[s] = self._tier_value[gq]
         self.num_served = s + 1
         return completion
 
@@ -539,6 +576,30 @@ class PipelineRunner:
         self.wasted_time += float(occupancy)
         return self.free_at
 
+    def stamp_tier(self, local: int, plan, fleet_q: int) -> None:
+        """Stamp local slot ``local`` with fleet query ``fleet_q``'s
+        tier draw from the fleet ``plan`` (the cluster's assign path).
+        Keyed overwrite like ``on_assign``: a failed dispatch serves no
+        row, so a retry re-assigns the same slot.  The runner's local
+        plan arrays grow on demand — routing skew may push one replica
+        past its pre-sized fleet share."""
+        if self._tier_ids is None:
+            raise ValueError("stamp_tier needs the runner built with a "
+                             "tier plan (tiers=TierPlan.empty(...))")
+        if local >= len(self._tier_ids):
+            new = max(local + 1, 2 * len(self._tier_ids))
+            for name, fill in (("_tier_ids", 0), ("_tier_pri", 0),
+                               ("_tier_deadline", np.inf),
+                               ("_tier_value", 1.0)):
+                arr = getattr(self, name)
+                grown = np.full(new, fill, dtype=arr.dtype)
+                grown[:len(arr)] = arr
+                setattr(self, name, grown)
+        self._tier_ids[local] = plan.tier_ids[fleet_q]
+        self._tier_pri[local] = plan.priorities[fleet_q]
+        self._tier_deadline[local] = plan.deadlines[fleet_q]
+        self._tier_value[local] = plan.values[fleet_q]
+
     def _chunk_tick(self, gq0: int, steps,
                     arr_chunk: Optional[np.ndarray]) -> None:
         """``len(steps)`` steady queries through ``execute_many``.
@@ -586,6 +647,10 @@ class PipelineRunner:
         else:
             self.padded_tok[sl] = 0.0
             self.actual_tok[sl] = 0.0
+        if self._tier_ids is not None:
+            self.tier_row[sl] = self._tier_ids[gq0:gq0 + n]
+            self.deadline_row[sl] = self._tier_deadline[gq0:gq0 + n]
+            self.value_row[sl] = self._tier_value[gq0:gq0 + n]
         self.num_served = s0 + n
 
     # -- formed dispatch (repro.workloads.batching; docs/WORKLOADS.md) -------
@@ -630,9 +695,11 @@ class PipelineRunner:
         j = q + 1
         leftover = None
         stop = False
+        pri = self._tier_pri
+        batch_pri = int(pri[q]) if pri is not None else 0
 
         def try_fill(ready: float, joining: bool) -> None:
-            nonlocal j, leftover, stop
+            nonlocal j, leftover, stop, batch_pri
             while (j < wlimit and len(members) < cap
                    and arrivals[j] <= ready):
                 # Dispatches are single-bucket — formation and joins
@@ -643,6 +710,19 @@ class PipelineRunner:
                 # whole backlog behind it; the bucket cut keeps joins
                 # strictly win-win.
                 if pw is not None and pw[j] != pw[q]:
+                    stop = True
+                    return
+                # Formation-slot preemption (docs/QOS.md): once the
+                # dispatch carries a query of some priority class, a
+                # lower-priority candidate may not extend it — batched
+                # dispatch is group-synchronous, so every additional
+                # member pushes the shared drain (and with it the
+                # high-priority member's completion) further out.  The
+                # refused candidate is not polled and simply heads the
+                # next dispatch.  Higher-priority candidates still
+                # join: joining completes at this dispatch's drain,
+                # strictly earlier than waiting to head their own.
+                if pri is not None and pri[j] < batch_pri:
                     stop = True
                     return
                 if not serial_head:
@@ -664,6 +744,8 @@ class PipelineRunner:
                         executor.reference_throughput(j)
                 (builder.join if joining else builder.add)(j)
                 members.append(j)
+                if pri is not None and pri[j] > batch_pri:
+                    batch_pri = int(pri[j])
                 j += 1
 
         if arrivals is not None:
@@ -726,6 +808,10 @@ class PipelineRunner:
         else:
             self.padded_tok[sl] = float(rec.padded_tokens) / n
             self.actual_tok[sl] = float(rec.actual_tokens) / n
+        if self._tier_ids is not None:
+            self.tier_row[sl] = self._tier_ids[mem]
+            self.deadline_row[sl] = self._tier_deadline[mem]
+            self.value_row[sl] = self._tier_value[mem]
         self.num_served = s0 + n
 
         if leftover is not None:
@@ -795,19 +881,42 @@ class PipelineRunner:
         return m
 
     # -- admission control (repro.control; docs/CONTROL.md) ------------------
+    def _view(self, gq: int, arrival: Optional[float], wait: float,
+              est_service: float, est_latency: float) -> AdmissionView:
+        """The admission view for query ``gq`` — one construction path
+        for the actual-ledger decision and the chunked pre-pass, so
+        tiered decisions are identical on both."""
+        if self._tier_ids is None:
+            return AdmissionView(query=gq, arrival=arrival, wait=wait,
+                                 est_service=est_service,
+                                 est_latency=est_latency)
+        return AdmissionView(query=gq, arrival=arrival, wait=wait,
+                             est_service=est_service,
+                             est_latency=est_latency,
+                             tier=int(self._tier_ids[gq]),
+                             priority=int(self._tier_pri[gq]),
+                             deadline=float(self._tier_deadline[gq]),
+                             value=float(self._tier_value[gq]))
+
     def _admit(self, gq: int, arrival: Optional[float]) -> bool:
         """Admit-or-shed decision for global query ``gq``, made with
         the *actual* ledger.  A shed is recorded and never executes."""
         wait = (0.0 if arrival is None
                 else max(self.free_at - arrival, 0.0))
-        view = AdmissionView(
-            query=gq, arrival=arrival, wait=wait,
-            est_service=self.runtime.estimated_bottleneck(),
-            est_latency=self.runtime.estimated_service_latency())
+        view = self._view(gq, arrival, wait,
+                          self.runtime.estimated_bottleneck(),
+                          self.runtime.estimated_service_latency())
         if self.admission.admit(view):
             return True
         t = self.free_at if arrival is None else float(arrival)
-        if self.telemetry is not None:
+        if self._tier_ids is not None:
+            tid = int(self._tier_ids[gq])
+            val = float(self._tier_value[gq])
+            self.shed_tier_counts[tid] += 1
+            self.shed_value += val
+            if self.telemetry is not None:
+                self.telemetry.observe_shed(t, tier=tid, value=val)
+        elif self.telemetry is not None:
             self.telemetry.observe_shed(t)
         if not self._streaming:
             # Streaming keeps sheds as counters only — these lists are
@@ -849,8 +958,7 @@ class PipelineRunner:
             else:
                 arrival = float(arrivals[j])
                 wait = max(free_pred - arrival, 0.0)
-            view = AdmissionView(query=j, arrival=arrival, wait=wait,
-                                 est_service=est, est_latency=est_lat)
+            view = self._view(j, arrival, wait, est, est_lat)
             if not self.admission.admit(view):
                 return j - gq0
             free_pred = (free_pred + occ_est if arrival is None
@@ -900,6 +1008,11 @@ class PipelineRunner:
             return
         s0, s1 = self._stream_pos, self.num_served
         if s1 > s0:
+            tier_cols = {}
+            if self._tier_ids is not None:
+                tier_cols = dict(tier_ids=self.tier_row[s0:s1],
+                                 deadlines=self.deadline_row[s0:s1],
+                                 values=self.value_row[s0:s1])
             tel.observe_chunk(
                 latencies=self.latencies[s0:s1],
                 service_latencies=self.service_lat[s0:s1],
@@ -911,7 +1024,8 @@ class PipelineRunner:
                 queue_depths=self.queue_depth[s0:s1],
                 batch_sizes=self.batch_sizes[s0:s1],
                 padded_tokens=self.padded_tok[s0:s1],
-                actual_tokens=self.actual_tok[s0:s1])
+                actual_tokens=self.actual_tok[s0:s1],
+                **tier_cols)
         if self._fault_aware:
             tel.note_faults(self.num_failed, self.num_retried,
                             self.num_hedged, self.wasted_time,
@@ -969,15 +1083,39 @@ class PipelineRunner:
         that have arrived).  Like :meth:`step`, no admission check is
         made here — the cluster sheds at its own routing layer.
         Returns the per-query completion times in arrival order.
+
+        Fault semantics (docs/FAULTS.md): a
+        :class:`~repro.util.errors.TransientQueryError` raised mid-flush
+        carries the completed prefix on ``err.partial_completions`` —
+        the completions of every query that executed before the failing
+        dispatch (those rows are already in the ledger); the failing
+        query and the tail behind it remain unserved, and the caller
+        decides their fate per ``RetrySpec.batch_policy``.
         """
         arr = np.asarray(arrivals, dtype=float)
         n = len(arr)
         if n == 0:
             return []
         if self._mode is None or n == 1:
-            return [self.step(float(a)) for a in arr]
+            out = []
+            try:
+                for a in arr:
+                    out.append(self.step(float(a)))
+            except TransientQueryError as err:
+                err.partial_completions = out
+                raise
+            return out
         executor, runtime = self.executor, self.runtime
         out: List[float] = []
+        try:
+            self._step_many_body(arr, n, out, executor, runtime)
+        except TransientQueryError as err:
+            err.partial_completions = out
+            raise
+        return out
+
+    def _step_many_body(self, arr, n: int, out: List[float],
+                        executor, runtime) -> None:
         i = 0
         while i < n:
             if self.telemetry is not None and self._should_flush():
@@ -1022,7 +1160,6 @@ class PipelineRunner:
                 out.append(self._scalar_tick(gq + k, leftover, float(arr[i])))
                 self.num_offered += 1
                 i += 1
-        return out
 
     # -- full-run driving (the run_pipeline path) ---------------------------
     def run(self, num_queries: int,
@@ -1278,6 +1415,16 @@ class PipelineRunner:
             num_hedged=self.num_hedged,
             wasted_time=self.wasted_time,
             downtime=downtime,
+            tier_names=(self._tiers.names if self._tiers is not None
+                        else None),
+            tier_ids=(self.tier_row[:n].astype(np.int64)
+                      if self.tier_row is not None else None),
+            tier_deadlines=(self.deadline_row[:n]
+                            if self.deadline_row is not None else None),
+            tier_values=(self.value_row[:n]
+                         if self.value_row is not None else None),
+            shed_tier_counts=self.shed_tier_counts,
+            shed_value=self.shed_value,
         )
 
     def fault_downtime(self) -> float:
@@ -1307,7 +1454,9 @@ def run_pipeline(executor: QueryExecutor,
                  lengths=None,
                  lengths_kwargs: Optional[dict] = None,
                  faults=None,
-                 retries=None
+                 retries=None,
+                 tiers=None,
+                 tiers_kwargs: Optional[dict] = None
                  ) -> Union[PipelineTrace, StreamingTrace]:
     """Serve ``num_queries`` arrivals of ``workload`` through one
     scheduler runtime; returns the unified :class:`PipelineTrace`.
@@ -1342,11 +1491,23 @@ def run_pipeline(executor: QueryExecutor,
     distribution (sampler name, instance, or explicit array —
     ``repro.workloads.lengths``); without a former lengths are
     accounting-only (token counters in the trace).
+
+    ``tiers`` / ``tiers_kwargs`` stamp every arrival with a QoS tier
+    (``repro.qos``, docs/QOS.md): tier-aware admission policies see
+    priority/deadline/value on their views, batch formation refuses
+    low-priority extensions of high-priority dispatches, and the trace
+    grows per-tier latency/attainment/value accounting.  ``None`` =
+    tiers unarmed, bit-identical to pre-QoS runs.
     """
     # Deferred import: repro.control registers its builtins on first
     # use; the run loop itself only needs the resolver.
     from repro.control.registry import resolve_admission
     policy = resolve_admission(admission, admission_kwargs)
+
+    tier_plan = None
+    if tiers is not None or tiers_kwargs:
+        from repro.qos import resolve_tiers
+        tier_plan = resolve_tiers(tiers, tiers_kwargs, num_queries)
 
     # Fault tolerance (repro.faults; docs/FAULTS.md): wrap the executor
     # in a fault injector and arm the runner's retry budget.  Both
@@ -1406,7 +1567,7 @@ def run_pipeline(executor: QueryExecutor,
                             admission=policy, trace_mode=trace_mode,
                             telemetry=telemetry, former=former,
                             lengths=lengths_arr, padded=padded,
-                            retry=retry_spec)
+                            retry=retry_spec, tiers=tier_plan)
     runner.run(num_queries, arrivals)
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,

@@ -79,6 +79,24 @@ class PipelineTrace:
     #: Time this pipeline was crash-down (fault-plan clock units) plus,
     #: on cluster traces, breaker-open time stamped by the fleet loop.
     downtime: float = 0.0
+    # -- QoS tiers (repro.qos; docs/QOS.md) ----------------------------------
+    #: Tier names, index-aligned with :attr:`tier_ids`; ``None`` when
+    #: the run had no tiers configured (every per-tier surface below is
+    #: then absent and summaries carry no per-tier keys).
+    tier_names: Optional[Tuple[str, ...]] = None
+    #: Tier index of each admitted query.
+    tier_ids: Optional[np.ndarray] = None
+    #: Relative deadline (seconds from arrival) of each admitted query.
+    tier_deadlines: Optional[np.ndarray] = None
+    #: SLO value of each admitted query.
+    tier_values: Optional[np.ndarray] = None
+    #: Shed queries per tier (admission never ran them).
+    shed_tier_counts: Optional[np.ndarray] = None
+    #: Offered value lost to shedding (sum of shed queries' values).
+    shed_value: float = 0.0
+    #: Queries per tier the router downgraded to a small-model replica
+    #: (cluster runs under the ``downgrade`` policy; docs/QOS.md).
+    downgrade_tier_counts: Optional[np.ndarray] = None
 
     def __post_init__(self):
         n = len(self.latencies)
@@ -98,6 +116,14 @@ class PipelineTrace:
             self.padded_tokens = np.zeros(n)
         if self.actual_tokens is None:
             self.actual_tokens = np.zeros(n)
+        if self.tier_names is not None:
+            if (self.tier_ids is None or self.tier_deadlines is None
+                    or self.tier_values is None):
+                raise ValueError("a tiered trace needs tier_ids, "
+                                 "tier_deadlines and tier_values")
+            if self.shed_tier_counts is None:
+                self.shed_tier_counts = np.zeros(len(self.tier_names),
+                                                 dtype=np.int64)
         # Percentile reads share one sort per field (summary() alone
         # makes three; rows() adds more) — sorted once, cached here.
         self._sorted_cache: Dict[str, np.ndarray] = {}
@@ -267,6 +293,62 @@ class PipelineTrace:
             return 0.0
         return 1.0 - float(np.sum(self.actual_tokens)) / total
 
+    # -- QoS tiers (repro.qos; docs/QOS.md) ----------------------------------
+    @property
+    def deadline_met_mask(self) -> np.ndarray:
+        """Per-admitted-query "completed within its deadline" mask
+        (all-True rows for tiers without a deadline)."""
+        if self.tier_deadlines is None:
+            raise ValueError("this trace has no tiers configured")
+        return self.latencies <= self.tier_deadlines
+
+    @property
+    def offered_value(self) -> float:
+        """Total SLO value offered to the run: admitted plus shed."""
+        if self.tier_values is None:
+            return float("nan")
+        return float(np.sum(self.tier_values)) + float(self.shed_value)
+
+    @property
+    def realized_value(self) -> float:
+        """SLO value actually earned: the summed value of admitted
+        queries that completed within their deadlines.  The QoS figure
+        of merit — what value-aware shedding maximizes under overload
+        (a shed or late query earns nothing)."""
+        if self.tier_values is None:
+            return float("nan")
+        return float(np.sum(self.tier_values[self.deadline_met_mask]))
+
+    def tier_summary(self) -> Dict[str, float]:
+        """Per-tier metric keys (docs/QOS.md): served/shed counts,
+        p50/p99 latency, deadline attainment (met ÷ offered — shed
+        queries count against the tier), downgrades when a downgrade
+        router ran, plus the fleet-level offered/realized value.
+        Empty when the run had no tiers configured."""
+        if self.tier_names is None:
+            return {}
+        nan = float("nan")
+        out = {"offered_value": self.offered_value,
+               "realized_value": self.realized_value}
+        met_mask = self.deadline_met_mask
+        for i, name in enumerate(self.tier_names):
+            m = self.tier_ids == i
+            cnt = int(np.count_nonzero(m))
+            shed = int(self.shed_tier_counts[i])
+            offered = cnt + shed
+            lat = np.sort(self.latencies[m])
+            out[f"tier_{name}_num"] = float(cnt)
+            out[f"tier_{name}_shed"] = float(shed)
+            out[f"tier_{name}_p50_latency_s"] = _percentile_sorted(lat, 50)
+            out[f"tier_{name}_p99_latency_s"] = _percentile_sorted(lat, 99)
+            out[f"tier_{name}_deadline_attainment"] = (
+                int(np.count_nonzero(met_mask & m)) / offered
+                if offered else nan)
+            if self.downgrade_tier_counts is not None:
+                out[f"tier_{name}_downgraded"] = float(
+                    self.downgrade_tier_counts[i])
+        return out
+
     # -- offered vs. achieved load ------------------------------------------
     @property
     def offered_load(self) -> float:
@@ -323,7 +405,7 @@ class PipelineTrace:
         n = self.num_admitted
         nan = float("nan")
         peak_known = np.isfinite(self.peak_throughput)
-        return {
+        out = {
             "mean_latency_s": float(self.latencies.mean()) if n else nan,
             "p50_latency_s": self.percentile(50),
             "p99_latency_s": self.tail_latency(99),
@@ -359,3 +441,8 @@ class PipelineTrace:
             "wasted_work_frac": self.wasted_work_frac,
             "downtime_s": float(self.downtime),
         }
+        # Per-tier keys appear only on tiered runs, so no-tier
+        # summaries are byte-identical to pre-QoS summaries.
+        if self.tier_names is not None:
+            out.update(self.tier_summary())
+        return out

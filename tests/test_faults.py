@@ -311,12 +311,34 @@ def test_all_replicas_unhealthy_no_deadlock(db, mode):
     assert _same_summary(s, rerun.summary())
 
 
-def test_faults_reject_fleet_rebatching(db):
+def test_hedging_rejects_fleet_rebatching(db):
+    # Retries + rebatching compose (RetrySpec.batch_policy, docs/FAULTS.md);
+    # hedging still needs per-query dispatch.
     with pytest.raises(ValueError, match="max_batch"):
         simulate_cluster(db, 3, 2, scheduler="none", num_queries=20,
                          workload="poisson",
                          workload_kwargs=dict(rate=0.01, seed=0),
-                         max_batch=4, retries=2)
+                         max_batch=4, hedge_after=0.5)
+
+
+@pytest.mark.parametrize("policy", ["resplit", "subset", "all"])
+def test_batch_retry_policies(db, policy):
+    kw = dict(scheduler="none", num_queries=120, workload="poisson",
+              workload_kwargs=dict(rate=20.0, seed=11), max_batch=4,
+              faults="flaky@0+100000:p=0.06",
+              retries=dict(max_retries=3, batch_policy=policy))
+    ct = simulate_cluster(db, 3, 2, **kw)
+    s = ct.summary()
+    # every fleet arrival lands in exactly one ledger state
+    n_ok = int((ct.assignments >= 0).sum())
+    n_fail = int((ct.assignments == -2).sum())
+    assert n_ok + n_fail == 120
+    assert s["num_retried"] > 0
+    # per-replica row counts agree with the assignment ledger
+    for r, tr in enumerate(ct.replicas):
+        assert len(tr.latencies) == int((ct.assignments == r).sum())
+    rerun = simulate_cluster(db, 3, 2, **kw)
+    assert _same_summary(s, rerun.summary())
 
 
 def test_when_all_unhealthy_validated(db):

@@ -1,0 +1,352 @@
+"""QoS tiers (repro.qos, docs/QOS.md): registry, stamping, tier-aware
+control plane, heterogeneous fleets.
+
+The determinism groups pin the two identities the subsystem is built
+on: tiers default *off* (a ``tiers=None`` run is bit-identical to a
+pre-QoS run), and stamping is *passive* (arming tiers changes only the
+accounting, never the service timeline).  The scenario group then
+checks the value: EDF + value-aware shedding on a heterogeneous fleet
+beats both tier-blind shedding and a fleet-blind router on realized
+value under bursty overload.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import simulate_cluster
+from repro.core.database import synthetic_database
+from repro.core.simulator import simulate
+from repro.qos import (QosTier, TierAssigner, TierPlan, available_tiers,
+                       get_tier, register_tier, resolve_tiers,
+                       unregister_tier)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+TIERS = "interactive,best_effort"
+TK = dict(shares=[0.25, 0.75], seed=3)
+
+
+def _same_trace(a, b):
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.throughputs, b.throughputs)
+    sa, sb = a.summary(), b.summary()
+    assert set(sa) == set(sb)
+    for k, v in sa.items():
+        if isinstance(v, float) and math.isnan(v):
+            assert math.isnan(sb[k])
+        else:
+            assert sb[k] == v, k
+
+
+# ------------------------------------------------------------------
+# Registry round-trip + validation
+# ------------------------------------------------------------------
+
+def test_tier_registry_round_trip():
+    t = QosTier("pr9_test_tier", priority=5, value=3.0, deadline=1.5)
+    register_tier(t)
+    try:
+        assert "pr9_test_tier" in available_tiers()
+        assert get_tier("pr9_test_tier") is t
+        with pytest.raises(ValueError, match="already registered"):
+            register_tier(QosTier("pr9_test_tier"))
+        plan = resolve_tiers("pr9_test_tier,best_effort", num_queries=10)
+        assert plan.names == ("pr9_test_tier", "best_effort")
+    finally:
+        unregister_tier("pr9_test_tier")
+    assert "pr9_test_tier" not in available_tiers()
+    with pytest.raises(ValueError, match="unknown tier"):
+        get_tier("pr9_test_tier")
+
+
+def test_tier_validation():
+    with pytest.raises(ValueError):
+        QosTier("")                        # empty name
+    with pytest.raises(ValueError):
+        QosTier("x", value=0.0)            # non-positive value
+    with pytest.raises(ValueError):
+        QosTier("x", deadline=-1.0).deadline_sampler()
+    with pytest.raises(ValueError):
+        TierAssigner([])                   # no tiers
+    with pytest.raises(ValueError, match="unique"):
+        TierAssigner([QosTier("a"), QosTier("a")])
+    with pytest.raises(ValueError, match="shares"):
+        TierAssigner([QosTier("a")], shares=[0.0])
+    with pytest.raises(ValueError, match="tiers_kwargs"):
+        resolve_tiers(None, tiers_kwargs=dict(seed=1))
+
+
+def test_assigner_deterministic_and_resolve_forms():
+    tiers = [get_tier("interactive"), get_tier("best_effort")]
+    a = TierAssigner(tiers, shares=[0.3, 0.7], seed=9)
+    p1, p2 = a.assign(200), a.assign(200)
+    assert np.array_equal(p1.tier_ids, p2.tier_ids)
+    assert np.array_equal(p1.deadlines, p2.deadlines)
+    # mixture shares are roughly honoured
+    assert 0.15 < np.mean(p1.tier_ids == 0) < 0.45
+    # each spec form yields the identical plan
+    forms = [
+        "interactive,best_effort",
+        tiers,
+        [dict(name="interactive", priority=2, value=10.0, deadline=0.5),
+         dict(name="best_effort", priority=0, value=1.0, deadline=10.0)],
+    ]
+    for spec in forms:
+        p = resolve_tiers(spec, dict(shares=[0.3, 0.7], seed=9),
+                          num_queries=200)
+        assert np.array_equal(p.tier_ids, p1.tier_ids)
+        assert np.array_equal(p.deadlines, p1.deadlines)
+        assert np.array_equal(p.values, p1.values)
+    # a pre-built plan passes through (truncated), stamps copy exactly
+    assert resolve_tiers(p1, num_queries=50).tier_ids.shape == (50,)
+    empty = TierPlan.empty(tiers, 4)
+    empty.stamp(2, p1, 7)
+    assert empty.tier_ids[2] == p1.tier_ids[7]
+    assert empty.deadlines[2] == p1.deadlines[7]
+
+
+# ------------------------------------------------------------------
+# Chunked == scalar with tiers armed
+# ------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheduler", ["odin", "lls", "none"])
+def test_chunked_scalar_identity_with_tiers(db, scheduler):
+    """The vectorized tick must stay bit-identical to the scalar tick
+    with tier stamping armed (the tier reads index the same global
+    query ids either way)."""
+    kw = dict(scheduler=scheduler, num_queries=300, freq_period=2,
+              duration=100, tiers=TIERS, tiers_kwargs=TK)
+    chunked = simulate(db, 4, chunking=True, **kw)
+    scalar = simulate(db, 4, chunking=False, **kw)
+    _same_trace(chunked, scalar)
+    s = chunked.summary()
+    for t in ("interactive", "best_effort"):
+        assert f"tier_{t}_p99_latency_s" in s
+        assert 0.0 <= s[f"tier_{t}_deadline_attainment"] <= 1.0
+
+
+# ------------------------------------------------------------------
+# Tiers default off / stamping is passive
+# ------------------------------------------------------------------
+
+def test_no_tiers_bit_identical(db):
+    """``tiers=None`` must leave the trace bit-identical to a call
+    that never mentions tiers, with zero tier keys in the summary."""
+    base = simulate(db, 4, num_queries=300)
+    off = simulate(db, 4, num_queries=300, tiers=None)
+    _same_trace(base, off)
+    assert not any(k.startswith("tier_") for k in base.summary())
+    assert "realized_value" not in base.summary()
+
+
+def test_tier_stamping_is_passive(db):
+    """Arming tiers adds accounting only: latencies, throughputs and
+    the rebalance trail are bit-identical to the untier-ed run."""
+    base = simulate(db, 4, num_queries=300)
+    tiered = simulate(db, 4, num_queries=300, tiers=TIERS, tiers_kwargs=TK)
+    assert np.array_equal(base.latencies, tiered.latencies)
+    assert np.array_equal(base.throughputs, tiered.throughputs)
+    assert base.num_rebalances == tiered.num_rebalances
+    s = tiered.summary()
+    # preset deadlines are wall-clock seconds; sim time units dwarf
+    # them, so realized value may legitimately be zero here
+    assert s["offered_value"] > 0
+    assert 0 <= s["realized_value"] <= s["offered_value"]
+
+
+def test_no_tiers_cluster_bit_identical(db):
+    kw = dict(scheduler="none", num_queries=240, workload="poisson",
+              workload_kwargs=dict(rate=0.02, seed=5))
+    base = simulate_cluster(db, 4, 3, **kw)
+    off = simulate_cluster(db, 4, 3, tiers=None, **kw)
+    assert np.array_equal(base.assignments, off.assignments)
+    _same_trace(base.fleet, off.fleet)
+
+
+# ------------------------------------------------------------------
+# The acceptance scenario: value-aware control beats blind baselines
+# ------------------------------------------------------------------
+
+FULL = synthetic_database("vgg16", base_time=10.0, seed=0)
+SMALL = synthetic_database("vgg16", base_time=5.0, seed=0)
+GOLD_BATCH = [dict(name="gold", priority=2, value=10.0, deadline=800.0),
+              dict(name="batch", priority=0, value=1.0, deadline=6000.0)]
+
+
+def _overload_run(router, admission, rk=None, ak=None, n=400, **extra):
+    return simulate_cluster(
+        FULL, 4, num_replicas=4,
+        databases=[FULL, FULL, SMALL, SMALL],
+        pools=["default", "default", "small", "small"],
+        scheduler="none",
+        router=router, router_kwargs=rk,
+        admission=admission, admission_kwargs=ak,
+        num_queries=n,
+        tiers=GOLD_BATCH, tiers_kwargs=dict(shares=[0.15, 0.85], seed=5),
+        workload="bursty",
+        workload_kwargs=dict(burst_rate=0.16, base_rate=0.004,
+                             mean_burst=400.0, mean_gap=400.0, seed=7),
+        **extra)
+
+
+def test_value_aware_beats_blind_baselines_under_overload():
+    """Bursty overload on a heterogeneous 4-replica fleet: downgrade
+    routing + expected-value shedding must realize more SLO value than
+    the same router with tier-blind slo_shed AND than a fleet-blind
+    round robin, while holding gold-tier attainment >= 0.99."""
+    qos = _overload_run("downgrade", "value_shed",
+                        rk=dict(pressure=0.0, priority_max=0),
+                        ak=dict(theta=0.5)).summary()
+    blind = _overload_run("downgrade", "slo_shed",
+                          rk=dict(pressure=0.0, priority_max=0),
+                          ak=dict(slo=800.0)).summary()
+    rr = _overload_run("round_robin", None).summary()
+    assert qos["tier_gold_deadline_attainment"] >= 0.99
+    assert qos["realized_value"] > blind["realized_value"]
+    assert qos["realized_value"] > rr["realized_value"]
+    # the fleet-blind baseline actually violates the gold objective
+    assert rr["tier_gold_deadline_attainment"] < 0.99
+    # downgrades flowed to the small pool instead of shedding gold
+    assert qos["tier_batch_downgraded"] > 0
+    assert qos.get("tier_gold_downgraded", 0) == 0
+
+
+def _weighted_attainment(s):
+    return (10.0 * s["tier_gold_deadline_attainment"]
+            + s["tier_batch_deadline_attainment"])
+
+
+def test_deadline_aware_beats_fifo_on_weighted_attainment():
+    """Deadline/value awareness pays on weighted attainment under
+    overload, at both layers: the EDF cost atop odin_aware beats plain
+    (deadline-blind) odin_aware, and the full tier-aware stack —
+    downgrade routing + expected-value shedding — beats FIFO
+    round robin + tier-blind slo_shed."""
+    edf = _overload_run("edf", None, n=300).summary()
+    oa = _overload_run("odin_aware", None, n=300).summary()
+    for t in ("gold", "batch"):
+        assert f"tier_{t}_deadline_attainment" in edf
+    assert _weighted_attainment(edf) > _weighted_attainment(oa)
+    stack = _overload_run("downgrade", "value_shed", n=300,
+                          rk=dict(pressure=0.0, priority_max=0),
+                          ak=dict(theta=0.5)).summary()
+    fifo = _overload_run("round_robin", "slo_shed", n=300,
+                         ak=dict(slo=800.0)).summary()
+    assert _weighted_attainment(stack) > _weighted_attainment(fifo)
+
+
+def test_dense_streaming_tier_parity():
+    """Per-tier percentiles from the streaming sketches must stay
+    within 1% of the dense trace (acceptance bound; observed exact on
+    this scenario)."""
+    kw = dict(rk=dict(pressure=0.0, priority_max=0), ak=dict(theta=0.5))
+    dense = _overload_run("downgrade", "value_shed", **kw).summary()
+    stream = _overload_run("downgrade", "value_shed",
+                           trace_mode="streaming", **kw).summary()
+    for t in ("gold", "batch"):
+        for q in ("p50", "p99"):
+            k = f"tier_{t}_{q}_latency_s"
+            assert stream[k] == pytest.approx(dense[k], rel=0.01)
+        assert stream[f"tier_{t}_deadline_attainment"] == pytest.approx(
+            dense[f"tier_{t}_deadline_attainment"], abs=1e-12)
+    assert stream["realized_value"] == pytest.approx(
+        dense["realized_value"], rel=1e-9)
+
+
+# ------------------------------------------------------------------
+# Heterogeneous fleet identities
+# ------------------------------------------------------------------
+
+def test_hetero_single_replica_matches_single_pipeline(db):
+    """An n=1 'fleet' whose one replica runs the small model must be
+    bit-identical to a single-pipeline simulate() on that model —
+    per-database configs/peaks/oracles change nothing at n=1."""
+    small = synthetic_database("vgg16", base_time=5.0, seed=0)
+    ct = simulate_cluster(db, 4, num_replicas=1, databases=[small],
+                          scheduler="odin", num_queries=200,
+                          tiers=TIERS, tiers_kwargs=TK)
+    single = simulate(small, 4, scheduler="odin", num_queries=200,
+                      events=[], chunking=False,
+                      tiers=TIERS, tiers_kwargs=TK)
+    assert np.array_equal(ct.fleet.latencies, single.latencies)
+    sa, sb = ct.fleet.summary(), single.summary()
+    for t in ("interactive", "best_effort"):
+        for k in ("num", "p99_latency_s", "deadline_attainment"):
+            assert sa[f"tier_{t}_{k}"] == sb[f"tier_{t}_{k}"]
+
+
+def test_hetero_peaks_and_weighted_fleet_peak(db):
+    """Distinct databases get distinct clean peaks, and the fleet peak
+    is the served-share-weighted mean of the per-replica peaks."""
+    small = synthetic_database("vgg16", base_time=5.0, seed=0)
+    ct = simulate_cluster(db, 4, num_replicas=2, databases=[db, small],
+                          scheduler="none", num_queries=120)
+    p0, p1 = (t.peak_throughput for t in ct.replicas)
+    assert p1 > p0    # half the base_time, higher clean peak
+    cnt = ct.replica_counts.astype(float)
+    expect = (cnt[0] * p0 + cnt[1] * p1) / cnt.sum()
+    assert ct.fleet.peak_throughput == pytest.approx(expect)
+    # homogeneous fleets collapse to the replica peak
+    hom = simulate_cluster(db, 4, num_replicas=2, scheduler="none",
+                           num_queries=120)
+    assert hom.fleet.peak_throughput == pytest.approx(
+        hom.replicas[0].peak_throughput)
+
+
+# ------------------------------------------------------------------
+# Live downgrade smoke (real JAX engines)
+# ------------------------------------------------------------------
+
+def test_live_downgrade_smoke():
+    """Two live engines, one labelled ``small``: a tiered open-loop run
+    under the downgrade router must stamp tiers sim/live-identically,
+    surface the per-tier summary keys, and send pressured best-effort
+    traffic to the small pool."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.cluster import serve_cluster
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2-0.5b"), num_layers=8)
+    model = Model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 64)))
+               for _ in range(48)]
+    engines = [ServingEngine(cfg, params, num_eps=4, scheduler="none")]
+    engines[0].executor.warmup(1, 64)
+    engines.append(ServingEngine(cfg, params, num_eps=4, scheduler="none",
+                                 executor=engines[0].executor))
+    probe = engines[0].serve(queries[:6], lambda q: [1.0] * 4)
+    service = float(probe.service_latencies[2:].mean())
+    engines[0].reset_policy()
+    # 2x the full replica's service rate: the full pool stays backed
+    # up, so pressured best-effort arrivals must flow to the small pool.
+    ct = serve_cluster(engines, queries, lambda q: [1.0] * 4,
+                       workload="poisson",
+                       workload_kwargs=dict(rate=2.0 / service, seed=3),
+                       router="downgrade",
+                       router_kwargs=dict(pressure=0.0, priority_max=0),
+                       pools=["default", "small"],
+                       tiers=TIERS, tiers_kwargs=TK)
+    assert ct.num_queries == len(queries)
+    s = ct.summary()
+    for t in ("interactive", "best_effort"):
+        assert f"tier_{t}_num" in s
+        assert f"tier_{t}_downgraded" in s
+    assert s["tier_best_effort_downgraded"] > 0
+    assert s["tier_interactive_downgraded"] == 0
+    assert s["realized_value"] <= s["offered_value"]
+    # the tier sequence is the seeded draw — identical to the sim side
+    plan = resolve_tiers(TIERS, TK, num_queries=len(queries))
+    assert np.array_equal(ct.fleet.tier_ids, plan.tier_ids)
