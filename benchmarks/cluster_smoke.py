@@ -21,8 +21,9 @@ import os
 import sys
 
 from benchmarks.common import RESULTS_DIR, db_for
-from repro.cluster import available_routers, simulate_cluster
-from repro.core import generate_events, simulate
+from repro import api
+from repro.cluster import available_routers
+from repro.core import generate_events
 
 NUM_QUERIES = int(os.environ.get("REPRO_CLUSTER_QUERIES", "2000"))
 NUM_REPLICAS = 4
@@ -34,22 +35,30 @@ REQUIRED = ("p50_latency", "p99_latency", "mean_queue_delay",
 
 def main() -> int:
     db = db_for("vgg16")
-    cap = simulate(db, NUM_REPLICAS, scheduler="none", events=[],
-                   num_queries=10).peak_throughput
+    # One declaration per run (docs/API.md): the probe and the sweep
+    # differ only in the fields .replace() swaps out.
+    cap = api.run(api.RunSpec(
+        db=db, num_eps=NUM_REPLICAS, num_queries=10, events=(),
+        scheduler=api.SchedulerSpec(name="none"))).peak_throughput
     events = [dataclasses.replace(ev, replica=VICTIM)
               for ev in generate_events(NUM_QUERIES // NUM_REPLICAS,
                                         NUM_REPLICAS, db.num_scenarios,
                                         2, 100, seed=5)]
     workload_kwargs = dict(burst_rate=4.0 * cap, base_rate=0.5 * cap,
                            mean_burst=3000.0, mean_gap=5000.0, seed=7)
+    base = api.RunSpec(
+        db=db, num_eps=NUM_REPLICAS, num_queries=NUM_QUERIES,
+        events=events,
+        scheduler=api.SchedulerSpec(name="odin", alpha=10),
+        workload=api.WorkloadSpec(name="bursty",
+                                  kwargs=workload_kwargs),
+        cluster=api.ClusterSpec(num_replicas=NUM_REPLICAS))
 
     rows, p99 = [], {}
     for router in available_routers():
-        ct = simulate_cluster(db, NUM_REPLICAS, NUM_REPLICAS,
-                              scheduler="odin", alpha=10,
-                              num_queries=NUM_QUERIES, events=events,
-                              router=router, workload="bursty",
-                              workload_kwargs=workload_kwargs)
+        ct = api.run(base.replace(
+            cluster=api.ClusterSpec(num_replicas=NUM_REPLICAS,
+                                    router=router)))
         assert ct.replica_counts.sum() == NUM_QUERIES
         p99[router] = ct.summary()["p99_latency_s"]
         for row in ct.rows():

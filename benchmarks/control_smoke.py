@@ -29,8 +29,8 @@ import os
 import sys
 
 from benchmarks.common import RESULTS_DIR, db_for
-from repro.cluster import simulate_cluster
-from repro.core import generate_events, simulate
+from repro import api
+from repro.core import generate_events
 
 NUM_QUERIES = int(os.environ.get("REPRO_CONTROL_QUERIES", "4000"))
 NUM_EPS = 4
@@ -67,7 +67,11 @@ def trace_row(scope: str, admission: str, autoscaler: str, trace) -> dict:
 
 def main() -> int:
     db = db_for("vgg16")
-    probe = simulate(db, NUM_EPS, scheduler="none", events=[], num_queries=10)
+    # One declaration per run (docs/API.md); the sweeps below swap only
+    # the admission/autoscaler fields.
+    probe = api.run(api.RunSpec(
+        db=db, num_eps=NUM_EPS, num_queries=10, events=(),
+        scheduler=api.SchedulerSpec(name="none")))
     cap = probe.peak_throughput
     service = float(probe.service_latencies[-1])
     slo = SLO_SERVICES * service
@@ -86,17 +90,13 @@ def main() -> int:
         ("queue_cap", dict(cap=8)),
         ("slo_shed", dict(slo=slo)),
     ):
-        t = simulate(
-            db,
-            NUM_EPS,
-            scheduler="none",
-            events=[],
-            num_queries=NUM_QUERIES,
-            workload="bursty",
-            workload_kwargs=workload_kwargs,
-            admission=admission,
-            admission_kwargs=admission_kwargs,
-        )
+        t = api.run(api.RunSpec(
+            db=db, num_eps=NUM_EPS, num_queries=NUM_QUERIES, events=(),
+            scheduler=api.SchedulerSpec(name="none"),
+            workload=api.WorkloadSpec(name="bursty",
+                                      kwargs=workload_kwargs),
+            admission=api.AdmissionSpec(name=admission,
+                                        kwargs=admission_kwargs)))
         p99[admission] = t.tail_latency(99)
         attain[admission] = t.slo_attainment
         rows.append(trace_row("pipeline", admission, "static", t))
@@ -129,21 +129,16 @@ def main() -> int:
         ("none", {}, None),
         ("slo_shed", dict(slo=slo), "load_profile"),
     ):
-        ct = simulate_cluster(
-            db,
-            NUM_EPS,
-            NUM_REPLICAS,
-            scheduler="odin",
-            alpha=10,
-            num_queries=NUM_QUERIES,
+        ct = api.run(api.RunSpec(
+            db=db, num_eps=NUM_EPS, num_queries=NUM_QUERIES,
             events=fleet_events,
-            router="odin_aware",
-            workload="bursty",
-            workload_kwargs=fleet_wl,
-            admission=admission,
-            admission_kwargs=admission_kwargs,
-            autoscaler=autoscaler,
-        )
+            scheduler=api.SchedulerSpec(name="odin", alpha=10),
+            workload=api.WorkloadSpec(name="bursty", kwargs=fleet_wl),
+            admission=api.AdmissionSpec(name=admission,
+                                        kwargs=admission_kwargs),
+            cluster=api.ClusterSpec(num_replicas=NUM_REPLICAS,
+                                    router="odin_aware",
+                                    autoscaler=autoscaler)))
         fleet = ct.fleet
         fleet_p99[admission] = fleet.tail_latency(99)
         fleet_active[admission] = ct.summary()["mean_active_replicas"]

@@ -35,6 +35,13 @@ Each scale row runs in its own subprocess (``--scale-row``): ru_maxrss
 is a process-lifetime high-water mark, so an in-process measurement
 would inherit whichever earlier row peaked highest.
 
+A fourth comparison — the ``sharding`` section — re-runs the
+scalar-vs-chunked pair with a device mesh armed (docs/SHARDING.md): the
+``bursty_sharding`` row drives the mesh-event smoke scenario through
+both paths and gates that the chunked fast path stays bit-identical
+with slice moves and mesh events in play, and that the mesh-aware
+explorer commits at least one resize.
+
 A third comparison — the ``batching`` section — runs a bursty
 mixed-length open-loop workload through drain-mode and continuous
 formed dispatch (docs/WORKLOADS.md "Continuous batching & length
@@ -61,8 +68,10 @@ import subprocess
 import sys
 import time
 
+import numpy as np
+
 from benchmarks.common import RESULTS_DIR, db_for, run_matrix
-from repro.core import simulate
+from repro.core import InterferenceEvent, generate_events, simulate
 
 NUM_QUERIES = int(os.environ.get("REPRO_BENCH_QUERIES", "2000"))
 REPEATS = int(os.environ.get("REPRO_BENCH_REPEATS", "3"))
@@ -176,6 +185,77 @@ def bench_batching() -> dict:
     }
 
 
+def bench_sharding() -> dict:
+    """Scalar vs chunked fast path with a device mesh armed.
+
+    The ``bursty_sharding`` row runs the docs/SHARDING.md smoke scenario
+    (vgg16 over an 8-device mesh with heavy collective costs, one
+    ``kind="mesh"`` event inflating collective time mid-run) under a
+    bursty arrival process, through both the scalar per-query tick and
+    the chunked fast path.  The chunked path must cut steady chunks on
+    mesh-event edges exactly like the scalar tick: the whole mesh
+    surface (configs, slice assignments, collective fractions, resize
+    count) stays bit-identical, latencies within the open-loop ledger
+    tolerance (tests/test_batching.py: the vectorized arrival cumsum
+    reorders float additions) — and the mesh-aware explorer must commit
+    at least one slice move.
+    """
+    from repro import api
+
+    db = db_for("vgg16")
+    n = 800
+    mesh = api.MeshSpec(devices=8, coll_cost=0.5)
+    evs = list(generate_events(n, 4, 12, 20, 10, seed=3))
+    evs.append(InterferenceEvent(start=n // 3, duration=n // 4, ep=0,
+                                 scenario=0, kind="mesh", factor=6.0))
+    cap = api.run(api.RunSpec(
+        db=db, num_eps=4, num_queries=10, events=(), mesh=mesh,
+        scheduler=api.SchedulerSpec(name="none"))).peak_throughput
+    base = api.RunSpec(
+        db=db, num_eps=4, num_queries=n, events=evs, mesh=mesh,
+        scheduler=api.SchedulerSpec(name="odin"),
+        workload=api.WorkloadSpec(
+            name="bursty",
+            kwargs=dict(burst_rate=2.0 * cap, base_rate=0.5 * cap,
+                        mean_burst=3000.0, mean_gap=5000.0, seed=7)))
+
+    walls = {False: [], True: []}
+    traces = {}
+    for _ in range(REPEATS):
+        for chunking in (False, True):
+            t0 = time.perf_counter()
+            t = api.run(base.replace(
+                batching=api.BatchingSpec(chunking=chunking)))
+            walls[chunking].append(time.perf_counter() - t0)
+            traces[chunking] = t
+    scalar_s, chunked_s = min(walls[False]), min(walls[True])
+    a, b = traces[False], traces[True]
+    identical = (
+        a.mesh_trace == b.mesh_trace
+        and a.configs_trace == b.configs_trace
+        and bool(np.array_equal(a.collective_fracs, b.collective_fracs))
+        and a.num_mesh_resizes == b.num_mesh_resizes
+        and a.num_rebalances == b.num_rebalances
+        and bool(np.allclose(a.latencies, b.latencies, rtol=1e-9,
+                             atol=0.0)))
+    s = b.summary()
+    return {
+        "row": "bursty_sharding",
+        "num_queries": n,
+        "workload": "bursty",
+        "mesh_devices": mesh.devices,
+        "coll_cost": mesh.coll_cost,
+        "mesh_factor": 6.0,
+        "scalar_s": scalar_s,
+        "chunked_s": chunked_s,
+        "speedup": scalar_s / chunked_s,
+        "paths_consistent": identical,
+        "num_mesh_resizes": b.num_mesh_resizes,
+        "mean_collective_frac": s["mean_collective_frac"],
+        "p99_latency": s["p99_latency_s"],
+    }
+
+
 def _peak_rss_mb() -> float:
     """Process peak resident set size, MB (ru_maxrss is KB on Linux)."""
     return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
@@ -244,6 +324,7 @@ def main() -> int:
 
     results = [bench_row(*row) for row in ROWS]
     batching = bench_batching()
+    sharding = bench_sharding()
     scale = (_bench_scale_subprocess(SCALE_QUERIES, "dense")
              if SCALE_QUERIES > 0 else None)
     scale_streaming = (_bench_scale_subprocess(STREAM_QUERIES, "streaming")
@@ -261,6 +342,7 @@ def main() -> int:
                  "batch_min_ratio": BATCH_MIN_RATIO},
         "rows": results,
         "batching": batching,
+        "sharding": sharding,
         "scale": scale,
         "scale_streaming": scale_streaming,
     }
@@ -298,6 +380,18 @@ def main() -> int:
         failed.append(f"{b['row']}: continuous p99 queue delay "
                       f"{b['continuous']['p99_queue_delay']:.1f} worse "
                       f"than drain {b['drain']['p99_queue_delay']:.1f}")
+    sh = sharding
+    print(f"{sh['row']:12s} mesh {sh['mesh_devices']}dev: "
+          f"scalar {sh['scalar_s']:6.2f}s  "
+          f"chunked {sh['chunked_s']:6.2f}s  "
+          f"speedup {sh['speedup']:5.1f}x  "
+          f"resizes {sh['num_mesh_resizes']:3d}  "
+          f"{'consistent' if sh['paths_consistent'] else 'DIVERGED'}")
+    if not sh["paths_consistent"]:
+        failed.append(f"{sh['row']}: mesh-armed chunked path diverged "
+                      f"from the scalar tick")
+    if sh["num_mesh_resizes"] < 1:
+        failed.append(f"{sh['row']}: odin committed no mesh resize")
     for row in (scale, scale_streaming):
         if row is None:
             continue

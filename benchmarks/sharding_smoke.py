@@ -1,0 +1,117 @@
+"""CI sharding smoke: a mesh-contention episode on an 8-device mesh.
+
+Runs the docs/SHARDING.md acceptance scenario through the spec path
+(docs/API.md): a vgg16 pipeline sharded over ``MeshSpec(devices=8,
+coll_cost=0.5)`` — collective costs heavy enough that slice placement
+matters — under the paper's interference timeline plus one ``kind="mesh"``
+event inflating collective time 6x mid-run.  Three schedulers:
+
+* ``odin``  — (boundary, slice) moves: the mesh-aware explorer,
+* ``lls``   — boundary-only moves on the fixed balanced assignment,
+* ``none``  — the static balanced config.
+
+Writes one summary row per scheduler to
+``results/benchmarks/sharding_smoke.csv`` and fails unless slicing
+pays off:
+
+* odin p99 <= lls p99 (slice moves never lose to boundary-only),
+* odin p99 <  static p99 (strict: the episode must be mitigated),
+* odin committed at least one mesh resize, and
+* the odin run is deterministic (a rerun is bit-identical).
+
+    REPRO_SHARDING_QUERIES=600 PYTHONPATH=src python -m benchmarks.sharding_smoke
+"""
+from __future__ import annotations
+
+import csv
+import math
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, db_for
+from repro import api
+from repro.core import InterferenceEvent, generate_events
+
+NUM_QUERIES = int(os.environ.get("REPRO_SHARDING_QUERIES", "600"))
+NUM_EPS = 4
+MESH = api.MeshSpec(devices=8, coll_cost=0.5)
+MESH_FACTOR = 6.0
+
+SCHEDULERS = ("odin", "lls", "none")
+
+
+def mesh_events(num_queries: int):
+    """The paper's timeline plus one mesh-contention episode mid-run."""
+    evs = list(generate_events(num_queries, NUM_EPS, 12, 20, 10, seed=3))
+    evs.append(InterferenceEvent(start=num_queries // 3,
+                                 duration=num_queries // 4, ep=0,
+                                 scenario=0, kind="mesh",
+                                 factor=MESH_FACTOR))
+    return evs
+
+
+def main() -> int:
+    db = db_for("vgg16")
+    base = api.RunSpec(db=db, num_eps=NUM_EPS, num_queries=NUM_QUERIES,
+                       events=mesh_events(NUM_QUERIES), mesh=MESH)
+
+    rows, p99, traces = [], {}, {}
+    for sched in SCHEDULERS:
+        t = api.run(base.replace(
+            scheduler=api.SchedulerSpec(name=sched)))
+        traces[sched] = t
+        s = t.summary()
+        p99[sched] = float(np.percentile(t.latencies, 99))
+        rows.append({
+            "scheduler": sched,
+            "num_queries": NUM_QUERIES,
+            "mesh_devices": t.mesh_devices,
+            "p50_latency": float(np.percentile(t.latencies, 50)),
+            "p99_latency": p99[sched],
+            "steady_throughput": s["steady_throughput_qps"],
+            "num_rebalances": t.num_rebalances,
+            "num_mesh_resizes": t.num_mesh_resizes,
+            "mean_collective_frac": s["mean_collective_frac"],
+            "p99_collective_frac": s["p99_collective_frac"],
+        })
+        print(f"{sched:6s} p99 {p99[sched]:10.2f}  "
+              f"rebalances {t.num_rebalances:3d}  "
+              f"mesh resizes {t.num_mesh_resizes:3d}  "
+              f"coll frac {s['mean_collective_frac']:.3f}")
+
+    rerun = api.run(base.replace(scheduler=api.SchedulerSpec(name="odin")))
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "sharding_smoke.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+
+    failed = []
+    bad = [(r["scheduler"], k) for r in rows for k, v in r.items()
+           if isinstance(v, float) and not math.isfinite(v)]
+    if bad:
+        failed.append(f"non-finite columns: {bad}")
+    if p99["odin"] > p99["lls"]:
+        failed.append(f"(boundary, slice) p99 {p99['odin']:.2f} > "
+                      f"boundary-only p99 {p99['lls']:.2f}")
+    if not p99["odin"] < p99["none"]:
+        failed.append(f"odin p99 {p99['odin']:.2f} does not beat "
+                      f"static p99 {p99['none']:.2f}")
+    if traces["odin"].num_mesh_resizes < 1:
+        failed.append("odin committed no mesh resize")
+    if not (np.array_equal(rerun.latencies, traces["odin"].latencies)
+            and rerun.mesh_trace == traces["odin"].mesh_trace):
+        failed.append("odin rerun is not bit-identical")
+    if failed:
+        print("sharding_smoke FAILED: " + "; ".join(failed))
+        return 1
+    print(f"sharding_smoke OK -> {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

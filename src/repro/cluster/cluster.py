@@ -163,13 +163,11 @@ class Cluster:
         # Faults + rebatching compose: a failure inside a flushed batch
         # is attributed to a single query (fault-window chunks are
         # single-query by construction) and handled per
-        # ``RetrySpec.batch_policy`` (docs/FAULTS.md).  Hedging still
-        # needs per-query dispatch — a buffered batch has no single
-        # "predicted-slow dispatch" to duplicate.
-        if self.hedge_after is not None and self.max_batch > 1:
-            raise ValueError("fleet rebatching (max_batch > 1) is not "
-                             "supported with hedging: hedged dispatch "
-                             "duplication is per-query")
+        # ``RetrySpec.batch_policy``; with hedging on, whole buffered
+        # dispatches are duplicated (docs/FAULTS.md "Hedged batched
+        # dispatch") — the loser replica is charged the dispatch's full
+        # span as wasted work, so the hedge/rebatch composition keeps
+        # honest occupancy accounting.
         # QoS tiers (repro.qos, docs/QOS.md): the spec is resolved into
         # a fleet TierPlan per run (stamping needs the run length).
         self._tiers_spec = tiers
@@ -459,10 +457,49 @@ class Cluster:
             pend.clear()
             pend_q.clear()
             pend_r = -1
+            # Whole-dispatch hedging (docs/FAULTS.md "Hedged batched
+            # dispatch"): when the buffered dispatch's predicted wait
+            # exceeds ``hedge_after``, duplicate the *whole* batch on
+            # the least-loaded healthy peer; the predicted-faster copy
+            # executes (first one wins) and the loser is charged the
+            # dispatch's span as wasted work — the batched analogue of
+            # serve_one's per-query hedge.
+            hedge_loser = None
+            if (hedge_after is not None and batch
+                    and runners[r].free_at - batch[0][1] > hedge_after):
+                t0 = batch[0][1]
+                cand = fleet_views(t0)
+                others = [v for v in cand
+                          if v.index != r and tracker.healthy(v.index, t0)]
+                if others:
+                    vr = next(v for v in cand if v.index == r)
+                    alt = min(others, key=lambda v: (max(v.free_at, t0),
+                                                     v.index))
+                    prim_eta = max(vr.free_at, t0) + est_service(vr)
+                    alt_eta = max(alt.free_at, t0) + est_service(alt)
+                    if alt_eta < prim_eta:
+                        hedge_loser, r = r, alt.index
+                    else:
+                        hedge_loser = alt.index
             attempt = 0                      # shared budget ("all")
             floor: Optional[float] = None
             while batch:
+                t0 = batch[0][1]
                 comps, err = flush_batch(r, batch, floor)
+                if hedge_loser is not None:
+                    if err is None and comps:
+                        # The loser would have held its head from its
+                        # own start until the winner's drain — charge
+                        # that span as wasted (cancelled) occupancy.
+                        loser_start = max(runners[hedge_loser].free_at,
+                                          t0)
+                        charge = max(0.0, comps[-1] - loser_start)
+                        if charge > 0.0:
+                            runners[hedge_loser].charge_occupancy(t0,
+                                                                  charge)
+                        runners[r].num_hedged += len(comps)
+                    # Hedge abandoned on failure, like serve_one's.
+                    hedge_loser = None
                 batch = batch[len(comps):]
                 if err is None:
                     return
@@ -888,7 +925,7 @@ class Cluster:
                             downgrade_tier_counts=downgrade_tier_counts)
 
 
-def run_cluster(replicas: Sequence[Replica],
+def _run_cluster_impl(replicas: Sequence[Replica],
                 num_queries: int,
                 workload: Union[str, Workload, None] = "closed",
                 workload_kwargs: Optional[dict] = None,
@@ -926,3 +963,57 @@ def run_cluster(replicas: Sequence[Replica],
                        scheduler_name=scheduler_name,
                        trace_mode=trace_mode, metrics_sink=metrics_sink,
                        sink_interval=sink_interval)
+
+
+def run_cluster(replicas: Sequence[Replica],
+                num_queries: int,
+                workload: Union[str, Workload, None] = "closed",
+                workload_kwargs: Optional[dict] = None,
+                router: Union[str, Router, None] = "round_robin",
+                router_kwargs: Optional[dict] = None,
+                scheduler_name: str = "",
+                admission: Union[str, object, None] = None,
+                admission_kwargs: Optional[dict] = None,
+                autoscaler: Union[str, object, None] = None,
+                autoscaler_kwargs: Optional[dict] = None,
+                max_batch: int = 1,
+                trace_mode: str = "dense",
+                metrics_sink=None,
+                sink_interval: Optional[int] = None,
+                retries: Union[RetrySpec, int, dict, None] = None,
+                hedge_after: Optional[float] = None,
+                health_kwargs: Optional[dict] = None,
+                when_all_unhealthy: str = "wait",
+                tiers=None,
+                tiers_kwargs: Optional[dict] = None
+                ) -> Union[ClusterTrace, StreamingClusterTrace]:
+    """Serve one fleet window over pre-built :class:`Replica`\\ s.
+
+    Thin wrapper over the unified :class:`repro.api.RunSpec` path (one
+    declaration, one dispatcher — docs/API.md); the kwargs here map
+    1:1 onto spec fields and new options land on the spec instead of
+    this signature.  See :func:`_run_cluster_impl` for the full
+    kwarg-level documentation.
+    """
+    from repro import api
+    spec = api.RunSpec(
+        replicas=replicas, num_queries=num_queries,
+        scheduler=api.SchedulerSpec(name=(scheduler_name or "")),
+        workload=api.WorkloadSpec(name=workload, kwargs=workload_kwargs),
+        admission=api.AdmissionSpec(name=admission,
+                                    kwargs=admission_kwargs),
+        faults=api.FaultsSpec(hedge_after=hedge_after,
+                              health_kwargs=health_kwargs,
+                              when_all_unhealthy=when_all_unhealthy),
+        retries=api.RetriesSpec(policy=retries),
+        tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+        telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                    metrics_sink=metrics_sink,
+                                    sink_interval=sink_interval),
+        cluster=api.ClusterSpec(num_replicas=len(replicas),
+                                router=router,
+                                router_kwargs=router_kwargs,
+                                autoscaler=autoscaler,
+                                autoscaler_kwargs=autoscaler_kwargs,
+                                max_batch=max_batch))
+    return api.run(spec)

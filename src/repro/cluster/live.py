@@ -25,12 +25,12 @@ from __future__ import annotations
 
 from typing import Callable, List, Optional, Sequence, Union
 
-from repro.cluster.cluster import Replica, run_cluster
+from repro.cluster.cluster import Replica, _run_cluster_impl
 from repro.cluster.trace import ClusterTrace
 from repro.workloads.base import Workload
 
 
-def serve_cluster(engines: Sequence,
+def _serve_cluster_impl(engines: Sequence,
                   queries: Sequence,
                   schedules: Union[Callable, Sequence[Callable]],
                   workload: Union[str, Workload, None] = "closed",
@@ -151,7 +151,7 @@ def serve_cluster(engines: Sequence,
                                 on_assign=on_assign,
                                 on_recover=on_recover))
 
-    trace = run_cluster(replicas, len(queries), workload=workload,
+    trace = _run_cluster_impl(replicas, len(queries), workload=workload,
                         workload_kwargs=workload_kwargs, router=router,
                         router_kwargs=router_kwargs,
                         scheduler_name=getattr(engines[0], "scheduler", ""),
@@ -171,3 +171,59 @@ def serve_cluster(engines: Sequence,
     for rep_trace, eng in zip(trace.replicas, engines):
         rep_trace.peak_throughput = eng.estimated_peak_throughput()
     return trace
+
+
+def serve_cluster(engines: Sequence,
+                  queries: Sequence,
+                  schedules: Union[Callable, Sequence[Callable]],
+                  workload: Union[str, Workload, None] = "closed",
+                  workload_kwargs: Optional[dict] = None,
+                  router: Union[str, object, None] = "round_robin",
+                  router_kwargs: Optional[dict] = None,
+                  admission: Union[str, object, None] = None,
+                  admission_kwargs: Optional[dict] = None,
+                  autoscaler: Union[str, object, None] = None,
+                  autoscaler_kwargs: Optional[dict] = None,
+                  max_batch: int = 1,
+                  trace_mode: str = "dense",
+                  metrics_sink=None,
+                  sink_interval: Optional[int] = None,
+                  faults=None,
+                  retries=None,
+                  hedge_after: Optional[float] = None,
+                  health_kwargs: Optional[dict] = None,
+                  when_all_unhealthy: str = "wait",
+                  pools: Optional[Sequence[str]] = None,
+                  tiers=None,
+                  tiers_kwargs: Optional[dict] = None) -> ClusterTrace:
+    """Serve fleet ``queries`` through N live engines behind a router.
+
+    Thin wrapper over the unified :class:`repro.api.RunSpec` path (one
+    declaration, one dispatcher — docs/API.md); the kwargs here map
+    1:1 onto spec fields and new options land on the spec instead of
+    this signature.  See :func:`_serve_cluster_impl` for the full
+    kwarg-level documentation.
+    """
+    from repro import api
+    spec = api.RunSpec(
+        engines=engines, queries=queries, schedule=schedules,
+        workload=api.WorkloadSpec(name=workload, kwargs=workload_kwargs),
+        admission=api.AdmissionSpec(name=admission,
+                                    kwargs=admission_kwargs),
+        faults=api.FaultsSpec(plan=faults, hedge_after=hedge_after,
+                              health_kwargs=health_kwargs,
+                              when_all_unhealthy=when_all_unhealthy),
+        retries=api.RetriesSpec(policy=retries),
+        tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+        telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                    metrics_sink=metrics_sink,
+                                    sink_interval=sink_interval),
+        cluster=api.ClusterSpec(num_replicas=len(engines),
+                                router=router,
+                                router_kwargs=router_kwargs,
+                                autoscaler=autoscaler,
+                                autoscaler_kwargs=autoscaler_kwargs,
+                                max_batch=max_batch,
+                                pools=(tuple(pools) if pools is not None
+                                       else None)))
+    return api.run(spec)

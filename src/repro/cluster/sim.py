@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Union
 
-from repro.cluster.cluster import Replica, run_cluster
+from repro.cluster.cluster import Replica, _run_cluster_impl
 from repro.cluster.trace import ClusterTrace
 from repro.core.database import LayerDatabase
 from repro.core.events import InterferenceEvent, events_for_replica
@@ -33,7 +33,7 @@ from repro.workloads.base import Workload
 from repro.workloads.runner import resolve_workload
 
 
-def simulate_cluster(db: LayerDatabase,
+def _simulate_cluster_impl(db: LayerDatabase,
                      num_eps: int,
                      num_replicas: int,
                      scheduler: str = "odin",
@@ -217,7 +217,7 @@ def simulate_cluster(db: LayerDatabase,
                                 pool=pools[r],
                                 on_assign=on_assign))
 
-    return run_cluster(replicas, num_queries, workload=workload,
+    return _run_cluster_impl(replicas, num_queries, workload=workload,
                        workload_kwargs=workload_kwargs, router=router,
                        router_kwargs=router_kwargs,
                        scheduler_name=scheduler,
@@ -232,3 +232,73 @@ def simulate_cluster(db: LayerDatabase,
                        health_kwargs=health_kwargs,
                        when_all_unhealthy=when_all_unhealthy,
                        tiers=tiers, tiers_kwargs=tiers_kwargs)
+
+
+def simulate_cluster(db: LayerDatabase,
+                     num_eps: int,
+                     num_replicas: int,
+                     scheduler: str = "odin",
+                     router: Union[str, object, None] = "round_robin",
+                     alpha: int = 10,
+                     num_queries: int = 4000,
+                     events: Optional[Sequence[InterferenceEvent]] = None,
+                     rel_threshold: Optional[float] = None,
+                     initial_config: Optional[List[int]] = None,
+                     workload: Union[str, Workload, None] = "closed",
+                     workload_kwargs: Optional[dict] = None,
+                     events_time_indexed: bool = False,
+                     router_kwargs: Optional[dict] = None,
+                     admission: Union[str, object, None] = None,
+                     admission_kwargs: Optional[dict] = None,
+                     autoscaler: Union[str, object, None] = None,
+                     autoscaler_kwargs: Optional[dict] = None,
+                     max_batch: int = 1,
+                     trace_mode: str = "dense",
+                     metrics_sink=None,
+                     sink_interval: Optional[int] = None,
+                     faults=None,
+                     retries=None,
+                     hedge_after: Optional[float] = None,
+                     health_kwargs: Optional[dict] = None,
+                     when_all_unhealthy: str = "wait",
+                     databases: Optional[Sequence[LayerDatabase]] = None,
+                     pools: Optional[Sequence[str]] = None,
+                     tiers=None,
+                     tiers_kwargs: Optional[dict] = None
+                     ) -> ClusterTrace:
+    """Run one (scheduler, router, workload, events) fleet simulation.
+
+    Thin wrapper over the unified :class:`repro.api.RunSpec` path (one
+    declaration, one dispatcher — docs/API.md); the kwargs here map
+    1:1 onto spec fields and new options land on the spec instead of
+    this signature.  See :func:`_simulate_cluster_impl` for the full
+    kwarg-level documentation.
+    """
+    from repro import api
+    spec = api.RunSpec(
+        db=db, num_eps=num_eps, num_queries=num_queries,
+        events=events, events_time_indexed=events_time_indexed,
+        scheduler=api.SchedulerSpec(name=scheduler, alpha=alpha,
+                                    rel_threshold=rel_threshold,
+                                    initial_config=initial_config),
+        workload=api.WorkloadSpec(name=workload, kwargs=workload_kwargs),
+        admission=api.AdmissionSpec(name=admission,
+                                    kwargs=admission_kwargs),
+        faults=api.FaultsSpec(plan=faults, hedge_after=hedge_after,
+                              health_kwargs=health_kwargs,
+                              when_all_unhealthy=when_all_unhealthy),
+        retries=api.RetriesSpec(policy=retries),
+        tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+        telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                    metrics_sink=metrics_sink,
+                                    sink_interval=sink_interval),
+        cluster=api.ClusterSpec(num_replicas=num_replicas,
+                                router=router,
+                                router_kwargs=router_kwargs,
+                                autoscaler=autoscaler,
+                                autoscaler_kwargs=autoscaler_kwargs,
+                                max_batch=max_batch,
+                                pools=(tuple(pools) if pools is not None
+                                       else None),
+                                databases=databases))
+    return api.run(spec)

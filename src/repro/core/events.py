@@ -57,6 +57,15 @@ class InterferenceEvent:
     #: Cluster replica this event targets; ``None`` = every replica
     #: (and is the only sensible value for single-pipeline runs).
     replica: Optional[int] = None
+    #: Interference class: ``"ep"`` (the default — a compute stressor
+    #: landing on one EP, the paper's model) or ``"mesh"`` — contention
+    #: on the *collectives* of a sharded run (docs/SHARDING.md): while
+    #: active, every stage's collective time is inflated by ``factor``.
+    #: Mesh events ignore ``ep``/``scenario`` (use 0 for both).
+    kind: str = "ep"
+    #: Collective-time inflation while a ``kind="mesh"`` event is
+    #: active (>= 1.0); ignored for ``kind="ep"`` events.
+    factor: float = 2.0
 
     @property
     def end(self) -> float:
@@ -143,8 +152,20 @@ class EventTimeline:
         ``time_indexed`` — ``q`` (0 = no interference)."""
         best: List[Optional[tuple]] = [None] * self.num_eps
         for ev in self.events:
-            if ev.start <= q < ev.end:
+            if ev.kind == "ep" and ev.start <= q < ev.end:
                 key = (self._rank(ev.scenario), ev.scenario)
                 if best[ev.ep] is None or key > best[ev.ep][0]:
                     best[ev.ep] = (key, ev.scenario)
         return [0 if b is None else b[1] for b in best]
+
+    def coll_factor_at(self, q: float) -> float:
+        """Collective-time inflation at ``q``: the max ``factor`` over
+        the active ``kind="mesh"`` events (worst stressor dominates,
+        the same overlap rule ``scenarios_at`` uses), 1.0 when none is
+        active.  Mesh-event edges participate in :meth:`next_change`,
+        so chunked runs never span a factor change."""
+        factor = 1.0
+        for ev in self.events:
+            if ev.kind == "mesh" and ev.start <= q < ev.end:
+                factor = max(factor, float(ev.factor))
+        return factor

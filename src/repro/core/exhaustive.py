@@ -65,6 +65,60 @@ def optimal_partition(db: LayerDatabase,
     return config, (1.0 / bottleneck if bottleneck > 0 else float("inf"))
 
 
+def optimal_partition_mesh(db: LayerDatabase,
+                           scenarios: Sequence[int],
+                           num_stages: int,
+                           mesh: "MeshSpec",
+                           coll_factor: float = 1.0
+                           ) -> Tuple[List[int], Tuple[int, ...], float]:
+    """Min-bottleneck (boundary, slice) optimum (docs/SHARDING.md).
+
+    Extends :func:`optimal_partition`'s action space with the mesh
+    axis: enumerate every composition of ``mesh.devices`` into
+    ``num_stages`` positive slices (C(D-1, S-1) of them), run the same
+    boundary DP per composition under the sharded cost model — stage
+    time ``(pref[hi] - pref[lo]) / m_i + (cpref[hi] - cpref[lo]) *
+    ring(m_i) * coll_factor`` — and keep the global best.  Ties break
+    toward the first composition in lexicographic order (deterministic).
+    Returns ``(config, assignment, throughput)``.
+    """
+    from repro.core.mesh import assignments, ring_factor
+
+    m = db.num_layers
+    N = num_stages
+    prefix = db.prefix_times()
+    cpref = mesh.coll_prefix(m)
+
+    INF = float("inf")
+    invalid = _invalid_mask(m)
+    best = None  # (bottleneck, config, assignment)
+    for assign in assignments(mesh.devices, N):
+        dp = np.full((N + 1, m + 1), INF)
+        choice = np.zeros((N + 1, m + 1), dtype=np.int64)
+        dp[0, 0] = 0.0
+        for i in range(1, N + 1):
+            pref = prefix[scenarios[i - 1]]
+            ring = ring_factor(assign[i - 1]) * float(coll_factor)
+            stage = ((pref[:, None] - pref[None, :]) / float(assign[i - 1])
+                     + (cpref[:, None] - cpref[None, :]) * ring)
+            cost = np.maximum(dp[i - 1][None, :], stage)
+            cost[invalid] = INF
+            dp[i] = cost.min(axis=1)
+            choice[i] = cost.argmin(axis=1)
+        bottleneck = dp[N, m]
+        if best is None or bottleneck < best[0]:
+            config = [0] * N
+            j = m
+            for i in range(N, 0, -1):
+                lo = int(choice[i, j])
+                config[i - 1] = j - lo
+                j = lo
+            best = (bottleneck, config, assign)
+    bottleneck, config, assign = best
+    return (config, assign,
+            1.0 / bottleneck if bottleneck > 0 else float("inf"))
+
+
 def brute_force_partition(db: LayerDatabase,
                           scenarios: Sequence[int],
                           num_stages: int) -> Tuple[List[int], float]:

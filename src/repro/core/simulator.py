@@ -32,7 +32,14 @@ from repro.core.events import (  # noqa: F401  (re-exported, back-compat)
     InterferenceEvent,
     generate_events,
 )
-from repro.core.exhaustive import optimal_partition
+from repro.core.exhaustive import optimal_partition, optimal_partition_mesh
+from repro.core.mesh import (
+    MeshSpec,
+    balanced_assignment,
+    collective_frac as _mesh_coll_frac,
+    mesh_stage_times,
+    resolve_mesh,
+)
 from repro.core.pipeline_state import (
     balanced_config,
     pipelined_latency,
@@ -47,21 +54,56 @@ from repro.workloads import (
     PipelineTrace,
     QueryRecord,
     Workload,
-    run_pipeline,
 )
+from repro.workloads.runner import _run_pipeline_impl
 from repro.workloads.base import DispatchRecord
 from repro.workloads.batching import resolve_batching
 
 
 class SimTimeSource:
-    """StageTimeSource backed by the database + current per-EP scenarios."""
+    """StageTimeSource backed by the database + current per-EP scenarios.
 
-    def __init__(self, db: LayerDatabase, scenarios):
+    Mesh-aware (docs/SHARDING.md): when built with a
+    :class:`~repro.core.mesh.MeshSpec`, ``stage_times(config,
+    assignment)`` prices the sharded cost model — explorers pass trial
+    assignments explicitly; single-argument calls (detectors, latency
+    estimators) use the *committed* :attr:`assignment` the runtime
+    syncs onto this source.  ``mesh=None`` (or no committed assignment
+    yet) returns the unsharded compute times bit-identically.
+    """
+
+    def __init__(self, db: LayerDatabase, scenarios,
+                 mesh: Optional[MeshSpec] = None):
         self.db = db
         self.scenarios = list(scenarios)
+        self.mesh = mesh
+        self.assignment = None       # committed slices; the runtime syncs
+        self.coll_factor = 1.0       # mesh-event inflation (begin_query)
+        self._layer_costs = (mesh.layer_costs(db.num_layers)
+                             if mesh is not None else None)
 
-    def stage_times(self, config) -> np.ndarray:
-        return self.db.stage_times(config, self.scenarios)
+    def stage_times(self, config, assignment=None) -> np.ndarray:
+        compute = self.db.stage_times(config, self.scenarios)
+        if self.mesh is None:
+            return compute
+        a = assignment if assignment is not None else self.assignment
+        if a is None:
+            return compute
+        return mesh_stage_times(compute, config, a, self.mesh,
+                                self.coll_factor,
+                                layer_costs=self._layer_costs)
+
+    def collective_frac(self, config, assignment=None) -> float:
+        """Bottleneck stage's collective share (0.0 unsharded)."""
+        if self.mesh is None:
+            return 0.0
+        a = assignment if assignment is not None else self.assignment
+        if a is None:
+            return 0.0
+        compute = self.db.stage_times(config, self.scenarios)
+        return _mesh_coll_frac(compute, config, a, self.mesh,
+                               self.coll_factor,
+                               layer_costs=self._layer_costs)
 
 
 def _dispatch_throughput(spans: np.ndarray) -> float:
@@ -125,14 +167,16 @@ class DatabaseQueryExecutor:
 
     def __init__(self, db: LayerDatabase, num_eps: int,
                  events: List[InterferenceEvent], oracle,
-                 time_indexed: bool = False):
+                 time_indexed: bool = False,
+                 mesh: Optional[MeshSpec] = None):
         self.db = db
         self.num_eps = num_eps
+        self.mesh = mesh
         self.timeline = EventTimeline(events, num_eps,
                                       severity=db.scenario_severities(),
                                       time_indexed=time_indexed)
         self.scenarios = [0] * num_eps
-        self.source = SimTimeSource(db, self.scenarios)
+        self.source = SimTimeSource(db, self.scenarios, mesh=mesh)
         self._oracle = oracle    # tuple(scenarios) -> (config, throughput)
         self._arrivals = None    # set by the run loop (time-indexed only)
         self.former = None       # BatchFormer (configure_batching)
@@ -171,9 +215,12 @@ class DatabaseQueryExecutor:
             return 1.0
         return float(self._padded[q]) / self.length_ref
 
-    def _dispatch_times(self, config, lfrac: float) -> np.ndarray:
-        """Per-stage solo dispatch times under the batching cost model."""
-        times = self.source.stage_times(config)
+    def _dispatch_times(self, config, lfrac: float,
+                        assignment=None) -> np.ndarray:
+        """Per-stage solo dispatch times under the batching cost model.
+        On sharded runs the stage times already carry the committed (or
+        explicitly passed trial) assignment's cost model."""
+        times = self.source.stage_times(config, assignment)
         return np.where(times > 0.0,
                         self.batch_overhead + times * lfrac, 0.0)
 
@@ -195,7 +242,7 @@ class DatabaseQueryExecutor:
 
     def begin_dispatch(self, q0: int, step: RuntimeStep):
         """Start forming a dispatch headed by query ``q0``."""
-        return _SimDispatchBuilder(self, step.config)
+        return _SimDispatchBuilder(self, step.config, step.mesh)
 
     def set_arrivals(self, arrivals) -> None:
         """Run-loop hook: the per-query arrival times (``None`` for a
@@ -225,10 +272,13 @@ class DatabaseQueryExecutor:
         return t
 
     def begin_query(self, q: int) -> SimTimeSource:
-        new_scen = self.timeline.scenarios_at(self._clock(q))
+        clock = self._clock(q)
+        new_scen = self.timeline.scenarios_at(clock)
         if new_scen != self.scenarios:
             self.scenarios[:] = new_scen
             self.source.scenarios[:] = new_scen
+        if self.mesh is not None:
+            self.source.coll_factor = self.timeline.coll_factor_at(clock)
         return self.source
 
     def steady_horizon(self, q: int) -> int:
@@ -251,33 +301,48 @@ class DatabaseQueryExecutor:
             # group-synchronous, so the head is held for the full
             # drain.  Serial trials traverse the same stages (the
             # drain wait is the run loop's business).
-            tp = self._dispatch_times(step.config, self._lfrac(q))
+            tp = self._dispatch_times(step.config, self._lfrac(q),
+                                      step.mesh)
+            cf = (self.source.collective_frac(step.config, step.mesh)
+                  if self.mesh is not None else 0.0)
             return QueryRecord(service_latency=float(np.sum(tp)),
-                               throughput=_dispatch_throughput(tp))
-        times = self.source.stage_times(step.config)
+                               throughput=_dispatch_throughput(tp),
+                               collective_frac=cf)
+        times = self.source.stage_times(step.config, step.mesh)
         latency = (serial_latency(times) if step.serial
                    else pipelined_latency(times))
+        cf = (self.source.collective_frac(step.config, step.mesh)
+              if self.mesh is not None else 0.0)
         return QueryRecord(service_latency=latency,
-                           throughput=throughput(times))
+                           throughput=throughput(times),
+                           collective_frac=cf)
 
     def execute_many(self, q0: int, steps) -> BatchRecord:
         # Steady chunks share one (config, scenario-segment): one
         # database gather serves every query in the chunk, broadcast
         # to the chunk without materializing per-query copies.
         n = len(steps)
+        cfs = None
+        if self.mesh is not None:
+            cfs = np.broadcast_to(
+                self.source.collective_frac(steps[0].config,
+                                            steps[0].mesh), n)
         if self.former is not None:
             # Chunks under a former are join-free solo stretches at one
             # padded length (the run loop cuts at bucket changes and
             # join points), so one dispatch profile broadcasts — the
             # identical floats a size-1 dispatch builder would report.
-            tp = self._dispatch_times(steps[0].config, self._lfrac(q0))
+            tp = self._dispatch_times(steps[0].config, self._lfrac(q0),
+                                      steps[0].mesh)
             return BatchRecord(
                 service_latencies=np.broadcast_to(float(np.sum(tp)), n),
-                throughputs=np.broadcast_to(_dispatch_throughput(tp), n))
-        times = self.source.stage_times(steps[0].config)
+                throughputs=np.broadcast_to(_dispatch_throughput(tp), n),
+                collective_fracs=cfs)
+        times = self.source.stage_times(steps[0].config, steps[0].mesh)
         return BatchRecord(
             service_latencies=np.broadcast_to(pipelined_latency(times), n),
-            throughputs=np.broadcast_to(throughput(times), n))
+            throughputs=np.broadcast_to(throughput(times), n),
+            collective_fracs=cfs)
 
 
 class _SimDispatchBuilder:
@@ -291,9 +356,12 @@ class _SimDispatchBuilder:
     chunked == scalar invariant extends to batched runs).
     """
 
-    def __init__(self, ex: "DatabaseQueryExecutor", config):
+    def __init__(self, ex: "DatabaseQueryExecutor", config,
+                 assignment=None):
         self._ex = ex
-        self._times = ex.source.stage_times(config)
+        self._times = ex.source.stage_times(config, assignment)
+        self._coll_frac = (ex.source.collective_frac(config, assignment)
+                           if ex.mesh is not None else 0.0)
         self._live = self._times > 0.0
         self._c = ex.batch_overhead
         self._S = len(self._times)
@@ -371,10 +439,11 @@ class _SimDispatchBuilder:
                               drain=float(np.sum(spans)),
                               throughput=_dispatch_throughput(spans),
                               padded_tokens=self._padded_tok,
-                              actual_tokens=self._actual_tok)
+                              actual_tokens=self._actual_tok,
+                              collective_frac=self._coll_frac)
 
 
-def simulate(db: LayerDatabase,
+def _simulate_impl(db: LayerDatabase,
              num_eps: int,
              scheduler: Union[str, SchedulerPolicy] = "odin",
              alpha: int = 10,
@@ -406,7 +475,8 @@ def simulate(db: LayerDatabase,
              faults=None,
              retries=None,
              tiers=None,
-             tiers_kwargs: Optional[dict] = None) -> PipelineTrace:
+             tiers_kwargs: Optional[dict] = None,
+             mesh=None) -> PipelineTrace:
     """Run one (scheduler, interference-setting, workload) simulation.
 
     ``scheduler`` is a registry name (``repro.schedulers``) or an
@@ -457,6 +527,15 @@ def simulate(db: LayerDatabase,
     ``faults=None`` leaves every trace bit-identical to a fault-free
     build.
 
+    ``mesh`` shards every stage over a slice of a device mesh
+    (docs/SHARDING.md): a :class:`~repro.core.mesh.MeshSpec`, a device
+    count, or a kwargs dict (``{"devices": 8, "coll_cost": ...}``).
+    Stage times follow the sharded cost model, the rebalance action
+    space grows to (boundary, slice) moves, ``kind="mesh"`` events
+    inflate collective time, and the trace gains the mesh surface
+    (``mesh_trace`` / ``collective_fracs`` / mesh summary keys).
+    ``mesh=None`` (the default) is bit-identical to an unsharded build.
+
     ``tiers`` stamps every arrival with a QoS tier (docs/QOS.md): a
     :class:`~repro.qos.TierAssigner`, pre-built
     :class:`~repro.qos.TierPlan`, preset-name string such as
@@ -472,30 +551,51 @@ def simulate(db: LayerDatabase,
                              "query-indexed windows")
         events = generate_events(num_queries, num_eps, db.num_scenarios,
                                  freq_period, duration, seed)
+    mesh_spec = resolve_mesh(mesh)
     config = (list(initial_config) if initial_config is not None
               else balanced_config(db.num_layers, num_eps))
     # Interference-free peak throughput of the starting configuration:
     # by assumption (§3.1) the initial config is the balanced optimum.
-    clean = SimTimeSource(db, [0] * num_eps)
+    clean = SimTimeSource(db, [0] * num_eps, mesh=mesh_spec)
     # Start from the true clean optimum so "peak" matches the paper's
     # "throughput of the inference pipeline when executing alone".
-    if initial_config is None:
-        opt_cfg, _ = optimal_partition(db, [0] * num_eps, num_eps)
-        config = opt_cfg
+    if mesh_spec is None:
+        if initial_config is None:
+            opt_cfg, _ = optimal_partition(db, [0] * num_eps, num_eps)
+            config = opt_cfg
+        init_assign = None
+    else:
+        init_assign = balanced_assignment(mesh_spec.devices, num_eps)
+        if initial_config is None:
+            opt_cfg, opt_assign, _ = optimal_partition_mesh(
+                db, [0] * num_eps, num_eps, mesh_spec)
+            config, init_assign = list(opt_cfg), list(opt_assign)
+        clean.assignment = list(init_assign)
     peak = throughput(clean.stage_times(config))
 
     # Cache the oracle per scenario-vector (it is deterministic); it backs
-    # both the resource-constrained reference and the oracle policy.
+    # both the resource-constrained reference and the oracle policy.  On
+    # sharded runs the key also carries the live collective-contention
+    # factor and the value's first element is a (config, assignment) pair.
     oracle_cache = {}
 
     def _oracle(scen_key):
-        if scen_key not in oracle_cache:
-            oracle_cache[scen_key] = optimal_partition(db, list(scen_key),
-                                                       num_eps)
-        return oracle_cache[scen_key]
+        if mesh_spec is None:
+            if scen_key not in oracle_cache:
+                oracle_cache[scen_key] = optimal_partition(
+                    db, list(scen_key), num_eps)
+            return oracle_cache[scen_key]
+        f = executor.source.coll_factor
+        key = (scen_key, f)
+        if key not in oracle_cache:
+            cfg, assign, T = optimal_partition_mesh(
+                db, list(scen_key), num_eps, mesh_spec, coll_factor=f)
+            oracle_cache[key] = ((cfg, assign), T)
+        return oracle_cache[key]
 
     executor = DatabaseQueryExecutor(db, num_eps, events, _oracle,
-                                     time_indexed=events_time_indexed)
+                                     time_indexed=events_time_indexed,
+                                     mesh=mesh_spec)
     former = resolve_batching(batching, max_batch=max_batch,
                               buckets=buckets,
                               explore_in_batch=explore_in_batch)
@@ -504,8 +604,11 @@ def simulate(db: LayerDatabase,
         length_ref = float(former.buckets.edges[-1])
     executor.set_cost_model(batch_overhead, length_ref)
 
-    def oracle_solver(cfg, src) -> List[int]:
-        return list(_oracle(tuple(executor.scenarios))[0])
+    def oracle_solver(cfg, src):
+        opt = _oracle(tuple(executor.scenarios))[0]
+        if mesh_spec is not None:
+            return (list(opt[0]), list(opt[1]))
+        return list(opt)
 
     if isinstance(scheduler, str):
         sched_name = scheduler
@@ -515,20 +618,92 @@ def simulate(db: LayerDatabase,
     else:
         policy = scheduler
         sched_name = getattr(policy, "name", type(policy).__name__)
-    runtime = RebalanceRuntime(policy, config)
+    runtime = RebalanceRuntime(policy, config, mesh=init_assign)
 
-    return run_pipeline(executor, runtime, num_queries,
-                        workload=workload, workload_kwargs=workload_kwargs,
-                        scheduler_name=sched_name, peak_throughput=peak,
-                        chunking=chunking, max_chunk=max_chunk,
-                        admission=admission,
-                        admission_kwargs=admission_kwargs,
-                        trace_mode=trace_mode, metrics_sink=metrics_sink,
-                        sink_interval=sink_interval,
-                        former=former, lengths=lengths,
-                        lengths_kwargs=lengths_kwargs,
-                        faults=faults, retries=retries,
-                        tiers=tiers, tiers_kwargs=tiers_kwargs)
+    return _run_pipeline_impl(
+        executor, runtime, num_queries,
+        workload=workload, workload_kwargs=workload_kwargs,
+        scheduler_name=sched_name, peak_throughput=peak,
+        chunking=chunking, max_chunk=max_chunk,
+        admission=admission,
+        admission_kwargs=admission_kwargs,
+        trace_mode=trace_mode, metrics_sink=metrics_sink,
+        sink_interval=sink_interval,
+        former=former, lengths=lengths,
+        lengths_kwargs=lengths_kwargs,
+        faults=faults, retries=retries,
+        tiers=tiers, tiers_kwargs=tiers_kwargs)
+
+
+def simulate(db: LayerDatabase,
+             num_eps: int,
+             scheduler: Union[str, SchedulerPolicy] = "odin",
+             alpha: int = 10,
+             num_queries: int = 4000,
+             freq_period: int = 10,
+             duration: int = 10,
+             seed: int = 0,
+             rel_threshold: Optional[float] = None,
+             events: Optional[List[InterferenceEvent]] = None,
+             initial_config: Optional[List[int]] = None,
+             workload: Union[str, Workload, None] = "closed",
+             workload_kwargs: Optional[dict] = None,
+             chunking: bool = True,
+             max_chunk: Optional[int] = None,
+             events_time_indexed: bool = False,
+             admission: Union[str, object, None] = None,
+             admission_kwargs: Optional[dict] = None,
+             trace_mode: str = "dense",
+             metrics_sink=None,
+             sink_interval: Optional[int] = None,
+             batching=None,
+             max_batch: int = 8,
+             buckets=None,
+             explore_in_batch: bool = False,
+             lengths=None,
+             lengths_kwargs: Optional[dict] = None,
+             batch_overhead: float = 0.0,
+             length_ref: Optional[float] = None,
+             faults=None,
+             retries=None,
+             tiers=None,
+             tiers_kwargs: Optional[dict] = None) -> PipelineTrace:
+    """Run one (scheduler, interference-setting, workload) simulation.
+
+    Thin wrapper over the unified :class:`repro.api.RunSpec` path (one
+    declaration, one dispatcher — docs/API.md); the kwargs here map
+    1:1 onto spec fields, traces are bit-identical either way, and
+    *new* options land on the spec instead of this signature — e.g.
+    mesh-sliced stages (docs/SHARDING.md) are
+    ``run(RunSpec(db=db, ..., mesh=MeshSpec(...)))`` only.  See
+    :func:`_simulate_impl` for the full kwarg-level documentation.
+    """
+    from repro import api
+    spec = api.RunSpec(
+        db=db, num_eps=num_eps, num_queries=num_queries,
+        freq_period=freq_period, duration=duration, seed=seed,
+        events=events, events_time_indexed=events_time_indexed,
+        scheduler=api.SchedulerSpec(name=scheduler, alpha=alpha,
+                                    rel_threshold=rel_threshold,
+                                    initial_config=initial_config),
+        workload=api.WorkloadSpec(name=workload, kwargs=workload_kwargs),
+        admission=api.AdmissionSpec(name=admission,
+                                    kwargs=admission_kwargs),
+        batching=api.BatchingSpec(mode=batching, max_batch=max_batch,
+                                  buckets=buckets,
+                                  explore_in_batch=explore_in_batch,
+                                  chunking=chunking, max_chunk=max_chunk,
+                                  lengths=lengths,
+                                  lengths_kwargs=lengths_kwargs,
+                                  batch_overhead=batch_overhead,
+                                  length_ref=length_ref),
+        faults=api.FaultsSpec(plan=faults),
+        retries=api.RetriesSpec(policy=retries),
+        tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+        telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                    metrics_sink=metrics_sink,
+                                    sink_interval=sink_interval))
+    return api.run(spec)
 
 
 # The paper's 9 frequency/duration settings (§4.2).

@@ -1,16 +1,52 @@
 """Collective profiler: rank collective ops in a compiled module by
-loop-multiplied payload bytes, with op metadata (source of the gather)."""
+loop-multiplied payload bytes, with op metadata (source of the gather),
+plus the per-layer collective *cost model* the sharded serving path
+consumes (:func:`layer_coll_costs` → ``MeshSpec.coll_costs``,
+docs/SHARDING.md)."""
 from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import List, Tuple
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 from repro.launch.roofline import (
     _line_collective,
     _split_computations,
     _trip_count,
 )
+
+
+def layer_coll_costs(cfg, batch: int = 1, seq: int = 128,
+                     bandwidth: float = 4.0e10,
+                     dtype_bytes: int = 4,
+                     hlo_text: Optional[str] = None) -> np.ndarray:
+    """Per-layer collective cost profile (seconds) for mesh-sliced stages.
+
+    A stage holding ``m > 1`` devices data-parallelizes its blocks and
+    re-materializes the activations at each layer hand-off with a ring
+    all-gather; the per-layer payload is the activation tile,
+    ``batch x seq x d_model x dtype_bytes`` bytes, moved at ``bandwidth``
+    bytes/s.  The ring factor ``(m - 1) / m`` and any contention
+    inflation are applied downstream by
+    :func:`repro.core.mesh.mesh_stage_times` — this profile is the
+    *clean single-hop* cost only, so one profile serves every
+    (assignment, interference) combination.
+
+    ``hlo_text`` (a compiled module dump) refines the estimate: the
+    summed loop-multiplied collective bytes from :func:`top_collectives`
+    are spread evenly over the layers, replacing the analytic payload.
+    The result feeds ``MeshSpec(coll_costs=...)`` directly.
+    """
+    L = int(cfg.num_blocks)
+    if hlo_text is not None:
+        rows = top_collectives(hlo_text, k=10 ** 6)
+        total_bytes = float(sum(b for b, _ in rows))
+        if total_bytes > 0.0:
+            return np.full(L, total_bytes / L / float(bandwidth))
+    payload = float(batch) * float(seq) * float(cfg.d_model) * dtype_bytes
+    return np.full(L, payload / float(bandwidth))
 
 
 def top_collectives(hlo_text: str, k: int = 15) -> List[Tuple[float, str]]:

@@ -9,8 +9,12 @@ from __future__ import annotations
 import jax
 
 
-def _make_mesh(shape, axes):
-    """jax.make_mesh across versions: ``axis_types`` (and
+def build_mesh(shape, axes):
+    """The one mesh-construction path (every builder here and
+    ``repro.pipeline.spmd.stage_mesh`` routes through it — construct
+    meshes nowhere else).
+
+    Wraps jax.make_mesh across versions: ``axis_types`` (and
     ``jax.sharding.AxisType``) only exist on newer JAX releases; all
     axes here are Auto, which is also the older default."""
     axis_type = getattr(jax.sharding, "AxisType", None)
@@ -20,19 +24,23 @@ def _make_mesh(shape, axes):
                          axis_types=(axis_type.Auto,) * len(axes))
 
 
+#: Backward-compatible alias (pre-dedup private name).
+_make_mesh = build_mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """TPU v5e pod mesh: 16x16 = 256 chips per pod; 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+    return build_mesh(shape, axes)
 
 
 def make_stage_mesh(num_stages: int, *, model_parallel: int = 1):
     """Serving-pipeline mesh: ``stage`` = execution places (paper EPs),
     ``model`` = operator parallelism within an EP."""
     if model_parallel > 1:
-        return _make_mesh((num_stages, model_parallel), ("stage", "model"))
-    return _make_mesh((num_stages,), ("stage",))
+        return build_mesh((num_stages, model_parallel), ("stage", "model"))
+    return build_mesh((num_stages,), ("stage",))
 
 
 def data_axes(mesh) -> tuple:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.control import available_admission_policies
 from repro.core.database import paper_scenarios
@@ -234,7 +235,6 @@ def main() -> None:
         if faults is not None and args.workload == "closed":
             ap.error("fleet fault windows are wall-clock "
                      "(docs/FAULTS.md); pick an open-loop --workload")
-        from repro.cluster import serve_cluster
         archs = configs_list or [args.arch] * args.replicas
         # First engine per arch owns that arch's jitted executor and
         # warmed shapes; same-arch replicas share it, distinct archs
@@ -266,34 +266,43 @@ def main() -> None:
                                   executor=first.executor)
             engines.append(e)
             pools.append("default" if arch == archs[0] else "small")
-        metrics = serve_cluster(engines, queries, schedule,
-                                workload=args.workload,
-                                workload_kwargs=wl_kwargs,
-                                router=args.router,
-                                admission=args.admission,
-                                admission_kwargs=adm_kwargs,
-                                trace_mode=args.trace_mode,
-                                faults=faults, retries=retries,
-                                hedge_after=hedge_after,
-                                pools=pools,
-                                tiers=(args.tiers or None))
+        # The CLI drives the unified RunSpec path directly (docs/API.md)
+        # — one declaration either way, and the spec's to_dict() is the
+        # run's reproducible description.
+        metrics = api.run(api.RunSpec(
+            engines=engines, queries=queries, schedule=schedule,
+            workload=api.WorkloadSpec(name=args.workload,
+                                      kwargs=wl_kwargs),
+            admission=api.AdmissionSpec(name=args.admission,
+                                        kwargs=adm_kwargs),
+            faults=api.FaultsSpec(plan=faults, hedge_after=hedge_after),
+            retries=api.RetriesSpec(policy=retries),
+            tiers=api.TiersSpec(spec=(args.tiers or None)),
+            telemetry=api.TelemetrySpec(trace_mode=args.trace_mode),
+            cluster=api.ClusterSpec(num_replicas=len(engines),
+                                    router=args.router,
+                                    pools=tuple(pools))))
         s = metrics.summary()
         s["final_config"] = None
     else:
         if args.router != "round_robin":
             ap.error("--router needs a fleet: pass --replicas >= 2 or "
                      "--configs")
-        metrics = eng.serve(queries, schedule, workload=args.workload,
-                            workload_kwargs=wl_kwargs,
-                            max_batch=args.max_batch,
-                            batching=(None if args.batching == "none"
-                                      else args.batching),
-                            buckets=(args.buckets or None),
-                            admission=args.admission,
-                            admission_kwargs=adm_kwargs,
-                            trace_mode=args.trace_mode,
-                            faults=faults, retries=retries,
-                            tiers=(args.tiers or None))
+        metrics = api.run(api.RunSpec(
+            engine=eng, queries=queries, schedule=schedule,
+            workload=api.WorkloadSpec(name=args.workload,
+                                      kwargs=wl_kwargs),
+            admission=api.AdmissionSpec(name=args.admission,
+                                        kwargs=adm_kwargs),
+            batching=api.BatchingSpec(
+                mode=(None if args.batching == "none"
+                      else args.batching),
+                max_batch=args.max_batch,
+                buckets=(args.buckets or None)),
+            faults=api.FaultsSpec(plan=faults),
+            retries=api.RetriesSpec(policy=retries),
+            tiers=api.TiersSpec(spec=(args.tiers or None)),
+            telemetry=api.TelemetrySpec(trace_mode=args.trace_mode)))
         s = metrics.summary()
         configs = metrics.configs
         s["final_config"] = configs[-1] if configs else None

@@ -261,13 +261,36 @@ class MeasuredTimeSource:
     Polled on every exploration trial, so the per-stage reduction is one
     ``np.add.reduceat`` over the config's block offsets instead of a
     Python loop over stages.
+
+    With a :class:`~repro.core.mesh.MeshSpec` attached the source
+    additionally models mesh-sliced stages (docs/SHARDING.md): the
+    measured compute time divides by the stage's device count and a
+    modeled collective term is added via
+    :func:`~repro.core.mesh.mesh_stage_times` — the same cost model the
+    simulator uses, so a live scheduler reasons over (boundary, slice)
+    moves from measured data.  ``assignment`` is the committed slice
+    vector (the runtime keeps it synced); ``coll_factor`` is the live
+    collective-contention estimate (1.0 when quiet).  ``mesh=None``
+    (the default) touches none of this — byte-identical behavior to the
+    pre-mesh source.
     """
 
-    def __init__(self, block_times: np.ndarray, slowdowns: np.ndarray):
+    def __init__(self, block_times: np.ndarray, slowdowns: np.ndarray,
+                 mesh=None, coll_times: Optional[np.ndarray] = None,
+                 assignment: Optional[Sequence[int]] = None,
+                 coll_factor: float = 1.0):
         self.block_times = np.asarray(block_times, float)
         self.slowdowns = np.asarray(slowdowns, float)  # per EP
+        self.mesh = mesh  # MeshSpec or None
+        self.coll_times = (np.asarray(coll_times, float)
+                           if coll_times is not None
+                           else (mesh.layer_costs(len(self.block_times))
+                                 if mesh is not None else None))
+        self.assignment = (list(assignment) if assignment is not None
+                           else None)
+        self.coll_factor = float(coll_factor)
 
-    def stage_times(self, config: Sequence[int]) -> np.ndarray:
+    def _compute_times(self, config: Sequence[int]) -> np.ndarray:
         counts = np.asarray(config, dtype=np.int64)
         out = np.zeros(len(counts))
         nz = counts > 0
@@ -278,3 +301,31 @@ class MeasuredTimeSource:
             # start (empty stages contribute no blocks and stay 0).
             out[nz] = np.add.reduceat(self.block_times, starts[nz])
         return out * self.slowdowns
+
+    def stage_times(self, config: Sequence[int],
+                    assignment: Optional[Sequence[int]] = None
+                    ) -> np.ndarray:
+        compute = self._compute_times(config)
+        if self.mesh is None:
+            return compute
+        a = assignment if assignment is not None else self.assignment
+        if a is None:
+            return compute
+        from repro.core.mesh import mesh_stage_times
+        return mesh_stage_times(compute, config, a, self.mesh,
+                                self.coll_factor,
+                                layer_costs=self.coll_times)
+
+    def collective_frac(self, config: Sequence[int],
+                        assignment: Optional[Sequence[int]] = None
+                        ) -> float:
+        """Bottleneck stage's modeled collective share (the live
+        ``collective_frac`` trace column); 0.0 unsharded."""
+        if self.mesh is None:
+            return 0.0
+        a = assignment if assignment is not None else self.assignment
+        if a is None:
+            return 0.0
+        from repro.core.mesh import collective_frac as _frac
+        return _frac(self._compute_times(config), config, a, self.mesh,
+                     self.coll_factor, layer_costs=self.coll_times)

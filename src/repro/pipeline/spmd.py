@@ -28,6 +28,15 @@ from repro.configs.base import ModelConfig
 from repro.models import blocks as blk
 
 
+def stage_mesh(num_stages: int, *, model_parallel: int = 1):
+    """The SPMD pipeline's mesh, built through the single shared
+    constructor in :mod:`repro.launch.mesh` (this module used to build
+    its own; docs/SHARDING.md).  ``stage`` partitions the chips into
+    execution places; ``model`` is operator parallelism within one."""
+    from repro.launch.mesh import make_stage_mesh
+    return make_stage_mesh(num_stages, model_parallel=model_parallel)
+
+
 def pack_stage_params(stacked_blocks: Dict, config: Sequence[int],
                       cap: int) -> Dict:
     """Repack [L, ...] stacked blocks into [num_stages, cap, ...] tiles.
@@ -130,3 +139,56 @@ def pipelined_forward(cfg: ModelConfig, mesh, stacked_blocks: Dict,
     fn = make_pipeline_fn(cfg, mesh, stage_axis=stage_axis,
                           num_microbatches=num_microbatches, cap=cap)
     return fn(stage_params, counts, inputs)
+
+
+class SpmdPipelineExecutor:
+    """Physical sharded-stage execution — the SPMD counterpart of
+    :class:`repro.pipeline.executor.LocalPipelineExecutor`.
+
+    Each pipeline stage owns one slice of a :func:`stage_mesh`; a query
+    runs embed → GPipe-schedule stages (``ppermute`` hand-offs between
+    slices) → head, and ODIN rebalancing stays recompile-free because
+    the live block counts are runtime arguments.  Requires
+    ``jax.device_count() >= num_stages`` (guard call sites; the serving
+    loop's scheduler-side mesh *model* in
+    :class:`~repro.pipeline.executor.MeasuredTimeSource` needs no
+    devices and is the default — docs/SHARDING.md).
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Dict, num_stages: int, *,
+                 cap: int = 0, model_parallel: int = 1,
+                 num_microbatches: int = 1):
+        if jax.device_count() < num_stages * model_parallel:
+            raise ValueError(
+                f"{num_stages}x{model_parallel} mesh needs "
+                f">= {num_stages * model_parallel} devices, have "
+                f"{jax.device_count()}")
+        self.cfg = cfg
+        self.params = params
+        self.mesh = stage_mesh(num_stages, model_parallel=model_parallel)
+        self.cap = int(cap) if cap else cfg.num_blocks
+        self.M = int(num_microbatches)
+        self._fn = make_pipeline_fn(cfg, self.mesh,
+                                    num_microbatches=self.M, cap=self.cap)
+
+    def run_query(self, tokens: jnp.ndarray,
+                  config: Sequence[int]) -> jnp.ndarray:
+        """Run ``[B, S]`` tokens through the sharded pipeline of
+        ``config``; returns logits ``[B, S, V]``.  ``B`` is padded up to
+        a multiple of the microbatch count, padding rows dropped."""
+        from repro.models.layers import embed, rms_norm, unembed
+        B, S = tokens.shape
+        mb = -(-B // self.M)  # rows per microbatch, padded up
+        if mb * self.M > B:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((mb * self.M - B, S), tokens.dtype)])
+        x = embed(self.params["embed"], tokens)
+        inputs = x.reshape(self.M, mb, S, -1)
+        stage_params = pack_stage_params(self.params["blocks"], config,
+                                         self.cap)
+        counts = jnp.asarray(list(config), jnp.int32)
+        out = self._fn(stage_params, counts, inputs)
+        h = out.reshape(mb * self.M, S, -1)[:B]
+        h = rms_norm(h, self.params["final_norm"]["scale"],
+                     self.cfg.rms_eps)
+        return unembed(self.params["head"], h)

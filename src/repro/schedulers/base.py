@@ -73,8 +73,14 @@ class SchedulerPolicy(Protocol):
         """True if a rebalancing phase should start now."""
         ...
 
-    def make_explorer(self, config: Sequence[int]) -> Explorer:
-        """Build the explorer that runs the phase from ``config``."""
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None) -> Explorer:
+        """Build the explorer that runs the phase from ``config``.
+
+        ``mesh`` is the committed device assignment on sharded runs
+        (docs/SHARDING.md) — the runtime passes it only when one is
+        armed, so unsharded policies may ignore the kwarg entirely.
+        """
         ...
 
     def finish(self, config: Sequence[int], source: StageTimeSource) -> None:

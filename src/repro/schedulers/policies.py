@@ -19,7 +19,7 @@ from __future__ import annotations
 from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core.lls import LLSExplorer
-from repro.core.odin import OdinExplorer, RebalanceResult
+from repro.core.odin import MeshOdinExplorer, OdinExplorer, RebalanceResult
 from repro.core.pipeline_state import StageTimeSource, throughput
 from repro.schedulers.base import InterferenceDetector
 from repro.schedulers.defaults import DEFAULT_ALPHA, resolve_rel_threshold
@@ -80,7 +80,12 @@ class OdinPolicy(_DetectorPolicy):
         super().__init__(rel_threshold, detector)
         self.alpha = alpha
 
-    def make_explorer(self, config: Sequence[int]) -> OdinExplorer:
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None) -> OdinExplorer:
+        if mesh is not None:
+            # Sharded run: explore the (boundary, slice) action space
+            # (docs/SHARDING.md).
+            return MeshOdinExplorer(config, self.alpha, mesh)
         return OdinExplorer(config, self.alpha)
 
 
@@ -94,7 +99,13 @@ class LLSPolicy(_DetectorPolicy):
         super().__init__(rel_threshold, detector)
         self.max_moves = max_moves
 
-    def make_explorer(self, config: Sequence[int]) -> LLSExplorer:
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None) -> LLSExplorer:
+        # LLS stays a boundary-only baseline: on sharded runs it explores
+        # layer moves on the *fixed* committed assignment (the runtime
+        # keeps pricing trials with the current slices), which is exactly
+        # the boundary-only reference the sharding benchmarks compare
+        # ODIN's (boundary, slice) moves against.
         return LLSExplorer(config, self.max_moves)
 
 
@@ -108,7 +119,8 @@ class StaticPolicy:
                source: StageTimeSource) -> bool:
         return False
 
-    def make_explorer(self, config: Sequence[int]):
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None):
         raise RuntimeError("static policy never explores")
 
     def finish(self, config: Sequence[int],
@@ -124,8 +136,10 @@ class OracleExplorer:
 
     serial = False
 
-    def __init__(self, target: Sequence[int]):
+    def __init__(self, target: Sequence[int],
+                 mesh: Optional[Sequence[int]] = None):
         self.target = list(target)
+        self.mesh = list(mesh) if mesh is not None else None
         self.done = False
 
     def step(self, source: StageTimeSource) -> List[int]:
@@ -133,7 +147,8 @@ class OracleExplorer:
         return list(self.target)
 
     def result(self) -> RebalanceResult:
-        return RebalanceResult(list(self.target), 0.0, [])
+        mesh = list(self.mesh) if self.mesh is not None else None
+        return RebalanceResult(list(self.target), 0.0, [], mesh=mesh)
 
 
 @register_scheduler("oracle")
@@ -145,6 +160,12 @@ class OraclePolicy:
     DP-over-database solver (paper's exhaustive search, §4.3).  Because
     the optimum is recomputed on every detect, no bottleneck-threshold
     detector is needed: detection is simply "the optimum moved".
+
+    Sharded runs wire a *mesh-aware* solver instead, returning a
+    ``(config, assignment)`` pair (``repro.core.exhaustive.
+    optimal_partition_mesh``); detection then fires when either the
+    boundary optimum or the slice optimum moved, compared against the
+    committed assignment the runtime synced onto the time source.
     """
 
     # Detect recomputes the optimum from (config, current stage times)
@@ -155,20 +176,36 @@ class OraclePolicy:
     def __init__(self, solver: Callable[[Sequence[int], StageTimeSource],
                                         Sequence[int]]):
         self.solver = solver
-        self._pending: Optional[List[int]] = None
+        self._pending: Optional[tuple] = None   # (config, assignment|None)
 
     def detect(self, config: Sequence[int],
                source: StageTimeSource) -> bool:
-        opt = list(self.solver(config, source))
+        opt = self.solver(config, source)
+        if (isinstance(opt, tuple) and len(opt) == 2
+                and isinstance(opt[0], (list, tuple))):
+            # Mesh-aware solver: (config, assignment).
+            cfg, assign = list(opt[0]), list(opt[1])
+            cur = getattr(source, "assignment", None)
+            if cfg != list(config) or (cur is not None
+                                       and assign != list(cur)):
+                self._pending = (cfg, assign)
+                return True
+            return False
+        opt = list(opt)
         if opt != list(config):
-            self._pending = opt
+            self._pending = (opt, None)
             return True
         return False
 
-    def make_explorer(self, config: Sequence[int]) -> OracleExplorer:
-        target = self._pending if self._pending is not None else list(config)
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None) -> OracleExplorer:
+        if self._pending is not None:
+            target, assign = self._pending
+        else:
+            target = list(config)
+            assign = list(mesh) if mesh is not None else None
         self._pending = None
-        return OracleExplorer(target)
+        return OracleExplorer(target, mesh=assign)
 
     def finish(self, config: Sequence[int],
                source: StageTimeSource) -> None:
@@ -254,7 +291,10 @@ class HybridPolicy(_DetectorPolicy):
         self.plateau_margin = plateau_margin
         self.max_moves = max_moves
 
-    def make_explorer(self, config: Sequence[int]) -> HybridExplorer:
+    def make_explorer(self, config: Sequence[int],
+                      mesh: Optional[Sequence[int]] = None) -> HybridExplorer:
+        # Like LLS, hybrid explores layer moves on the fixed committed
+        # assignment (boundary-only on sharded runs).
         return HybridExplorer(config, self.alpha,
                               plateau_margin=self.plateau_margin,
                               max_moves=self.max_moves)

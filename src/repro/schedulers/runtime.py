@@ -41,6 +41,9 @@ class RuntimeStep:
     config: List[int]          # configuration to process the query with
     serial: bool               # True = exploration trial (serial query)
     committed: bool = False    # a rebalancing phase committed at this step
+    #: Mesh assignment (devices per stage) the query runs with;
+    #: ``None`` on unsharded runs (docs/SHARDING.md).
+    mesh: Optional[List[int]] = None
 
 
 class RebalanceRuntime:
@@ -51,10 +54,16 @@ class RebalanceRuntime:
     #: raises instead of hanging the serving loop.
     MAX_INSTANT_STEPS = 10_000
 
-    def __init__(self, policy: SchedulerPolicy, config: Sequence[int]):
+    def __init__(self, policy: SchedulerPolicy, config: Sequence[int],
+                 mesh: Optional[Sequence[int]] = None):
         self.policy = policy
         self.policy.reset()       # a runtime is a fresh serving window
         self.config = list(config)
+        #: Committed mesh assignment (devices per stage); ``None`` on
+        #: unsharded runs — every mesh branch below is then dead and
+        #: the runtime is bit-identical to the pre-mesh build.
+        self.mesh = list(mesh) if mesh is not None else None
+        self.num_mesh_resizes = 0
         self.explorer = None
         self.num_rebalances = 0
         self.total_trials = 0
@@ -92,7 +101,8 @@ class RebalanceRuntime:
         live engine has no stage-time estimates before the first
         measurement) but still need a :class:`RuntimeStep` to execute.
         """
-        return RuntimeStep(list(self.config), serial=False)
+        return RuntimeStep(list(self.config), serial=False,
+                           mesh=self._mesh_copy())
 
     # -- read-only state exposure (cluster routing; docs/CLUSTER.md) ---------
     def interference_score(self) -> float:
@@ -139,10 +149,16 @@ class RebalanceRuntime:
     def poll(self, source: StageTimeSource) -> RuntimeStep:
         """Advance the state machine by one query."""
         self.last_source = source
+        self._sync_mesh(source)
         if self.explorer is None:
             if not self.policy.detect(self.config, source):
-                return RuntimeStep(list(self.config), serial=False)
-            self.explorer = self.policy.make_explorer(self.config)
+                return RuntimeStep(list(self.config), serial=False,
+                                   mesh=self._mesh_copy())
+            if self.mesh is not None:
+                self.explorer = self.policy.make_explorer(self.config,
+                                                          mesh=self.mesh)
+            else:
+                self.explorer = self.policy.make_explorer(self.config)
             if self._serial_phase:
                 self.num_rebalances += 1
 
@@ -160,15 +176,23 @@ class RebalanceRuntime:
                     f"finish within {self.MAX_INSTANT_STEPS} steps")
             self._commit(source)
             return RuntimeStep(list(self.config), serial=False,
-                               committed=True)
+                               committed=True, mesh=self._mesh_copy())
 
+        trial_mesh = None
+        if self.mesh is not None:
+            trial_mesh = list(getattr(self.explorer, "A", self.mesh))
         trial_cfg = self.explorer.step(source)
+        if self.mesh is not None:
+            # The step may itself have moved a device; report the
+            # assignment the trial query actually runs with.
+            trial_mesh = list(getattr(self.explorer, "A", trial_mesh))
         self._phase_steps += 1
         committed = False
         if self.explorer.done:
             self._commit(source)
             committed = True
-        return RuntimeStep(list(trial_cfg), serial=True, committed=committed)
+        return RuntimeStep(list(trial_cfg), serial=True,
+                           committed=committed, mesh=trial_mesh)
 
     def arm(self, source: StageTimeSource) -> None:
         """Prime detection with one observation, starting no phase.
@@ -180,21 +204,35 @@ class RebalanceRuntime:
         does in the simulator.  Any trigger is discarded.
         """
         self.last_source = source
+        self._sync_mesh(source)
         self.policy.detect(self.config, source)
 
-    def reset(self, config: Optional[Sequence[int]] = None) -> None:
+    def reset(self, config: Optional[Sequence[int]] = None,
+              mesh: Optional[Sequence[int]] = None) -> None:
         """Abandon any in-flight phase and re-arm the policy."""
         self.explorer = None
         self._phase_steps = 0
         self.last_source = None
         if config is not None:
             self.config = list(config)
+        if mesh is not None:
+            self.mesh = list(mesh)
         self.policy.reset()
 
     # -- internals -----------------------------------------------------------
     @property
     def _serial_phase(self) -> bool:
         return getattr(self.explorer, "serial", True)
+
+    def _mesh_copy(self) -> Optional[List[int]]:
+        return list(self.mesh) if self.mesh is not None else None
+
+    def _sync_mesh(self, source: StageTimeSource) -> None:
+        """Push the committed assignment onto mesh-aware time sources so
+        single-argument ``stage_times(config)`` calls (detectors, the
+        read-only estimators above) price the current slices."""
+        if self.mesh is not None and hasattr(source, "assignment"):
+            source.assignment = list(self.mesh)
 
     def _commit(self, source: StageTimeSource) -> None:
         res = self.explorer.result()
@@ -207,4 +245,10 @@ class RebalanceRuntime:
         self.explorer = None
         self._phase_steps = 0
         self.config = list(res.config)
+        res_mesh = getattr(res, "mesh", None)
+        if self.mesh is not None and res_mesh is not None:
+            if list(res_mesh) != list(self.mesh):
+                self.num_mesh_resizes += 1
+            self.mesh = list(res_mesh)
+            self._sync_mesh(source)
         self.policy.finish(self.config, source)

@@ -49,6 +49,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.mesh import (
+    balanced_assignment,
+    collective_frac as _mesh_collective_frac,
+    mesh_stage_times,
+    resolve_mesh,
+)
 from repro.core.pipeline_state import balanced_config, throughput
 from repro.pipeline.executor import (
     LocalPipelineExecutor,
@@ -67,8 +73,8 @@ from repro.workloads import (
     QueryRecord,
     Workload,
     resolve_batching,
-    run_pipeline,
 )
+from repro.workloads.runner import _run_pipeline_impl
 
 #: Deprecated alias — ``serve()`` now returns the unified
 #: :class:`repro.workloads.PipelineTrace` (same summary keys plus the
@@ -105,6 +111,7 @@ class _LiveQueryExecutor:
         self.schedule = slowdown_schedule
         self.max_batch = max(1, int(max_batch))
         self._slow: Optional[np.ndarray] = None
+        self._cf = 1.0  # live collective-contention factor (mesh runs)
         # Batched-dispatch state (the run loop's configure_batching
         # hook fills these in when a BatchFormer is attached).
         self.former = None
@@ -121,21 +128,25 @@ class _LiveQueryExecutor:
 
     def begin_query(self, q: int) -> Optional[MeasuredTimeSource]:
         self._slow = np.asarray(self.schedule(q), float)
+        self._cf = self.engine._coll_factor_at(q)
         if self.engine._block_times is None:
             return None
-        return MeasuredTimeSource(self.engine._block_times, self._slow)
+        return self.engine._measured_source(self._slow, self._cf)
 
     def steady_horizon(self, q: int) -> int:
         """Constant-interference run length from ``q``: a batch must
-        share one slowdown vector (a schedule edge ends the chunk) and
-        one dispatch shape (stacked rows need one shared sequence
+        share one slowdown vector (a schedule edge ends the chunk), one
+        collective-contention factor when a mesh is armed, and one
+        dispatch shape (stacked rows need one shared sequence
         length — a length change ends the chunk; with buckets attached
         the cut falls at bucket-edge changes instead)."""
         base = np.asarray(self.schedule(q), float)
+        cf = self.engine._coll_factor_at(q)
         width = self._width(q)
         n = 1
         while (n < self.max_batch and q + n < len(self.queries)
                and self._width(q + n) == width
+               and self.engine._coll_factor_at(q + n) == cf
                and np.array_equal(np.asarray(self.schedule(q + n), float),
                                   base)):
             n += 1
@@ -208,10 +219,27 @@ class _LiveQueryExecutor:
                 # next query is a shift from this baseline rather
                 # than the baseline.
                 eng.runtime.arm(
-                    MeasuredTimeSource(eng._block_times, self._slow))
+                    eng._measured_source(self._slow, self._cf))
             return tmax
 
         return finish
+
+    def _mesh_model(self, stage_times: np.ndarray, config,
+                    assignment) -> tuple:
+        """Scheduler-side sharded-stage model over *measured* per-stage
+        compute times: (modeled bottleneck time, collective share).
+        Wall-clock service latencies are never rewritten — only the
+        capability/throughput signal the admission ledger and the trace
+        columns consume (docs/SHARDING.md)."""
+        eng = self.engine
+        mt = mesh_stage_times(stage_times, config, assignment, eng.mesh,
+                              self._cf, layer_costs=eng._coll_times)
+        live = [i for i, c in enumerate(config) if c > 0]
+        tmax = float(np.asarray(mt)[live].max())
+        cf = _mesh_collective_frac(stage_times, config, assignment,
+                                   eng.mesh, self._cf,
+                                   layer_costs=eng._coll_times)
+        return max(tmax, 1e-12), cf
 
     def execute(self, q: int, step: RuntimeStep) -> QueryRecord:
         eng = self.engine
@@ -232,14 +260,19 @@ class _LiveQueryExecutor:
                                        slowdowns=self._slow)
         latency = time.perf_counter() - t0
         tmax = finish(st)
+        coll_frac = 0.0
+        if eng.mesh is not None and step.mesh is not None:
+            tmax, coll_frac = self._mesh_model(st, step.config, step.mesh)
         if self.former is not None:
             # Batched dispatch is group-synchronous — a solo dispatch
             # holds the pipeline for its full drain, exactly like a
             # singleton formed batch.
             return QueryRecord(service_latency=latency,
-                               throughput=1.0 / max(latency, 1e-12))
+                               throughput=1.0 / max(latency, 1e-12),
+                               collective_frac=coll_frac)
         return QueryRecord(service_latency=latency,
-                           throughput=1.0 / max(tmax, 1e-12))
+                           throughput=1.0 / max(tmax, 1e-12),
+                           collective_frac=coll_frac)
 
     def execute_many(self, q0: int, steps) -> BatchRecord:
         eng = self.engine
@@ -260,6 +293,11 @@ class _LiveQueryExecutor:
         # Stage times cover the whole batch; the per-query estimate the
         # EMA consumes is the per-query share.
         tmax = max(finish(st / n), 1e-12)
+        coll_fracs = None
+        if eng.mesh is not None and steps[0].mesh is not None:
+            tmax, cf = self._mesh_model(st / n, steps[0].config,
+                                        steps[0].mesh)
+            coll_fracs = np.broadcast_to(cf, n)
         # The batch holds the admission head for one batch-bottleneck
         # beat (per-query occupancy = tmax_batch / n) and every member
         # completes when the batch drains.  The run loop staggers member
@@ -269,7 +307,8 @@ class _LiveQueryExecutor:
         # head-of-line accounting, not extra service.
         return BatchRecord(
             service_latencies=wall - np.arange(n) * tmax,
-            throughputs=np.broadcast_to(1.0 / tmax, n))
+            throughputs=np.broadcast_to(1.0 / tmax, n),
+            collective_fracs=coll_fracs)
 
 
 class _LiveDispatchBuilder:
@@ -301,6 +340,7 @@ class _LiveDispatchBuilder:
         eng = live.engine
         self._ex = eng.executor
         self._config = list(step.config)
+        self._mesh = (list(step.mesh) if step.mesh is not None else None)
         self._S = len(self._config)
         self._bounds = self._ex._device_bounds(self._config)
         self._slow = live._slow
@@ -424,13 +464,19 @@ class _LiveDispatchBuilder:
         # (joiners' catch-up work is dispatch latency, not a per-block
         # time signal).
         done = self._live._measure(self._config, self._first)
-        done(self._stage_times / np.maximum(self._stage_members, 1.0))
+        per_query = self._stage_times / np.maximum(self._stage_members, 1.0)
+        done(per_query)
+        coll_frac = 0.0
+        if self._live.engine.mesh is not None and self._mesh is not None:
+            _, coll_frac = self._live._mesh_model(per_query, self._config,
+                                                  self._mesh)
         return DispatchRecord(
             start_offsets=np.asarray(self._starts, float),
             drain=drain,
             throughput=1.0 / max(drain, 1e-12),
             padded_tokens=float(next_pow2(self._rows)) * float(self._seq),
-            actual_tokens=self._actual_tok)
+            actual_tokens=self._actual_tok,
+            collective_frac=coll_frac)
 
 
 class ServingEngine:
@@ -439,8 +485,25 @@ class ServingEngine:
                  alpha: int = DEFAULT_ALPHA,
                  rel_threshold: Optional[float] = None,
                  estimate_beta: float = 0.5,
-                 executor: Optional[LocalPipelineExecutor] = None):
+                 executor: Optional[LocalPipelineExecutor] = None,
+                 mesh=None,
+                 coll_factor_schedule=None):
         self.cfg = cfg
+        # Mesh-sliced stages (docs/SHARDING.md): scheduler-side modeling
+        # over measured compute times.  ``mesh`` accepts anything
+        # :func:`repro.core.mesh.resolve_mesh` takes (the RunSpec path
+        # is the intended entry — docs/API.md); ``coll_factor_schedule
+        # (q) -> float`` emulates collective contention the way
+        # ``slowdown_schedule`` emulates compute interference.  Unset
+        # (the default), every mesh code path is dormant and serving is
+        # bit-identical to a pre-mesh build.
+        self.mesh = resolve_mesh(mesh)
+        self.coll_factor_schedule = coll_factor_schedule
+        self._coll_times = (self.mesh.layer_costs(cfg.num_blocks)
+                            if self.mesh is not None else None)
+        self._initial_assignment = (
+            balanced_assignment(self.mesh.devices, num_eps)
+            if self.mesh is not None else None)
         # ``executor`` lets N engines share one jitted pipeline (the
         # multi-replica cluster pattern: replicas serve the same model,
         # so one compile + warmup serves the fleet, while every engine
@@ -463,10 +526,31 @@ class ServingEngine:
             self.scheduler = getattr(scheduler, "name",
                                      type(scheduler).__name__)
         self._initial_config = balanced_config(cfg.num_blocks, num_eps)
-        self.runtime = RebalanceRuntime(self.policy, self._initial_config)
+        self.runtime = RebalanceRuntime(self.policy, self._initial_config,
+                                        mesh=self._initial_assignment)
         # EMA of measured per-block times feeds the scheduler's trial
         # evaluations between real executions.
         self._block_times: Optional[np.ndarray] = None
+
+    def _coll_factor_at(self, q: int) -> float:
+        """Collective-contention factor for query ``q`` (1.0 quiet /
+        unsharded)."""
+        if self.mesh is None or self.coll_factor_schedule is None:
+            return 1.0
+        return float(self.coll_factor_schedule(q))
+
+    def _measured_source(self, slowdowns,
+                         coll_factor: float = 1.0) -> MeasuredTimeSource:
+        """The scheduler's time source over the current block-time
+        estimates — mesh-aware when a mesh is armed (the runtime syncs
+        the committed assignment on every poll)."""
+        if self.mesh is None:
+            return MeasuredTimeSource(self._block_times, slowdowns)
+        return MeasuredTimeSource(self._block_times, slowdowns,
+                                  mesh=self.mesh,
+                                  coll_times=self._coll_times,
+                                  assignment=self.runtime.mesh,
+                                  coll_factor=coll_factor)
 
     @property
     def config(self) -> List[int]:
@@ -480,7 +564,8 @@ class ServingEngine:
         not the window) — combined with ``estimate_beta = 0`` this makes
         scheduling decisions reproducible across serving windows, e.g.
         for A/B comparisons of ``serve(..., max_batch=...)``."""
-        self.runtime.reset(self._initial_config)
+        self.runtime.reset(self._initial_config,
+                           mesh=self._initial_assignment)
 
     def estimated_peak_throughput(self) -> float:
         """Interference-free throughput of the starting configuration,
@@ -490,7 +575,10 @@ class ServingEngine:
         if self._block_times is None:
             return float("nan")
         clean = MeasuredTimeSource(self._block_times,
-                                   np.ones(self.num_eps))
+                                   np.ones(self.num_eps),
+                                   mesh=self.mesh,
+                                   coll_times=self._coll_times,
+                                   assignment=self._initial_assignment)
         return throughput(clean.stage_times(self._initial_config))
 
     def _update_block_estimates(self, config: Sequence[int],
@@ -527,7 +615,7 @@ class ServingEngine:
         return _LiveQueryExecutor(self, queries, slowdown_schedule,
                                   max_batch=max_batch)
 
-    def serve(self, queries: Sequence[jnp.ndarray],
+    def _serve_impl(self, queries: Sequence[jnp.ndarray],
               slowdown_schedule,
               workload: Union[str, Workload, None] = "closed",
               workload_kwargs: Optional[dict] = None,
@@ -616,7 +704,7 @@ class ServingEngine:
             queries, slowdown_schedule,
             max_batch=(former.max_batch if former is not None
                        else max_batch))
-        trace = run_pipeline(live, self.runtime, len(queries),
+        trace = _run_pipeline_impl(live, self.runtime, len(queries),
                              workload=workload,
                              workload_kwargs=workload_kwargs,
                              scheduler_name=self.scheduler,
@@ -633,3 +721,49 @@ class ServingEngine:
         # post-hoc so the trace's SLO metrics work like the simulator's.
         trace.peak_throughput = self.estimated_peak_throughput()
         return trace
+
+    def serve(self, queries: Sequence[jnp.ndarray],
+              slowdown_schedule,
+              workload: Union[str, Workload, None] = "closed",
+              workload_kwargs: Optional[dict] = None,
+              max_batch: int = 1,
+              batching: Union[str, object, None] = None,
+              buckets: Union[str, object, None] = None,
+              explore_in_batch: bool = False,
+              admission: Union[str, object, None] = None,
+              admission_kwargs: Optional[dict] = None,
+              trace_mode: str = "dense",
+              metrics_sink=None,
+              sink_interval: Optional[int] = None,
+              faults=None,
+              retries=None,
+              tiers=None,
+              tiers_kwargs: Optional[dict] = None) -> PipelineTrace:
+        """Serve ``queries`` under ``slowdown_schedule(q) -> per-EP
+        slowdown factors``.
+
+        Thin wrapper over the unified :class:`repro.api.RunSpec` path
+        (one declaration, one dispatcher — docs/API.md); the kwargs
+        here map 1:1 onto spec fields and new options land on the spec
+        (or, for physical per-engine state like the device mesh, on
+        the :class:`ServingEngine` constructor — docs/SHARDING.md)
+        instead of this signature.  See :meth:`_serve_impl` for the
+        full kwarg-level documentation.
+        """
+        from repro import api
+        spec = api.RunSpec(
+            engine=self, queries=queries, schedule=slowdown_schedule,
+            workload=api.WorkloadSpec(name=workload,
+                                      kwargs=workload_kwargs),
+            admission=api.AdmissionSpec(name=admission,
+                                        kwargs=admission_kwargs),
+            batching=api.BatchingSpec(mode=batching, max_batch=max_batch,
+                                      buckets=buckets,
+                                      explore_in_batch=explore_in_batch),
+            faults=api.FaultsSpec(plan=faults),
+            retries=api.RetriesSpec(policy=retries),
+            tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+            telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                        metrics_sink=metrics_sink,
+                                        sink_interval=sink_interval))
+        return api.run(spec)

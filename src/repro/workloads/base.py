@@ -53,6 +53,9 @@ class QueryRecord:
     #: stage time.  Determines how soon the pipeline frees up for the
     #: next query when running pipelined.
     throughput: float
+    #: Fraction of the bottleneck stage's time spent in collectives;
+    #: 0.0 on unsharded runs (docs/SHARDING.md).
+    collective_frac: float = 0.0
 
 
 @dataclasses.dataclass
@@ -75,12 +78,17 @@ class BatchRecord:
     #: ``batch_size / bottleneck_stage_time`` for each member so the
     #: whole batch occupies the head for one bottleneck beat.
     throughputs: np.ndarray
+    #: Per-query bottleneck collective share; ``None`` on unsharded
+    #: runs (docs/SHARDING.md).
+    collective_fracs: Optional[np.ndarray] = None
 
     def __post_init__(self):
         self.service_latencies = np.asarray(self.service_latencies, float)
         self.throughputs = np.asarray(self.throughputs, float)
         if self.service_latencies.shape != self.throughputs.shape:
             raise ValueError("BatchRecord arrays must be index-aligned")
+        if self.collective_fracs is not None:
+            self.collective_fracs = np.asarray(self.collective_fracs, float)
 
 
 @dataclasses.dataclass
@@ -115,6 +123,9 @@ class DispatchRecord:
     padded_tokens: float = 0.0
     #: Total useful tokens (actual query lengths); 0 when unknown.
     actual_tokens: float = 0.0
+    #: Bottleneck collective share of the dispatch; 0.0 on unsharded
+    #: runs (docs/SHARDING.md).
+    collective_frac: float = 0.0
 
     def __post_init__(self):
         self.start_offsets = np.asarray(self.start_offsets, float)

@@ -357,6 +357,12 @@ class PipelineRunner:
         self._mitigations0 = len(runtime.mitigation_lengths)
         self._has_reference = hasattr(executor, "reference_throughput")
 
+        # Sharded stage execution (docs/SHARDING.md): the mesh surface
+        # exists only when the runtime carries a device assignment —
+        # unsharded runs take none of the branches below.
+        self._mesh_on = getattr(runtime, "mesh", None) is not None
+        self._resizes0 = getattr(runtime, "num_mesh_resizes", 0)
+
         mode = getattr(executor, "batch_mode", None) if chunking else None
         if mode is not None and not callable(getattr(executor,
                                                      "execute_many", None)):
@@ -444,7 +450,9 @@ class PipelineRunner:
             self.value_row = None
         if tiers is not None and self.telemetry is not None:
             self.telemetry.configure_tiers(tiers.names)
+        self.coll_frac = np.zeros(n) if self._mesh_on else None
         self.configs_trace: List[List[int]] = []
+        self.mesh_trace: List[List[int]] = []
 
         self.free_at = 0.0             # when the admission head frees up
         self.drain_at = 0.0            # when every admitted query completed
@@ -456,7 +464,7 @@ class PipelineRunner:
     _ARRAYS = ("latencies", "service_lat", "queue_delay", "throughputs",
                "serial_mask", "arrival_t", "completion_t", "queue_depth",
                "rc_thr", "batch_sizes", "padded_tok", "actual_tok",
-               "tier_row", "deadline_row", "value_row")
+               "tier_row", "deadline_row", "value_row", "coll_frac")
 
     def _ensure_capacity(self, n: int) -> None:
         """Grow the result arrays (doubling) to hold ``n`` queries."""
@@ -489,8 +497,12 @@ class PipelineRunner:
         rec = self.executor.execute(gq, step)
         self.throughputs[s] = rec.throughput
         self.serial_mask[s] = step.serial
+        if self._mesh_on:
+            self.coll_frac[s] = rec.collective_frac
         if self._keep_configs:
             self.configs_trace.append(list(step.config))
+            if self._mesh_on:
+                self.mesh_trace.append(list(step.mesh))
         else:
             self._last_config = list(step.config)
         # A serial trial runs on the drained pipeline, so it cannot
@@ -618,6 +630,10 @@ class PipelineRunner:
                              f"records for a chunk of {n}")
         self.throughputs[sl] = rec.throughputs
         self.serial_mask[sl] = False   # chunks are steady by construction
+        if self._mesh_on:
+            self.coll_frac[sl] = (rec.collective_fracs
+                                  if rec.collective_fracs is not None
+                                  else 0.0)
         if not self._keep_configs:
             self._last_config = list(steps[-1].config)
         elif steps[0] is steps[-1]:
@@ -627,6 +643,11 @@ class PipelineRunner:
             self.configs_trace.extend([list(steps[0].config)] * n)
         else:
             self.configs_trace.extend(list(s.config) for s in steps)
+        if self._mesh_on and self._keep_configs:
+            if steps[0] is steps[-1]:
+                self.mesh_trace.extend([list(steps[0].mesh)] * n)
+            else:
+                self.mesh_trace.extend(list(s.mesh) for s in steps)
         occ = np.where(rec.throughputs > 0, 1.0 / rec.throughputs, 0.0)
         arrival, start, self.free_at = _chunk_ledger(arr_chunk, occ,
                                                      self.free_at)
@@ -732,7 +753,8 @@ class PipelineRunner:
                             executor.reference_throughput(j)
                     stp = (runtime.poll(src) if src is not None
                            else runtime.steady_step())
-                    if stp.serial or stp.config != step.config:
+                    if (stp.serial or stp.config != step.config
+                            or stp.mesh != step.mesh):
                         leftover = (j, stp)
                         stop = True
                         j += 1
@@ -776,8 +798,12 @@ class PipelineRunner:
         self.throughputs[sl] = n * thr
         self.serial_mask[sl] = False
         self.serial_mask[s0] = serial_head
+        if self._mesh_on:
+            self.coll_frac[sl] = rec.collective_frac
         if self._keep_configs:
             self.configs_trace.extend([list(step.config)] * n)
+            if self._mesh_on:
+                self.mesh_trace.extend([list(step.mesh)] * n)
         else:
             self._last_config = list(step.config)
         self.arrival_t[sl] = arr_m
@@ -1144,7 +1170,8 @@ class PipelineRunner:
                     self.rc_thr[s0 + j] = executor.reference_throughput(gq + j)
                 step_j = (runtime.poll(src_j) if src_j is not None
                           else runtime.steady_step())
-                if step_j.serial or step_j.config != step.config:
+                if (step_j.serial or step_j.config != step.config
+                        or step_j.mesh != step.mesh):
                     leftover = step_j
                     break
                 steps.append(step_j)
@@ -1322,7 +1349,8 @@ class PipelineRunner:
                     rc_thr[s0 + len(steps)] = executor.reference_throughput(j)
                 step_j = runtime.poll(src_j) if src_j is not None \
                     else runtime.steady_step()
-                if step_j.serial or step_j.config != step.config:
+                if (step_j.serial or step_j.config != step.config
+                        or step_j.mesh != step.mesh):
                     leftover = (j, step_j)
                     break
                 steps.append(step_j)
@@ -1425,6 +1453,13 @@ class PipelineRunner:
                          if self.value_row is not None else None),
             shed_tier_counts=self.shed_tier_counts,
             shed_value=self.shed_value,
+            mesh_devices=(int(sum(self.runtime.mesh)) if self._mesh_on
+                          else 0),
+            mesh_trace=(self.mesh_trace if self._mesh_on else None),
+            collective_fracs=(self.coll_frac[:n] if self._mesh_on
+                              else None),
+            num_mesh_resizes=(self.runtime.num_mesh_resizes
+                              - self._resizes0 if self._mesh_on else 0),
         )
 
     def fault_downtime(self) -> float:
@@ -1436,7 +1471,7 @@ class PipelineRunner:
         return 0.0
 
 
-def run_pipeline(executor: QueryExecutor,
+def _run_pipeline_impl(executor: QueryExecutor,
                  runtime: RebalanceRuntime,
                  num_queries: int,
                  workload: Union[str, Workload, None] = "closed",
@@ -1572,3 +1607,54 @@ def run_pipeline(executor: QueryExecutor,
     return runner.finish(scheduler_name=scheduler_name,
                          workload_name=wl_name,
                          peak_throughput=peak_throughput)
+
+
+def run_pipeline(executor: QueryExecutor,
+                 runtime: RebalanceRuntime,
+                 num_queries: int,
+                 workload: Union[str, Workload, None] = "closed",
+                 workload_kwargs: Optional[dict] = None,
+                 scheduler_name: str = "",
+                 peak_throughput: float = float("nan"),
+                 chunking: bool = True,
+                 max_chunk: Optional[int] = None,
+                 admission: Union[str, object, None] = None,
+                 admission_kwargs: Optional[dict] = None,
+                 trace_mode: str = "dense",
+                 metrics_sink=None,
+                 sink_interval: Optional[int] = None,
+                 former: Optional[BatchFormer] = None,
+                 lengths=None,
+                 lengths_kwargs: Optional[dict] = None,
+                 faults=None,
+                 retries=None,
+                 tiers=None,
+                 tiers_kwargs: Optional[dict] = None
+                 ) -> Union[PipelineTrace, StreamingTrace]:
+    """Serve ``num_queries`` arrivals through one scheduler runtime.
+
+    Thin wrapper over the unified :class:`repro.api.RunSpec` path (one
+    declaration, one dispatcher — docs/API.md); the kwargs here map
+    1:1 onto spec fields and new options land on the spec instead of
+    this signature.  See :func:`_run_pipeline_impl` for the full
+    kwarg-level documentation (unchanged semantics, bit-identical
+    traces).
+    """
+    from repro import api
+    spec = api.RunSpec(
+        executor=executor, runtime=runtime, num_queries=num_queries,
+        peak_throughput=peak_throughput,
+        scheduler=api.SchedulerSpec(name=(scheduler_name or "")),
+        workload=api.WorkloadSpec(name=workload, kwargs=workload_kwargs),
+        admission=api.AdmissionSpec(name=admission,
+                                    kwargs=admission_kwargs),
+        batching=api.BatchingSpec(chunking=chunking, max_chunk=max_chunk,
+                                  former=former, lengths=lengths,
+                                  lengths_kwargs=lengths_kwargs),
+        faults=api.FaultsSpec(plan=faults),
+        retries=api.RetriesSpec(policy=retries),
+        tiers=api.TiersSpec(spec=tiers, kwargs=tiers_kwargs),
+        telemetry=api.TelemetrySpec(trace_mode=trace_mode,
+                                    metrics_sink=metrics_sink,
+                                    sink_interval=sink_interval))
+    return api.run(spec)

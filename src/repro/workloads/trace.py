@@ -97,6 +97,18 @@ class PipelineTrace:
     #: Queries per tier the router downgraded to a small-model replica
     #: (cluster runs under the ``downgrade`` policy; docs/QOS.md).
     downgrade_tier_counts: Optional[np.ndarray] = None
+    # -- sharded stage execution (repro.core.mesh; docs/SHARDING.md) ---------
+    #: Total devices in the stage mesh; 0 = unsharded run (every mesh
+    #: surface below is then absent and summaries carry no mesh keys).
+    mesh_devices: int = 0
+    #: Committed device assignment (devices per stage) after each
+    #: rebalance, aligned with :attr:`configs_trace`; ``None`` unsharded.
+    mesh_trace: Optional[List[List[int]]] = None
+    #: Per-query fraction of the bottleneck stage's time spent in
+    #: collectives; ``None`` unsharded.
+    collective_fracs: Optional[np.ndarray] = None
+    #: Times the committed assignment changed during the run.
+    num_mesh_resizes: int = 0
 
     def __post_init__(self):
         n = len(self.latencies)
@@ -349,6 +361,15 @@ class PipelineTrace:
                     self.downgrade_tier_counts[i])
         return out
 
+    # -- sharded stage execution (docs/SHARDING.md) ---------------------------
+    @property
+    def mean_collective_frac(self) -> float:
+        """Mean bottleneck-stage collective share across queries (NaN
+        on an unsharded or empty trace)."""
+        if self.collective_fracs is None or not len(self.collective_fracs):
+            return float("nan")
+        return float(np.mean(self.collective_fracs))
+
     # -- offered vs. achieved load ------------------------------------------
     @property
     def offered_load(self) -> float:
@@ -445,4 +466,12 @@ class PipelineTrace:
         # summaries are byte-identical to pre-QoS summaries.
         if self.tier_names is not None:
             out.update(self.tier_summary())
+        # Mesh keys appear only on sharded runs (same gating rule).
+        if self.mesh_devices > 0:
+            out["mesh_devices"] = float(self.mesh_devices)
+            out["num_mesh_resizes"] = float(self.num_mesh_resizes)
+            out["mean_collective_frac"] = self.mean_collective_frac
+            out["p99_collective_frac"] = (
+                self.percentile(99, "collective_fracs")
+                if self.collective_fracs is not None else nan)
         return out

@@ -311,14 +311,25 @@ def test_all_replicas_unhealthy_no_deadlock(db, mode):
     assert _same_summary(s, rerun.summary())
 
 
-def test_hedging_rejects_fleet_rebatching(db):
-    # Retries + rebatching compose (RetrySpec.batch_policy, docs/FAULTS.md);
-    # hedging still needs per-query dispatch.
-    with pytest.raises(ValueError, match="max_batch"):
-        simulate_cluster(db, 3, 2, scheduler="none", num_queries=20,
-                         workload="poisson",
-                         workload_kwargs=dict(rate=0.01, seed=0),
-                         max_batch=4, hedge_after=0.5)
+def test_hedging_composes_with_fleet_rebatching(db):
+    """Hedging + rebatching (docs/FAULTS.md "Hedged batched dispatch"):
+    whole buffered dispatches are duplicated on the least-loaded healthy
+    peer — hedged members are counted, the loser's reserved span is
+    charged as wasted work, and the composition stays deterministic."""
+    plan = FaultPlan([FaultEvent("slowdown", 0.0, 1e9, replica=0,
+                                 factor=5.0)], seed=0)
+    kw = dict(scheduler="none", num_queries=150, workload="poisson",
+              workload_kwargs=dict(rate=0.008, seed=2),
+              router="round_robin", faults=plan, retries=1, max_batch=4)
+    hedged = simulate_cluster(db, 3, 2, hedge_after=50.0, **kw)
+    straight = simulate_cluster(db, 3, 2, **kw)
+    sh, ss = hedged.summary(), straight.summary()
+    assert sh["num_hedged"] > 0
+    assert sh["wasted_work_frac"] > 0.0 and ss["wasted_work_frac"] == 0.0
+    assert sh["availability"] == 1.0
+    assert sh["p99_latency_s"] < ss["p99_latency_s"]
+    rerun = simulate_cluster(db, 3, 2, hedge_after=50.0, **kw)
+    assert _same_summary(sh, rerun.summary())
 
 
 @pytest.mark.parametrize("policy", ["resplit", "subset", "all"])

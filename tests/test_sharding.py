@@ -1,0 +1,358 @@
+"""Mesh-sliced stage execution (docs/SHARDING.md) + the unified RunSpec
+API (docs/API.md): no-mesh bit-identity, chunked==scalar under mesh
+events, the (boundary, slice) oracle beating boundary-only, sim/live
+summary-key parity, and spec-path == kwarg-path equivalence."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    AdmissionSpec,
+    BatchingSpec,
+    ClusterSpec,
+    MeshSpec,
+    RunSpec,
+    SchedulerSpec,
+    WorkloadSpec,
+    run,
+)
+from repro.cluster.sim import _simulate_cluster_impl, simulate_cluster
+from repro.core import InterferenceEvent, generate_events, simulate
+from repro.core.database import synthetic_database
+from repro.core.exhaustive import optimal_partition, optimal_partition_mesh
+from repro.core.mesh import (
+    balanced_assignment,
+    collective_frac,
+    mesh_stage_times,
+    resolve_mesh,
+    ring_factor,
+)
+from repro.core.simulator import _simulate_impl
+
+NUM_EPS = 4
+
+#: A mesh whose collective costs actually bite: per-layer collective
+#: time on the order of per-layer compute, so slice moves matter.
+HEAVY_MESH = MeshSpec(devices=8, coll_cost=0.5)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return synthetic_database("vgg16", seed=0)
+
+
+def mesh_events(num_queries, factor=6.0, seed=3):
+    """Interference events plus one mesh-contention episode mid-run."""
+    evs = list(generate_events(num_queries, NUM_EPS, 12, 20, 10,
+                               seed=seed))
+    evs.append(InterferenceEvent(start=num_queries // 3,
+                                 duration=num_queries // 4, ep=0,
+                                 scenario=0, kind="mesh", factor=factor))
+    return evs
+
+
+def _same_trace(a, b):
+    assert np.array_equal(a.latencies, b.latencies)
+    assert np.array_equal(a.throughputs, b.throughputs)
+    assert a.configs_trace == b.configs_trace
+    assert a.num_rebalances == b.num_rebalances
+    sa, sb = a.summary(), b.summary()
+    assert sa.keys() == sb.keys()
+    for k in sa:
+        assert sa[k] == sb[k] or (sa[k] != sa[k] and sb[k] != sb[k]), k
+
+
+# ---------------------------------------------------------------------------
+# no-mesh bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_no_mesh_single_pipeline_is_unsharded_and_deterministic(db):
+    """The public simulate() never arms a mesh: no mesh trace surface,
+    no mesh summary keys, and reruns are bit-identical."""
+    a = simulate(db, NUM_EPS, scheduler="odin", num_queries=400)
+    b = simulate(db, NUM_EPS, scheduler="odin", num_queries=400)
+    assert a.mesh_devices == 0 and a.mesh_trace is None
+    assert a.collective_fracs is None and a.num_mesh_resizes == 0
+    assert not any("mesh" in k or "collective" in k for k in a.summary())
+    _same_trace(a, b)
+
+
+def test_no_mesh_impl_none_matches_public_wrapper(db):
+    """mesh=None on the impl is the public wrapper's exact path."""
+    events = list(generate_events(400, NUM_EPS, db.num_scenarios, 20,
+                                  10, seed=3))
+    a = simulate(db, NUM_EPS, scheduler="odin", num_queries=400,
+                 events=list(events))
+    b = _simulate_impl(db, NUM_EPS, scheduler="odin", num_queries=400,
+                       events=list(events), mesh=None)
+    _same_trace(a, b)
+
+
+def test_no_mesh_cluster_is_unsharded_and_deterministic(db):
+    a = simulate_cluster(db, NUM_EPS, 2, scheduler="odin",
+                         num_queries=300)
+    b = simulate_cluster(db, NUM_EPS, 2, scheduler="odin",
+                         num_queries=300)
+    for rep in a.replicas:
+        assert rep.mesh_devices == 0 and rep.mesh_trace is None
+    assert not any("mesh" in k or "collective" in k for k in a.summary())
+    assert np.array_equal(a.fleet.latencies, b.fleet.latencies)
+    assert np.array_equal(a.assignments, b.assignments)
+
+
+# ---------------------------------------------------------------------------
+# mesh-armed simulation: trace surface + chunked == scalar
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_armed_trace_surface(db):
+    t = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=400,
+                    events=mesh_events(400), mesh=HEAVY_MESH))
+    assert t.mesh_devices == 8
+    assert t.mesh_trace is not None and len(t.mesh_trace) == len(t.configs)
+    assert all(sum(a) == 8 and all(m >= 1 for m in a)
+               for a in t.mesh_trace)
+    assert t.collective_fracs is not None
+    assert float(np.max(t.collective_fracs)) > 0.0
+    s = t.summary()
+    assert s["mesh_devices"] == 8.0
+    assert {"num_mesh_resizes", "mean_collective_frac",
+            "p99_collective_frac"} <= s.keys()
+
+
+def test_mesh_chunked_equals_scalar(db):
+    """The chunked fast path must cut on mesh edges exactly like the
+    scalar tick — bit-identical traces with mesh events in play."""
+    kw = dict(db=db, num_eps=NUM_EPS, num_queries=400,
+              events=mesh_events(400), mesh=HEAVY_MESH,
+              scheduler=SchedulerSpec(name="odin"))
+    fast = run(RunSpec(**kw))
+    slow = run(RunSpec(**kw, batching=BatchingSpec(chunking=False)))
+    _same_trace(fast, slow)
+    assert np.array_equal(fast.collective_fracs, slow.collective_fracs)
+    assert fast.mesh_trace == slow.mesh_trace
+
+
+def test_mesh_event_inflates_collective_time(db):
+    """A kind="mesh" event slows sharded stages (collective term scales
+    by `factor`) but leaves an unsharded run untouched."""
+    ev = [InterferenceEvent(start=100, duration=100, ep=0, scenario=0,
+                            kind="mesh", factor=8.0)]
+    quiet = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=300,
+                        events=(), mesh=HEAVY_MESH,
+                        scheduler=SchedulerSpec(name="none")))
+    noisy = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=300,
+                        events=ev, mesh=HEAVY_MESH,
+                        scheduler=SchedulerSpec(name="none")))
+    assert noisy.latencies[100:200].mean() > quiet.latencies[100:200].mean()
+    # mesh events are invisible without a mesh
+    base = simulate(db, NUM_EPS, scheduler="none", num_queries=300,
+                    events=[])
+    noisy_nomesh = simulate(db, NUM_EPS, scheduler="none",
+                            num_queries=300, events=list(ev))
+    _same_trace(base, noisy_nomesh)
+
+
+# ---------------------------------------------------------------------------
+# the (boundary, slice) oracle
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_shape_and_ring_factor():
+    compute = np.array([1.0, 1.0, 2.0, 4.0])
+    config = [1, 1, 1, 1]
+    mesh = MeshSpec(devices=8, coll_cost=0.25)
+    t_bal = mesh_stage_times(compute, config, [1, 1, 2, 4], mesh, 1.0)
+    # compute/m + coll*ring(m): slicing the heavy stages evens them out
+    assert ring_factor(1) == 0.0 and ring_factor(4) == 0.75
+    assert t_bal[3] == pytest.approx(4.0 / 4 + 0.25 * 0.75)
+    frac = collective_frac(compute, config, [1, 1, 2, 4], mesh, 1.0)
+    assert 0.0 < frac < 1.0
+
+
+def test_mesh_oracle_beats_boundary_only(db):
+    """Adding the slice axis can only help: the (boundary, slice)
+    optimum's throughput >= the boundary-only optimum under a balanced
+    assignment, and is strictly better when compute is skewed."""
+    scen = [0] * NUM_EPS
+    mesh = resolve_mesh(HEAVY_MESH)
+    cfg_b, tp_b = optimal_partition(db, scen, NUM_EPS)
+    cfg_m, assign, tp_m = optimal_partition_mesh(db, scen, NUM_EPS, mesh)
+    assert sum(assign) == mesh.devices and len(assign) == NUM_EPS
+    assert sum(cfg_m) == db.num_layers
+
+    # Evaluate the boundary-only config under the mesh cost model with
+    # the balanced assignment — the best a boundary-only controller
+    # could do on this hardware.
+    prefix = db.prefix_times()
+
+    def stage_compute(config):
+        out, lo = [], 0
+        for k, c in zip(scen, config):
+            out.append(prefix[k][lo + c] - prefix[k][lo])
+            lo += c
+        return np.asarray(out)
+
+    bal = balanced_assignment(mesh.devices, NUM_EPS)
+    t_boundary = mesh_stage_times(stage_compute(cfg_b), cfg_b, bal,
+                                  mesh, 1.0)
+    t_mesh = mesh_stage_times(stage_compute(cfg_m), cfg_m, assign,
+                              mesh, 1.0)
+    assert max(t_mesh) <= max(t_boundary) + 1e-12
+    assert tp_m >= tp_b - 1e-12
+
+
+def test_mesh_scheduler_beats_static_under_mesh_event(db):
+    """Under a mesh-contention episode, the mesh-aware odin explorer
+    (slice moves in its action space) beats the static balanced
+    config."""
+    evs = mesh_events(600, factor=6.0)
+    kw = dict(db=db, num_eps=NUM_EPS, num_queries=600, events=evs,
+              mesh=HEAVY_MESH)
+    odin = run(RunSpec(**kw, scheduler=SchedulerSpec(name="odin")))
+    static = run(RunSpec(**kw, scheduler=SchedulerSpec(name="none")))
+    assert odin.num_mesh_resizes >= 1
+    assert float(np.percentile(odin.latencies, 99)) <= \
+        float(np.percentile(static.latencies, 99))
+
+
+# ---------------------------------------------------------------------------
+# RunSpec: equivalence with the kwarg path, round-trip, dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", ["odin", "lls", "none"])
+def test_runspec_bit_identical_to_kwarg_simulate(db, sched):
+    events = list(generate_events(400, NUM_EPS, db.num_scenarios, 20,
+                                  10, seed=3))
+    a = simulate(db, NUM_EPS, scheduler=sched, num_queries=400,
+                 events=list(events))
+    b = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=400,
+                    events=events,
+                    scheduler=SchedulerSpec(name=sched)))
+    _same_trace(a, b)
+
+
+def test_runspec_bit_identical_to_kwarg_cluster(db):
+    events = [dataclasses.replace(ev, replica=1)
+              for ev in generate_events(150, NUM_EPS, db.num_scenarios,
+                                        2, 100, seed=5)]
+    wl = dict(rate=0.01, seed=2)
+    a = simulate_cluster(db, NUM_EPS, 3, scheduler="odin",
+                         num_queries=300, events=list(events),
+                         router="odin_aware", workload="poisson",
+                         workload_kwargs=dict(wl))
+    b = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=300,
+                    events=events,
+                    scheduler=SchedulerSpec(name="odin"),
+                    workload=WorkloadSpec(name="poisson", kwargs=wl),
+                    cluster=ClusterSpec(num_replicas=3,
+                                        router="odin_aware")))
+    assert np.array_equal(a.fleet.latencies, b.fleet.latencies)
+    assert np.array_equal(a.assignments, b.assignments)
+    sa, sb = a.summary(), b.summary()
+    assert sa.keys() == sb.keys()
+
+
+def test_cluster_n1_spec_still_returns_cluster_trace(db):
+    """An n=1 ClusterSpec is a fleet, not a single pipeline."""
+    ct = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=100,
+                     cluster=ClusterSpec(num_replicas=1)))
+    assert hasattr(ct, "fleet") and hasattr(ct, "assignments")
+
+
+def test_runspec_json_round_trip(db):
+    spec = RunSpec(db=db, num_eps=NUM_EPS, num_queries=300,
+                   events=mesh_events(300), mesh=HEAVY_MESH,
+                   scheduler=SchedulerSpec(name="odin", alpha=4),
+                   workload=WorkloadSpec(name="poisson",
+                                         kwargs={"rate": 0.02,
+                                                 "seed": 1}),
+                   admission=AdmissionSpec(name="queue_cap",
+                                           kwargs={"cap": 16}))
+    d = json.loads(json.dumps(spec.to_dict()))   # must be JSON-clean
+    spec2 = RunSpec.from_dict(d, db=db)
+    assert spec2 == spec
+    a, b = run(spec), run(spec2)
+    _same_trace(a, b)
+    assert a.mesh_trace == b.mesh_trace
+
+
+def test_runspec_dispatch_errors(db):
+    with pytest.raises(ValueError, match="no target"):
+        run(RunSpec(num_queries=10))
+    with pytest.raises(TypeError):
+        run({"db": db})
+    with pytest.raises(NotImplementedError, match="cluster mesh"):
+        run(RunSpec(db=db, num_queries=10, mesh=HEAVY_MESH,
+                    cluster=ClusterSpec(num_replicas=2)))
+    with pytest.raises(ValueError, match="fleet target"):
+        run(RunSpec(db=db, num_queries=10,
+                    faults=dict(hedge_after=1.0)))
+    with pytest.raises(TypeError, match="SchedulerSpec"):
+        RunSpec(db=db, scheduler="odin")
+
+
+def test_runspec_subspecs_accept_dicts(db):
+    a = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=200,
+                    scheduler={"name": "lls"}))
+    b = simulate(db, NUM_EPS, scheduler="lls", num_queries=200)
+    _same_trace(a, b)
+
+
+# ---------------------------------------------------------------------------
+# sim/live parity (mesh armed on a real engine)
+# ---------------------------------------------------------------------------
+
+
+def test_sim_live_mesh_summary_key_parity(db):
+    """A mesh-armed live engine reports the same mesh summary keys and
+    trace surface as a mesh-armed simulation, and its unsharded twin
+    reports none of them."""
+    import dataclasses as dc
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serving import ServingEngine
+
+    sim = run(RunSpec(db=db, num_eps=NUM_EPS, num_queries=300,
+                      events=mesh_events(300), mesh=HEAVY_MESH))
+    mesh_keys = {k for k in sim.summary()
+                 if "mesh" in k or "collective" in k}
+    assert mesh_keys == {"mesh_devices", "num_mesh_resizes",
+                         "mean_collective_frac", "p99_collective_frac"}
+
+    cfg = dc.replace(get_smoke_config("qwen2-0.5b"), num_layers=8)
+    params = Model(cfg).init_params(jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    queries = [jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 64)))
+               for _ in range(20)]
+
+    def cf_schedule(q):
+        return 5.0 if 5 <= q < 12 else 1.0
+
+    eng = ServingEngine(cfg, params, num_eps=NUM_EPS, scheduler="odin",
+                        alpha=3, mesh=MeshSpec(devices=8,
+                                               coll_cost=0.002),
+                        coll_factor_schedule=cf_schedule)
+    eng.executor.warmup(1, 64)
+    live = eng.serve(queries, lambda q: [1.0] * NUM_EPS)
+    assert live.mesh_devices == 8
+    assert live.mesh_trace is not None
+    assert all(sum(a) == 8 for a in live.mesh_trace)
+    assert live.collective_fracs is not None
+    assert mesh_keys <= live.summary().keys()
+
+    plain = ServingEngine(cfg, params, num_eps=NUM_EPS,
+                          scheduler="odin", alpha=3,
+                          executor=eng.executor)
+    unsharded = plain.serve(queries, lambda q: [1.0] * NUM_EPS)
+    assert unsharded.mesh_devices == 0
+    assert unsharded.mesh_trace is None
+    assert not (mesh_keys & unsharded.summary().keys())
